@@ -1,0 +1,75 @@
+"""Kernel micro-benchmarks (CPU interpret-mode correctness + XLA-path timing).
+
+On CPU we cannot measure TPU kernel speed; what we CAN measure and track:
+  * XLA-path wall time of the ops the kernels replace (regression guard),
+  * interpret-mode numerical agreement (max |err| as the derived column).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention.ops import flash_attend, reference_attend
+from repro.kernels.ssd.ops import ssd_scan
+from repro.kernels.ssd.ref import ssd_ref
+from repro.kernels.server_update.kernel import fused_server_update
+from repro.kernels.server_update.ref import server_update_ref
+
+from .common import csv_row
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps
+
+
+def main() -> list[str]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # flash attention
+    B, T, H, KV, hd = 1, 256, 4, 2, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, T, H, hd))
+    k = jax.random.normal(ks[1], (B, T, KV, hd))
+    v = jax.random.normal(ks[2], (B, T, KV, hd))
+    t_ref = _time(jax.jit(lambda a, b, c: reference_attend(a, b, c)), q, k, v)
+    out = flash_attend(q, k, v, interpret=True, bq=128, bk=128)
+    err = float(jnp.max(jnp.abs(out - reference_attend(q, k, v))))
+    rows.append(csv_row("kernels/flash_attention_xla_ref", t_ref, f"err={err:.1e}"))
+
+    # ssd
+    B, T, Hh, P, N = 1, 256, 4, 16, 32
+    xdt = jax.random.normal(ks[0], (B, T, Hh, P)) * 0.5
+    a = -jax.nn.softplus(jax.random.normal(ks[1], (B, T, Hh)))
+    Bm = jax.random.normal(ks[2], (B, T, N)) * 0.5
+    Cm = jax.random.normal(key, (B, T, N)) * 0.5
+    t_ref = _time(jax.jit(lambda *xs: ssd_ref(*xs)[0]), xdt, a, Bm, Cm)
+    y_k, _ = ssd_scan(xdt, a, Bm, Cm, 64, interpret=True, hb=4)
+    y_r, _ = ssd_ref(xdt, a, Bm, Cm)
+    err = float(jnp.max(jnp.abs(y_k - y_r)))
+    rows.append(csv_row("kernels/ssd_xla_ref", t_ref, f"err={err:.1e}"))
+
+    # fused server update
+    n = 1 << 18
+    x = jax.random.normal(ks[0], (n,))
+    d = jax.random.normal(ks[1], (n,)) * 0.01
+    m = jnp.zeros((n,))
+    t_ref = _time(jax.jit(lambda *xs: server_update_ref(*xs, 1.0, 0.1, 0.05)), x, d, m)
+    x1, m1 = fused_server_update(x, d, m, 1.0, 0.1, 0.05, interpret=True)
+    x2, m2 = server_update_ref(x, d, m, 1.0, 0.1, 0.05)
+    err = float(jnp.max(jnp.abs(x1 - x2)) + jnp.max(jnp.abs(m1 - m2)))
+    rows.append(csv_row("kernels/server_update_xla_ref", t_ref, f"err={err:.1e}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for r in main():
+        print(r)

@@ -1,0 +1,114 @@
+"""Paper Figure 1 (quadratic objective, eq. 36): four panels.
+
+1. Full participation: FedAvg / FedAvgRR / FedNova / FedNovaRR / FedShuffle —
+   FedAvgRR saturates at the inconsistent point; FedShuffle dominates.
+2. Same baselines with MVR momentum (eq. 13-14, exact) — everything improves,
+   FedShuffle(+MVR) still best.
+3. Partial participation (2-of-3 uniform): FedShuffle vs FedShuffle w/SumOne —
+   the TFF-default aggregation converges to a worse point.
+4. One-client-per-round: uniform vs importance sampling (d=10, sizes 8/1/1) —
+   IS shrinks the M term and the final neighbourhood.
+
+Prints ``name,us_per_call,derived`` CSV (derived = final f - f*); asserts the
+paper's orderings and records everything under benchmarks/results/.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.data.tasks import QuadraticTask
+from repro.fed.losses import make_quadratic_loss
+
+from .common import csv_row, run_fl, save_result
+
+TASK = QuadraticTask(dim=6, assignment=((0,), (1, 2), (3, 4, 5)))
+LOSS = make_quadratic_loss(6)
+FSTAR = TASK.loss_np(np.asarray(TASK.optimum()))
+
+
+def _fl(alg, *, rr=True, opt="sgd", sampling="full", cohort=3, lr=0.05, exact=True):
+    return FLConfig(num_clients=3, cohort_size=cohort, sampling=sampling, epochs=1,
+                    local_batch=1, algorithm=alg, reshuffle=rr, local_lr=lr,
+                    server_lr=1.0, server_opt=opt, mvr_a=0.1, mvr_exact=exact, seed=11)
+
+
+def _subopt(alg_fl, rounds=600, task=TASK, loss=LOSS, dim=6):
+    state, trace, wall = run_fl(task, task.sizes(), alg_fl, {"x": jnp.zeros(dim)},
+                                loss, rounds)
+    x = np.asarray(state.params["x"])
+    return task.loss_np(x) - task.loss_np(np.asarray(task.optimum())), wall
+
+
+def main(rounds: int = 600) -> list[str]:
+    rows = []
+    results: dict = {}
+
+    # --- Panel 1: full participation, no momentum
+    panel1 = {}
+    for name, fl in [
+        ("fedavg_wr", _fl("fedavg", rr=False)),
+        ("fedavg_rr", _fl("fedavg", rr=True)),
+        ("fednova_wr", _fl("fednova", rr=False)),
+        ("fednova_rr", _fl("fednova", rr=True)),
+        ("fedshuffle", _fl("fedshuffle")),
+    ]:
+        sub, wall = _subopt(fl, rounds)
+        panel1[name] = sub
+        rows.append(csv_row(f"quadratic/p1/{name}", wall, f"{sub:.3e}"))
+    # paper claims
+    assert panel1["fedshuffle"] <= min(panel1.values()) * 1.05, panel1
+    assert panel1["fedavg_rr"] > panel1["fedshuffle"] * 5, panel1          # inconsistency
+    assert panel1["fednova_rr"] <= panel1["fednova_wr"] * 1.5, panel1      # RR helps FedNova
+    results["panel1"] = panel1
+
+    # --- Panel 2: with MVR momentum
+    panel2 = {}
+    for name, fl in [
+        ("fedavg_mvr", _fl("fedavg", opt="mvr")),
+        ("fednova_mvr", _fl("fednova", opt="mvr")),
+        ("fedshuffle_mvr", _fl("fedshuffle", opt="mvr")),
+    ]:
+        sub, wall = _subopt(fl, rounds)
+        panel2[name] = sub
+        rows.append(csv_row(f"quadratic/p2/{name}", wall, f"{sub:.3e}"))
+    assert panel2["fedshuffle_mvr"] <= min(panel2.values()) * 1.05, panel2
+    assert panel2["fedshuffle_mvr"] <= panel1["fedshuffle"] * 1.05, (panel1, panel2)
+    results["panel2"] = panel2
+
+    # --- Panel 3: partial participation, SumOne vs unbiased (same FedShuffle
+    # base, small lr so the fixed-point bias dominates the sampling noise)
+    panel3 = {}
+    for name, fl in [
+        ("fedshuffle", _fl("fedshuffle", sampling="uniform", cohort=2, lr=0.01)),
+        ("fedshuffle_sumone", _fl("fedshuffle_so", sampling="uniform", cohort=2, lr=0.01)),
+    ]:
+        sub, wall = _subopt(fl, rounds * 6)
+        panel3[name] = sub
+        rows.append(csv_row(f"quadratic/p3/{name}", wall, f"{sub:.3e}"))
+    assert panel3["fedshuffle"] < panel3["fedshuffle_sumone"], panel3
+    results["panel3"] = panel3
+
+    # --- Panel 4: importance sampling (d=10, sizes 8/1/1, 1 client/round)
+    task4 = QuadraticTask(dim=10, assignment=(tuple(range(8)), (8,), (9,)))
+    loss4 = make_quadratic_loss(10)
+    panel4 = {}
+    for name, sampling in [("uniform", "uniform"), ("importance", "independent")]:
+        fl = _fl("fedshuffle", sampling=sampling, cohort=1, lr=0.03)
+        sub, wall = _subopt(fl, rounds * 3, task=task4, loss=loss4, dim=10)
+        panel4[name] = sub
+        rows.append(csv_row(f"quadratic/p4/{name}", wall, f"{sub:.3e}"))
+    assert panel4["importance"] <= panel4["uniform"] * 1.2, panel4
+    results["panel4"] = panel4
+
+    save_result("bench_quadratic", results)
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for r in main():
+        print(r)

@@ -1,0 +1,62 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.data.federated import FederatedPipeline, Population
+from repro.fed.rounds import as_device_batch, build_round_step
+from repro.fed.server import init_server
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def paper_lr_convention(fl: FLConfig, pipe: FederatedPipeline) -> FLConfig:
+    """App. F quotes FedShuffle's eta_l for a reference client so its per-step
+    rate matches the grid value; we use the population-average step count
+    (the max-client version is needlessly aggressive under log-normal tails).
+    """
+    if fl.algorithm in ("fedshuffle", "gen", "fedshuffle_so"):
+        from repro.data.reshuffle import steps_for
+        ks = [steps_for(int(s), fl.epochs, fl.local_batch) for s in pipe.population.sizes]
+        return dataclasses.replace(fl, local_lr=fl.local_lr * float(np.mean(ks)))
+    return fl
+
+
+def run_fl(task, sizes, fl: FLConfig, init_params, loss_fn, rounds: int,
+           *, eval_fn=None, lr_convention=True):
+    """Generic FL driver returning the metric trace (no logging)."""
+    pop = Population.build(fl, sizes=sizes) if sizes is not None else Population.build(fl)
+    pipe = FederatedPipeline(task, pop, fl)
+    if lr_convention:
+        fl = paper_lr_convention(fl, pipe)
+    state = init_server(fl, init_params)
+    step = jax.jit(build_round_step(loss_fn, fl, num_clients=fl.num_clients))
+    trace = []
+    t0 = time.time()
+    for r in range(rounds):
+        state, mets = step(state, as_device_batch(pipe.round_batch(r)))
+        row = {"round": r, "local_loss": float(mets["local_loss"])}
+        if eval_fn is not None and (r % 5 == 0 or r == rounds - 1):
+            row.update(eval_fn(state.params))
+        trace.append(row)
+    return state, trace, time.time() - t0
+
+
+def save_result(name: str, payload: dict) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+    return path
+
+
+def csv_row(name: str, wall_s: float, derived: str) -> str:
+    return f"{name},{wall_s * 1e6:.0f},{derived}"

@@ -1,0 +1,70 @@
+"""Benchmark harness: one module per paper table/figure + kernel micros +
+the roofline table (from dry-run artifacts, if present).
+
+Prints ``name,us_per_call,derived`` CSV.  Every bench module also asserts the
+paper's qualitative claims — a failing claim fails the harness.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only quadratic,...]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="fewer rounds")
+    ap.add_argument("--only", default=None, help="comma list of bench names")
+    args = ap.parse_args()
+
+    from . import bench_charlm, bench_hybrid, bench_kernels, bench_quadratic, bench_vision
+
+    q = args.quick
+    benches = {
+        "kernels": lambda: bench_kernels.main(),
+        "quadratic": lambda: bench_quadratic.main(rounds=200 if q else 600),
+        "hybrid": lambda: bench_hybrid.main(rounds=500 if q else 1500),
+        "vision": lambda: bench_vision.main(rounds=10 if q else 30),
+        "charlm": lambda: bench_charlm.main(rounds=15 if q else 40),
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        benches = {k: v for k, v in benches.items() if k in keep}
+
+    print("name,us_per_call,derived")
+    rows: list[str] = []
+    for name, fn in benches.items():
+        t0 = time.time()
+        out = fn()
+        rows.extend(out)
+        for r in out:
+            print(r)
+        print(f"# {name}: done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+    # roofline rows from dry-run artifacts (if the sweep has been run)
+    dryrun_dir = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+    if os.path.isdir(dryrun_dir) and os.listdir(dryrun_dir):
+        from repro.launch.roofline import load_all
+
+        roof = [
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},"
+            f"{max(r['t_compute_s'], r['t_memory_s'], r['t_collective_s'])*1e6:.1f},"
+            f"dominant={r['dominant']}"
+            for r in load_all(dryrun_dir)
+        ]
+        rows.extend(roof)
+        print("\n".join(roof))
+
+    os.makedirs(os.path.join(os.path.dirname(__file__), "results"), exist_ok=True)
+    with open(os.path.join(os.path.dirname(__file__), "results", "summary.csv"), "w") as f:
+        f.write("name,us_per_call,derived\n")
+        f.write("\n".join(rows) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: FedShuffle (Horváth et al., TMLR 2022) as a multi-pod JAX framework."""
+__version__ = "1.0.0"

@@ -1,0 +1,249 @@
+"""Config system: model architectures, input shapes, FL hyperparameters.
+
+Every assigned architecture gets one module in ``repro/configs/`` exporting a
+``CONFIG: ArchConfig``; the registry in ``repro/configs/registry.py`` maps
+``--arch <id>`` to it.  All configs are frozen dataclasses so they are hashable
+and can be closed over by jitted functions safely.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Literal
+
+Family = Literal["dense", "moe", "ssm", "hybrid", "encdec", "vlm", "audio"]
+
+
+# ---------------------------------------------------------------------------
+# Sub-configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int               # routed experts
+    top_k: int
+    num_shared: int = 0            # shared (always-on) experts
+    expert_ff: int = 0             # per-expert FFN hidden dim
+    capacity_factor: float = 1.25
+    group_size: int = 1024         # tokens per dispatch group (GShard-style)
+    scan_groups: bool = False      # lax.scan over groups (bounds dispatch memory)
+    aux_coef: float = 0.01         # load-balance auxiliary loss weight
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek Multi-head Latent Attention (arXiv:2405.04434 / 2412.19437)."""
+
+    q_lora: int = 0                # 0 => no query compression
+    kv_lora: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 SSD (arXiv:2405.21060)."""
+
+    state_dim: int = 128           # N
+    head_dim: int = 64             # P
+    num_heads: int = 0             # 0 => derived: expand*d_model/head_dim
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 256               # SSD chunk length
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    # identity
+    name: str = "unnamed"
+    family: Family = "dense"
+    citation: str = ""
+
+    # core transformer dims
+    n_layers: int = 2
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 0              # 0 => d_model // n_heads
+    d_ff: int = 1024
+    vocab: int = 32000
+
+    # attention details
+    qkv_bias: bool = False
+    rope_kind: Literal["full", "half", "none"] = "full"  # "half" = ChatGLM 2d RoPE
+    rope_theta: float = 10000.0
+    sliding_window: int = 0        # 0 => full causal attention
+    # serving variant: window used when serving long_500k on quadratic archs
+    serve_window_long: int = 4096
+
+    # optional feature blocks
+    moe: MoEConfig | None = None
+    mla: MLAConfig | None = None
+    ssm: SSMConfig | None = None
+    hybrid: bool = False           # Hymba parallel attn+SSM heads
+    mtp: bool = False              # DeepSeek-V3 multi-token prediction head
+    mtp_coef: float = 0.3
+
+    # encoder-decoder (audio) / multimodal stubs
+    enc_layers: int = 0            # >0 => encoder-decoder
+    src_frames: int = 1024         # audio frontend stub: #frame embeddings
+    num_patches: int = 0           # vlm frontend stub: #patch embeddings
+
+    # misc
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+    # remat ("none" | "full"): checkpoint each layer's activations
+    remat: str = "none"
+    # unroll factor for the layer scan (dry-run cost-calibration: XLA's
+    # HloCostAnalysis counts while-loop bodies once, so unrolled lowerings
+    # give exact per-step flops/bytes/collectives)
+    scan_unroll: int = 1
+    # --- beyond-paper perf switches (EXPERIMENTS.md §Perf; default = baseline)
+    opt_banded_window: bool = False   # slice K/V to the sliding-window band
+    opt_onehot_xent: bool = False     # gather-free CE picked-logit (sharded vocab)
+    opt_seq_shard: bool = False       # sequence-shard the residual stream (TP)
+
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // max(1, self.n_heads))
+
+    def reduced(self, **overrides) -> "ArchConfig":
+        """A tiny same-family variant for CPU smoke tests (<=2 layers etc.)."""
+        small: dict = dict(
+            n_layers=2,
+            d_model=min(self.d_model, 128),
+            n_heads=min(self.n_heads, 4),
+            d_ff=min(self.d_ff, 256),
+            vocab=min(self.vocab, 512),
+            head_dim=32 if self.head_dim else 0,
+        )
+        small["n_kv_heads"] = min(self.n_kv_heads, small["n_heads"])
+        if self.moe is not None:
+            small["moe"] = dataclasses.replace(
+                self.moe,
+                num_experts=min(self.moe.num_experts, 4),
+                top_k=min(self.moe.top_k, 2),
+                num_shared=min(self.moe.num_shared, 1),
+                expert_ff=min(self.moe.expert_ff, 128),
+                group_size=64,
+                # effectively dropless at smoke scale: capacity-dropping is a
+                # lossy production trade-off, not something tests should see
+                capacity_factor=8.0,
+            )
+        if self.mla is not None:
+            small["mla"] = dataclasses.replace(
+                self.mla,
+                q_lora=min(self.mla.q_lora, 64) if self.mla.q_lora else 0,
+                kv_lora=min(self.mla.kv_lora, 64),
+                qk_nope_dim=32,
+                qk_rope_dim=16,
+                v_head_dim=32,
+            )
+        if self.ssm is not None:
+            small["ssm"] = dataclasses.replace(
+                self.ssm, state_dim=min(self.ssm.state_dim, 16), head_dim=32, num_heads=0, chunk=32
+            )
+        if self.enc_layers:
+            small["enc_layers"] = 2
+            small["src_frames"] = 32
+        if self.num_patches:
+            small["num_patches"] = 16
+        if self.sliding_window:
+            small["sliding_window"] = 64
+        small["dtype"] = "float32"
+        small.update(overrides)
+        return dataclasses.replace(self, **small)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+INPUT_SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# FL configuration (the paper's knobs)
+# ---------------------------------------------------------------------------
+
+Algorithm = Literal[
+    "fedshuffle", "fedavg", "fedavg_so", "fedshuffle_so", "fednova", "fedavg_min",
+    "fedavg_mean", "gen",
+]
+Sampling = Literal["full", "uniform", "independent"]
+Aggregation = Literal["unbiased", "sum_one"]
+ServerOpt = Literal["sgd", "momentum", "mvr", "adam"]
+CohortMode = Literal["vmapped", "sequential"]
+
+
+@dataclass(frozen=True)
+class FLConfig:
+    # population
+    num_clients: int = 8
+    cohort_size: int = 4           # expected #participating clients b
+    sampling: Sampling = "uniform"
+    # local work
+    epochs: int = 1                # E (same for all unless epochs_max > epochs)
+    epochs_max: int = 0            # >epochs => E_i ~ U{epochs..epochs_max} per round
+    local_batch: int = 1
+    k_max: int = 0                 # 0 => derived from data sizes at pipeline build
+    # algorithm
+    algorithm: Algorithm = "fedshuffle"
+    aggregation: Aggregation = "unbiased"
+    reshuffle: bool = True         # RR vs with-replacement local sampling
+    # step sizes
+    local_lr: float = 0.1
+    server_lr: float = 1.0
+    # server optimizer
+    server_opt: ServerOpt = "sgd"
+    momentum: float = 0.9          # used by "momentum"
+    mvr_a: float = 0.1             # MVR a parameter
+    mvr_exact: bool = False        # exact eq.(13-14) vs practical approx (App. F)
+    # distribution
+    cohort_mode: CohortMode = "vmapped"
+    accum_dtype: str = "float32"   # sequential-mode delta accumulator dtype
+    # system heterogeneity (Fig. 4): every client is cut short by this many
+    # local steps (planned vs actual); the "gen" hybrid algorithm corrects it
+    drop_last_steps: int = 0
+    # data imbalance
+    imbalance: Literal["equal", "lognormal", "zipf"] = "lognormal"
+    min_samples: int = 2
+    mean_samples: int = 8
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    multi_pod: bool = False
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return (2, 16, 16) if self.multi_pod else (16, 16)
+
+    @property
+    def axes(self) -> tuple[str, ...]:
+        return ("pod", "data", "model") if self.multi_pod else ("data", "model")
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    arch: ArchConfig = field(default_factory=ArchConfig)
+    shape: ShapeConfig = field(default_factory=lambda: INPUT_SHAPES["train_4k"])
+    fl: FLConfig = field(default_factory=FLConfig)
+    mesh: MeshConfig = field(default_factory=MeshConfig)

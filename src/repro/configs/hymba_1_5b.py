@@ -1,0 +1,24 @@
+"""Hymba-1.5B [arXiv:2411.13676] — hybrid parallel attention+SSM heads.
+
+Hymba fuses attention and Mamba heads *in parallel* within each layer and uses
+sliding-window attention in most layers, which is what makes long_500k decoding
+feasible; we model that with per-layer parallel attn+SSD branches and a global
+sliding window.
+"""
+from .base import ArchConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    citation="arXiv:2411.13676",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab=32001,
+    hybrid=True,
+    sliding_window=1024,
+    ssm=SSMConfig(state_dim=16, head_dim=64, expand=1, chunk=128),
+)

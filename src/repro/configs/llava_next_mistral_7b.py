@@ -1,0 +1,23 @@
+"""LLaVA-NeXT (Mistral-7B) [hf:llava-hf/llava-v1.6-mistral-7b-hf] — VLM.
+
+Vision tower + projector are stubbed (assignment carve-out): ``input_specs``
+provides pre-projected patch embeddings (batch, num_patches, d_model) that are
+prepended to the text token embeddings (anyres tiling determines num_patches;
+we use one base tile + high-res grid = 576*2 + padding -> 1152+, here 1176).
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llava-next-mistral-7b",
+    family="vlm",
+    citation="hf:llava-hf/llava-v1.6-mistral-7b-hf",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab=32000,
+    rope_kind="full",
+    rope_theta=1e6,
+    num_patches=1176,       # anyres: base 576 + hi-res tiles (simplified)
+)

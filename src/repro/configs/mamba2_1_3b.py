@@ -1,0 +1,16 @@
+"""Mamba2-1.3B [arXiv:2405.21060] — attention-free SSD (state-space duality)."""
+from .base import ArchConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-1.3b",
+    family="ssm",
+    citation="arXiv:2405.21060",
+    n_layers=48,
+    d_model=2048,
+    n_heads=0,              # attention-free
+    n_kv_heads=0,
+    d_ff=0,                 # no separate MLP: Mamba2 block is the mixer+channel
+    vocab=50280,
+    rope_kind="none",
+    ssm=SSMConfig(state_dim=128, head_dim=64, expand=2, conv_width=4, chunk=256),
+)

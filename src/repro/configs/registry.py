@@ -1,0 +1,62 @@
+"""``--arch <id>`` registry: every assigned architecture + the paper's own tasks."""
+from __future__ import annotations
+
+from .base import ArchConfig, INPUT_SHAPES, ShapeConfig
+
+from . import (
+    chatglm3_6b,
+    deepseek_v2_lite_16b,
+    deepseek_v3_671b,
+    hymba_1_5b,
+    llava_next_mistral_7b,
+    mamba2_1_3b,
+    minicpm_2b,
+    qwen1_5_0_5b,
+    qwen2_72b,
+    seamless_m4t_medium,
+)
+from . import paper_tasks
+
+ARCHS: dict[str, ArchConfig] = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        qwen2_72b,
+        chatglm3_6b,
+        hymba_1_5b,
+        seamless_m4t_medium,
+        llava_next_mistral_7b,
+        deepseek_v3_671b,
+        mamba2_1_3b,
+        deepseek_v2_lite_16b,
+        minicpm_2b,
+        qwen1_5_0_5b,
+    )
+}
+
+# Paper-native model configs (the paper's own experiments).
+ARCHS.update(paper_tasks.PAPER_ARCHS)
+
+ASSIGNED = [
+    "qwen2-72b",
+    "chatglm3-6b",
+    "hymba-1.5b",
+    "seamless-m4t-medium",
+    "llava-next-mistral-7b",
+    "deepseek-v3-671b",
+    "mamba2-1.3b",
+    "deepseek-v2-lite-16b",
+    "minicpm-2b",
+    "qwen1.5-0.5b",
+]
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def get_shape(name: str) -> ShapeConfig:
+    if name not in INPUT_SHAPES:
+        raise KeyError(f"unknown shape {name!r}; available: {sorted(INPUT_SHAPES)}")
+    return INPUT_SHAPES[name]

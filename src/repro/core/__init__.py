@@ -1,0 +1,10 @@
+"""FedShuffle core: the paper's contribution as composable pieces."""
+from .algorithms import GenSpec, PRESETS, agg_coeff, lr_scale, spec_for
+from .local import full_local_gradient, local_mvr, local_sgd
+from .sampling import M_term, expected_cohort, probs, s_vector
+
+__all__ = [
+    "GenSpec", "PRESETS", "agg_coeff", "lr_scale", "spec_for",
+    "full_local_gradient", "local_mvr", "local_sgd",
+    "M_term", "expected_cohort", "probs", "s_vector",
+]

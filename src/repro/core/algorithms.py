@@ -1,0 +1,112 @@
+"""FedShuffleGen (Algorithm 4) and its special cases.
+
+FedShuffleGen is parametrized by
+  * ``c_i``     — local step-size normalization (client i steps with eta_l/c_i),
+  * ``w~_i``    — aggregation weight,
+  * ``q_i^S``   — aggregation normalization (possibly cohort-dependent).
+
+The server applies  ``x <- x + eta_g * sum_{i in S} (w~_i / q_i^S) Delta_i``
+with ``Delta_i = y_i - x``.  (The paper's pseudocode writes "x - eta_g Delta";
+its proofs use the descent form x + eta_g * sum (w/p) (y_i - x), which is what
+every practical implementation does — we follow the proofs.)
+
+Special cases (App. E.2):
+
+| algorithm    | c_i            | w~_i                | q_i^S                  |
+|--------------|----------------|---------------------|------------------------|
+| fedshuffle   | K_i (steps)    | w_i                 | p_i                    |
+| fedavg       | 1              | w_i                 | p_i  (unbiased agg)    |
+| fedavg_so    | 1              | w_i                 | (b/n)*sum_{j in S} w_j |
+| fednova      | 1              | w_i * tau_eff / K_i | p_i                    |
+| fedavg_min   | 1 (+equalized K via pipeline)   | w_i | p_i            |
+| fedavg_mean  | 1 (+equalized K via pipeline)   | w_i | p_i            |
+| gen (hybrid) | K_i^planned    | w_i * K_i^planned / K_i^actual | p_i     |
+
+``fedavg_so`` is the TF-Federated default ("Sum One") the paper shows is
+biased (§4.2).  The "gen" hybrid handles system-level interruptions (§4.3,
+Fig. 4): step sizes are scaled for the *planned* work, and clients that were
+cut short get FedNova-style update rescaling to stay consistent.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Literal
+
+import jax.numpy as jnp
+
+CKind = Literal["one", "steps", "steps_planned"]
+WKind = Literal["w", "nova", "nova_actual"]
+QKind = Literal["p", "sum_one"]
+
+
+@dataclass(frozen=True)
+class GenSpec:
+    """The (c, w~, q) parametrization of FedShuffleGen."""
+
+    c: CKind = "steps"
+    w: WKind = "w"
+    q: QKind = "p"
+
+
+PRESETS: dict[str, GenSpec] = {
+    "fedshuffle": GenSpec(c="steps", w="w", q="p"),
+    "fedavg": GenSpec(c="one", w="w", q="p"),
+    "fedavg_so": GenSpec(c="one", w="w", q="sum_one"),
+    "fedshuffle_so": GenSpec(c="steps", w="w", q="sum_one"),  # Fig.1 panel 3 ablation
+    "fednova": GenSpec(c="one", w="nova", q="p"),
+    "fedavg_min": GenSpec(c="one", w="w", q="p"),
+    "fedavg_mean": GenSpec(c="one", w="w", q="p"),
+    "gen": GenSpec(c="steps_planned", w="nova_actual", q="p"),
+}
+
+
+def spec_for(algorithm: str) -> GenSpec:
+    if algorithm not in PRESETS:
+        raise KeyError(f"unknown algorithm {algorithm!r}; have {sorted(PRESETS)}")
+    return PRESETS[algorithm]
+
+
+def lr_scale(spec: GenSpec, meta) -> jnp.ndarray:
+    """Per-client 1/c_i ([C]).  meta fields are [C] arrays.
+
+    Note "steps" also uses the *planned* step count: a client fixes its local
+    step size before training (it cannot know it will be interrupted), which
+    is exactly why plain FedShuffle loses consistency under interruptions and
+    the "gen" hybrid adds update rescaling (§4.3 / Fig. 4).
+    """
+    steps = jnp.maximum(meta.num_steps, 1.0)
+    planned = jnp.maximum(getattr(meta, "num_steps_planned", meta.num_steps), 1.0)
+    if spec.c == "one":
+        return jnp.ones_like(steps)
+    if spec.c in ("steps", "steps_planned"):
+        return 1.0 / planned
+    raise ValueError(spec.c)
+
+
+def agg_coeff(spec: GenSpec, meta, *, num_clients: int, cohort_size: int) -> jnp.ndarray:
+    """Per-client aggregation coefficient w~_i / q_i^S * valid_i ([C])."""
+    w, p, valid = meta.weight, meta.prob, meta.valid
+    steps = jnp.maximum(meta.num_steps, 1.0)
+    planned = jnp.maximum(getattr(meta, "num_steps_planned", meta.num_steps), 1.0)
+
+    if spec.w == "w":
+        wt = w
+    elif spec.w == "nova":
+        # tau_eff from the cohort, debiased by p (exact for full participation)
+        tau_eff = jnp.sum(valid * (w / p) * steps)
+        wt = w * tau_eff / steps
+    elif spec.w == "nova_actual":
+        wt = w * planned / steps
+    else:
+        raise ValueError(spec.w)
+
+    if spec.q == "p":
+        q = p
+    elif spec.q == "sum_one":
+        # Algorithm 2 line 15: Delta = (n/b) * (1/sum_{j in S} w_j) * sum w_i Delta_i
+        q = jnp.sum(valid * w) * (cohort_size / num_clients)
+        q = jnp.maximum(q, 1e-12)
+    else:
+        raise ValueError(spec.q)
+
+    return valid * wt / q

@@ -1,0 +1,211 @@
+"""Federated data pipeline: population metadata + per-round batch assembly.
+
+This is the host-side substrate that turns (task, FLConfig) into the static-
+shape arrays a jitted FL round consumes:
+
+* ``Population`` — client dataset sizes |D_i| (equal / log-normal / zipf
+  imbalance), objective weights w_i = |D_i|/|D|.
+* ``RoundBatch`` — for the sampled cohort: data [C, K_max, B, ...], step masks,
+  per-client scalars (w_i, p_i, |D_i|, E_i, K_i).  All shapes static across
+  rounds, so the round step never recompiles.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import numpy as np
+
+from ..configs.base import FLConfig
+from .reshuffle import local_step_indices, steps_for
+
+
+def _rng(*keys: int) -> np.random.Generator:
+    return np.random.default_rng(np.random.SeedSequence(entropy=[int(k) & 0xFFFFFFFF for k in keys]))
+
+
+class ClientMeta(NamedTuple):
+    """Per-cohort-slot scalars consumed by the algorithms (all [C])."""
+
+    weight: np.ndarray       # w_i = |D_i|/|D|
+    prob: np.ndarray         # p_i (inclusion probability of the sampling S)
+    num_samples: np.ndarray  # |D_i|
+    epochs: np.ndarray       # E_i this round
+    num_steps: np.ndarray    # actual local steps this round (after interrupts)
+    num_steps_planned: np.ndarray  # K_i = E_i * ceil(|D_i|/B) (planned)
+    valid: np.ndarray        # 1.0 if the slot holds a sampled client else 0.0
+    client_id: np.ndarray    # int ids (for debugging / stateless bookkeeping)
+
+
+class RoundBatch(NamedTuple):
+    data: Any                # pytree, leaves [C, K_max, B, ...]
+    step_mask: np.ndarray    # [C, K_max]
+    meta: ClientMeta
+
+
+@dataclass
+class Population:
+    """The client population and its imbalance structure."""
+
+    num_clients: int
+    sizes: np.ndarray        # |D_i|, int64 [n]
+
+    @classmethod
+    def build(cls, fl: FLConfig, sizes: np.ndarray | None = None) -> "Population":
+        if sizes is not None:
+            return cls(len(sizes), np.asarray(sizes, dtype=np.int64))
+        n = fl.num_clients
+        r = _rng(fl.seed, 0x512E)
+        if fl.imbalance == "equal":
+            s = np.full(n, fl.mean_samples, dtype=np.int64)
+        elif fl.imbalance == "lognormal":
+            s = np.round(np.exp(r.normal(np.log(fl.mean_samples), 0.9, size=n))).astype(np.int64)
+        elif fl.imbalance == "zipf":
+            ranks = np.arange(1, n + 1, dtype=np.float64)
+            s = np.round(fl.mean_samples * n * (ranks**-1.2) / (ranks**-1.2).sum() * 1.0).astype(np.int64)
+        else:
+            raise ValueError(fl.imbalance)
+        return cls(n, np.maximum(s, fl.min_samples))
+
+    @property
+    def weights(self) -> np.ndarray:
+        return (self.sizes / self.sizes.sum()).astype(np.float64)
+
+
+@dataclass
+class FederatedPipeline:
+    """Assembles static-shape round batches for a (task, population, FLConfig)."""
+
+    task: Any
+    population: Population
+    fl: FLConfig
+
+    def __post_init__(self):
+        e_max = max(self.fl.epochs, self.fl.epochs_max)
+        self.k_max = self.fl.k_max or max(
+            steps_for(int(s), e_max, self.fl.local_batch) for s in self.population.sizes
+        )
+        self.cohort_slots = self._cohort_slots()
+
+    def _cohort_slots(self) -> int:
+        if self.fl.sampling == "full":
+            return self.population.num_clients
+        if self.fl.sampling == "uniform":
+            return self.fl.cohort_size
+        # independent sampling: variable |S|; pad generously and mask
+        return min(self.population.num_clients, max(2 * self.fl.cohort_size, self.fl.cohort_size + 4))
+
+    # -- sampling ----------------------------------------------------------
+
+    def inclusion_probs(self) -> np.ndarray:
+        """p_i for the configured proper sampling (paper §3)."""
+        n, b = self.population.num_clients, self.fl.cohort_size
+        if self.fl.sampling == "full":
+            return np.ones(n)
+        if self.fl.sampling == "uniform":
+            return np.full(n, b / n)
+        if self.fl.sampling == "independent":
+            # importance sampling: p_i = min(1, b * w_i)  (paper §5)
+            return np.minimum(1.0, b * self.population.weights)
+        raise ValueError(self.fl.sampling)
+
+    def sample_cohort(self, rnd: int) -> np.ndarray:
+        """Realize S^r; returns int ids (possibly fewer than cohort_slots)."""
+        n = self.population.num_clients
+        r = _rng(self.fl.seed, 0xC0407, rnd)
+        if self.fl.sampling == "full":
+            return np.arange(n)
+        if self.fl.sampling == "uniform":
+            return r.choice(n, size=self.fl.cohort_size, replace=False)
+        probs = self.inclusion_probs()
+        mask = r.random(n) < probs
+        ids = np.nonzero(mask)[0]
+        if len(ids) == 0:  # proper sampling a.s. nonempty in expectation; resample guard
+            ids = np.array([int(r.integers(0, n))])
+        return ids[: self.cohort_slots]
+
+    def epochs_for(self, rnd: int, client: int) -> int:
+        if self.fl.epochs_max <= self.fl.epochs:
+            return self.fl.epochs
+        return int(_rng(self.fl.seed, 0xE70C, rnd, client).integers(self.fl.epochs, self.fl.epochs_max + 1))
+
+    # -- batch assembly ----------------------------------------------------
+
+    def _equalized_steps(self, rnd: int, cohort: np.ndarray) -> int | None:
+        """FedAvgMin / FedAvgMean: a common fixed K for the whole cohort."""
+        if self.fl.algorithm not in ("fedavg_min", "fedavg_mean"):
+            return None
+        ks = [
+            steps_for(int(self.population.sizes[int(c)]), self.epochs_for(rnd, int(c)),
+                      self.fl.local_batch)
+            for c in cohort
+        ]
+        return int(min(ks)) if self.fl.algorithm == "fedavg_min" else int(round(np.mean(ks)))
+
+    def round_batch(self, rnd: int) -> RoundBatch:
+        cohort = self.sample_cohort(rnd)
+        C, K, B = self.cohort_slots, self.k_max, self.fl.local_batch
+        probs = self.inclusion_probs()
+        w = self.population.weights
+        fixed_k = self._equalized_steps(rnd, cohort)
+
+        spec = self.task.spec()
+        data = {
+            name: np.zeros((C, K, B) + tuple(shape), dtype=dt) for name, (dt, shape) in spec.items()
+        }
+        step_mask = np.zeros((C, K), dtype=np.float32)
+        meta = ClientMeta(
+            weight=np.zeros(C), prob=np.ones(C), num_samples=np.ones(C),
+            epochs=np.ones(C), num_steps=np.ones(C), num_steps_planned=np.ones(C),
+            valid=np.zeros(C), client_id=np.full(C, -1, dtype=np.int64),
+        )
+
+        for slot, cid in enumerate(cohort):
+            cid = int(cid)
+            n_i = int(self.population.sizes[cid])
+            e_i = self.epochs_for(rnd, cid)
+            if fixed_k is not None:
+                # equalized-steps heuristics sample *with replacement* (Table 4)
+                steps = min(fixed_k, K)
+                rr = _rng(self.fl.seed, 0xF1CED, rnd, cid)
+                idx = np.zeros((K, B), dtype=np.int32)
+                idx[:steps] = rr.integers(0, n_i, size=(steps, B))
+                mask = np.zeros((K,), np.float32)
+                mask[:steps] = 1.0
+                planned = steps
+            else:
+                idx, mask = local_step_indices(
+                    self.fl.seed, cid, rnd, n_i, e_i, B, K, reshuffle=self.fl.reshuffle
+                )
+                planned = steps_for(n_i, e_i, B)
+            # system interruptions (Fig. 4): drop the last steps of the plan
+            if self.fl.drop_last_steps:
+                done = int(mask.sum())
+                cut = max(1, done - self.fl.drop_last_steps)
+                mask[cut:] = 0.0
+            sample = self.task.batch(cid, idx)  # pytree leaves [K, B, ...]
+            for name in data:
+                data[name][slot] = sample[name]
+            step_mask[slot] = mask
+            meta.weight[slot] = w[cid]
+            meta.prob[slot] = probs[cid]
+            meta.num_samples[slot] = n_i
+            meta.epochs[slot] = e_i
+            meta.num_steps[slot] = float(mask.sum())
+            meta.num_steps_planned[slot] = planned
+            meta.valid[slot] = 1.0
+            meta.client_id[slot] = cid
+
+        meta = ClientMeta(*[np.asarray(a) for a in meta])
+        return RoundBatch(data=data, step_mask=step_mask, meta=meta)
+
+    def eval_batch(self, rnd: int, per_client: int = 2) -> dict:
+        """A small held-out-style batch pooled across clients (host eval)."""
+        parts = []
+        for cid in range(self.population.num_clients):
+            idx = np.arange(per_client).reshape(1, per_client) + 10_000  # unseen ids
+            parts.append(self.task.batch(cid, idx))
+        return {
+            name: np.concatenate([p[name] for p in parts], axis=1)[0]
+            for name in parts[0]
+        }

@@ -1,0 +1,6 @@
+from .rounds import as_device_batch, build_round_step
+from .server import ServerState, apply_server, init_server, wsd_schedule, cosine_schedule
+from .train_loop import train
+
+__all__ = ["as_device_batch", "build_round_step", "ServerState", "apply_server",
+           "init_server", "wsd_schedule", "cosine_schedule", "train"]

@@ -1,0 +1,28 @@
+"""Per-family loss functions binding a Model to the FL round step.
+
+``make_loss(model)`` returns ``loss_fn(params, microbatch) -> (scalar, metrics)``
+where microbatch leaves are [B, ...] (one local step's batch).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+from ..models.model import Model
+
+
+def make_loss(model: Model) -> Callable:
+    def loss_fn(params, microbatch):
+        return model.loss(params, microbatch)
+
+    return loss_fn
+
+
+def make_quadratic_loss(dim: int) -> Callable:
+    """The paper's quadratic objective: params {"x": [d]}, batch {"e": [B, d]}."""
+    import jax.numpy as jnp
+
+    def loss_fn(params, mb):
+        d = params["x"][None, :] - mb["e"]
+        return jnp.mean(jnp.sum(d * d, axis=-1)), {}
+
+    return loss_fn

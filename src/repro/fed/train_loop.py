@@ -1,0 +1,74 @@
+"""End-to-end federated training driver (host loop around the jitted round).
+
+Handles: pipeline iteration, LR schedules (constant / cosine / WSD), periodic
+eval on a pooled held-out batch, checkpointing, and metric logging.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import FLConfig
+from ..data.federated import FederatedPipeline
+from ..utils.checkpoint import save_checkpoint
+from ..utils.logging import MetricLogger, log
+from .rounds import as_device_batch, build_round_step
+from .server import ServerState, cosine_schedule, init_server, wsd_schedule
+
+SCHEDULES: dict[str, Callable[[int, int], float]] = {
+    "constant": lambda r, total: 1.0,
+    "cosine": cosine_schedule,
+    "wsd": wsd_schedule,
+    # the paper's staircase: x0.1 at 50% and 75% of the rounds (App. F)
+    "staircase": lambda r, total: 0.1 ** ((r >= total // 2) + (r >= (3 * total) // 4)),
+}
+
+
+@dataclass
+class TrainResult:
+    state: ServerState
+    metrics: MetricLogger
+
+
+def train(
+    loss_fn: Callable,
+    init_params: Any,
+    pipeline: FederatedPipeline,
+    fl: FLConfig,
+    rounds: int,
+    *,
+    eval_fn: Callable[[Any], dict] | None = None,
+    eval_every: int = 50,
+    schedule: str = "constant",
+    checkpoint_path: str | None = None,
+    checkpoint_every: int = 0,
+    log_every: int = 50,
+    name: str = "run",
+) -> TrainResult:
+    sched = SCHEDULES[schedule]
+    state = init_server(fl, init_params)
+    step = jax.jit(build_round_step(loss_fn, fl, num_clients=fl.num_clients))
+    ml = MetricLogger(name=name)
+    t0 = time.time()
+    for r in range(rounds):
+        batch = as_device_batch(pipeline.round_batch(r))
+        state, mets = step(state, batch, jnp.asarray(sched(r, rounds), jnp.float32))
+        row = {"round": r, "lr_mult": sched(r, rounds),
+               **{k: float(v) for k, v in mets.items()}}
+        if eval_fn is not None and (r % eval_every == 0 or r == rounds - 1):
+            row.update({f"eval_{k}": float(v) for k, v in eval_fn(state.params).items()})
+        ml.append(**row)
+        if log_every and (r % log_every == 0 or r == rounds - 1):
+            log(f"[{name}] round {r}/{rounds}", **{k: f"{v:.5f}" if isinstance(v, float) else v
+                                                   for k, v in row.items() if k != "round"})
+        if checkpoint_path and checkpoint_every and (r + 1) % checkpoint_every == 0:
+            save_checkpoint(checkpoint_path, state.params,
+                            {"round": r, "elapsed_s": time.time() - t0, "name": name})
+    if checkpoint_path:
+        save_checkpoint(checkpoint_path, state.params,
+                        {"round": rounds - 1, "elapsed_s": time.time() - t0, "name": name})
+    return TrainResult(state=state, metrics=ml)

@@ -1,0 +1,27 @@
+"""Jitted wrapper exposing the model-layout API for the flash kernel.
+
+Models use [B, T, H, hd] activations; the kernel wants [B, H, T, hd].
+On CPU (tests) pass interpret=True; on TPU the kernel compiles natively.
+"""
+from __future__ import annotations
+
+import jax
+
+from .kernel import flash_attention
+from .ref import attention_ref
+
+
+def flash_attend(q, k, v, *, causal=True, window=0, interpret=False, bq=256, bk=256):
+    """q [B,Tq,H,hd], k/v [B,Tk,KV,hd] -> [B,Tq,H,hd]."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention(qt, kt, vt, causal=causal, window=window,
+                          bq=bq, bk=bk, interpret=interpret)
+    return out.transpose(0, 2, 1, 3)
+
+
+def reference_attend(q, k, v, *, causal=True, window=0):
+    out = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                        v.transpose(0, 2, 1, 3), causal=causal, window=window)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, window=0):
+    """q [B,H,Tq,hd]; k,v [B,KV,Tk,hd] -> [B,H,Tq,hd] (fp32 softmax)."""
+    B, H, Tq, hd = q.shape
+    KV, Tk = k.shape[1], k.shape[2]
+    g = H // KV
+    qg = q.reshape(B, KV, g, Tq, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg, kf) / (hd**0.5)
+    qpos = jnp.arange(Tq)[:, None]
+    kpos = jnp.arange(Tk)[None, :]
+    mask = jnp.ones((Tq, Tk), dtype=bool)
+    if causal:
+        mask = mask & (qpos >= kpos)
+    if window:
+        mask = mask & (qpos - kpos < window)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", p, vf)
+    return out.reshape(B, H, Tq, hd).astype(q.dtype)

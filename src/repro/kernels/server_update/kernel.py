@@ -1,0 +1,74 @@
+"""Fused FedShuffle server update (pl.pallas_call + BlockSpec).
+
+The FL-specific memory-bound hot spot: per round the server reads the
+aggregated pseudo-update Delta and the momentum state once from HBM and
+writes both the new momentum and the new parameters — three logical ops
+
+    m'  = a * (-Delta / eta_l) + (1 - a) * m        (App. F MVR estimate)
+    x'  = x + eta_g * Delta
+
+fused into a single HBM pass over 1-D parameter chunks (vs 4+ passes when
+left to separate XLA ops across pytree leaves).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _update_kernel(x_ref, d_ref, m_ref, scal_ref, x_out, m_out):
+    """scal_ref (SMEM): [eta_g, a, inv_eta_l]."""
+    eta_g = scal_ref[0]
+    a = scal_ref[1]
+    inv_eta_l = scal_ref[2]
+    x = x_ref[...].astype(jnp.float32)
+    d = d_ref[...].astype(jnp.float32)
+    m = m_ref[...].astype(jnp.float32)
+    ghat = -d * inv_eta_l
+    m_new = a * ghat + (1.0 - a) * m
+    x_new = x + eta_g * d
+    m_out[...] = m_new.astype(m_out.dtype)
+    x_out[...] = x_new.astype(x_out.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def fused_server_update(x, delta, m, eta_g, a, eta_l, *, block=65536, interpret=False):
+    """1-D fused update.  x, delta, m: [n] (same length); returns (x', m')."""
+    (n,) = x.shape
+    block = min(block, n)
+    pad = (-n) % block
+    if pad:
+        x = jnp.pad(x, (0, pad))
+        delta = jnp.pad(delta, (0, pad))
+        m = jnp.pad(m, (0, pad))
+    nb = x.shape[0] // block
+    scal = jnp.stack([
+        jnp.asarray(eta_g, jnp.float32),
+        jnp.asarray(a, jnp.float32),
+        jnp.asarray(1.0 / eta_l, jnp.float32),
+    ])
+    x_new, m_new = pl.pallas_call(
+        _update_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct(m.shape, m.dtype),
+        ],
+        interpret=interpret,
+    )(x, delta, m, scal)
+    if pad:
+        x_new, m_new = x_new[:n], m_new[:n]
+    return x_new, m_new

@@ -1,0 +1,34 @@
+"""Pytree-level wrapper: flatten every leaf, run the fused kernel, restore."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import fused_server_update
+from .ref import server_update_ref
+
+
+def apply_fused_update(params, delta, momentum, *, eta_g, a, eta_l,
+                       interpret=False, block=65536):
+    """Leafwise fused (x', m') = kernel(x, Delta, m)."""
+    leaves_x, treedef = jax.tree.flatten(params)
+    leaves_d = treedef.flatten_up_to(delta)
+    leaves_m = treedef.flatten_up_to(momentum)
+    out_x, out_m = [], []
+    for x, d, m in zip(leaves_x, leaves_d, leaves_m):
+        xn, mn = fused_server_update(
+            x.reshape(-1), d.reshape(-1).astype(x.dtype), m.reshape(-1),
+            eta_g, a, eta_l, block=block, interpret=interpret,
+        )
+        out_x.append(xn.reshape(x.shape))
+        out_m.append(mn.reshape(m.shape))
+    return jax.tree.unflatten(treedef, out_x), jax.tree.unflatten(treedef, out_m)
+
+
+def apply_reference_update(params, delta, momentum, *, eta_g, a, eta_l):
+    pairs = jax.tree.map(
+        lambda x, d, m: server_update_ref(x, d.astype(x.dtype), m, eta_g, a, eta_l),
+        params, delta, momentum,
+    )
+    return (jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple)),
+            jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple)))

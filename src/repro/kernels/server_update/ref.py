@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fused server update."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def server_update_ref(x, delta, m, eta_g, a, eta_l):
+    xf = x.astype(jnp.float32)
+    df = delta.astype(jnp.float32)
+    mf = m.astype(jnp.float32)
+    ghat = -df / eta_l
+    m_new = a * ghat + (1.0 - a) * mf
+    x_new = xf + eta_g * df
+    return x_new.astype(x.dtype), m_new.astype(m.dtype)

@@ -1,0 +1,78 @@
+"""Mamba2 SSD intra-chunk kernel (pl.pallas_call + BlockSpec).
+
+Computes, for each (batch, chunk, head-block):
+  * the quadratic intra-chunk output
+        y[i] = sum_{j<=i} exp(cum_i - cum_j) * (C_i . B_j) * xdt[j]
+  * the chunk's local state contribution
+        S = sum_j exp(cum_end - cum_j) * B_j (x) xdt[j]        [hb, P, N]
+
+The cross-chunk linear recurrence stays in XLA (``ops.ssd_scan``) — it is a
+tiny [H,P,N] rescale+add per chunk and fuses fine; the VMEM-hungry quadratic
+part is what the kernel tiles.
+
+VMEM per step (Q=256, hb=8, P=64, N=128, fp32):
+  xdt (Q,hb,P) 0.5M + B/C (Q,N) 0.25M + seg (Q,Q) 0.25M + outs ~0.8M < 2 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(xdt_ref, a_ref, b_ref, c_ref, y_ref, s_ref, *, Q, hb, P, N):
+    xdt = xdt_ref[0, 0].astype(jnp.float32)          # [Q, hb, P]
+    a = a_ref[0, 0].astype(jnp.float32)              # [Q, hb]
+    Bv = b_ref[0, 0].astype(jnp.float32)             # [Q, N]
+    Cv = c_ref[0, 0].astype(jnp.float32)             # [Q, N]
+
+    cum = jnp.cumsum(a, axis=0)                      # [Q, hb]
+    total = cum[-1]                                  # [hb]
+    scores = jax.lax.dot_general(Cv, Bv, (((1,), (1,)), ((), ())))  # [Qi, Qj]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    tri = (ii >= jj).astype(jnp.float32)
+    # seg[i,j,h] = exp(cum_i - cum_j); att = seg * scores * tri
+    seg = jnp.exp(cum[:, None, :] - cum[None, :, :])                # [Qi, Qj, hb]
+    att = seg * (scores * tri)[:, :, None]                          # [Qi, Qj, hb]
+    y = jnp.einsum("ijh,jhp->ihp", att, xdt)                        # [Q, hb, P]
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    decay_to_end = jnp.exp(total[None, :] - cum)                    # [Q, hb]
+    s_loc = jnp.einsum("qn,qh,qhp->hpn", Bv, decay_to_end, xdt)     # [hb, P, N]
+    s_ref[0, 0] = s_loc.astype(s_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("hb", "interpret"))
+def ssd_intra_chunk(xdt, a, Bm, Cm, *, hb=8, interpret=False):
+    """xdt [Bz, nc, Q, H, P]; a [Bz, nc, Q, H]; Bm/Cm [Bz, nc, Q, N]
+    -> (y_intra [Bz,nc,Q,H,P], S_local [Bz,nc,H,P,N]).
+    """
+    Bz, nc, Q, H, P = xdt.shape
+    N = Bm.shape[-1]
+    hb = min(hb, H)
+    assert H % hb == 0, (H, hb)
+    nh = H // hb
+    kernel = functools.partial(_ssd_kernel, Q=Q, hb=hb, P=P, N=N)
+    y, s = pl.pallas_call(
+        kernel,
+        grid=(Bz, nc, nh),
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, hb, P), lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, Q, hb), lambda b, c, h: (b, c, 0, h)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, c, h: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, c, h: (b, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, hb, P), lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, hb, P, N), lambda b, c, h: (b, c, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bz, nc, Q, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((Bz, nc, H, P, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xdt, a, Bm, Cm)
+    return y, s

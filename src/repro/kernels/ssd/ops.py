@@ -1,0 +1,44 @@
+"""SSD chunked scan assembled from the Pallas intra-chunk kernel + an XLA
+cross-chunk recurrence.  Numerically identical to ``ref.ssd_ref`` and to
+``repro.models.mamba2.ssd_chunked`` (which is the default XLA-only path).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_intra_chunk
+
+
+def ssd_scan(xdt, a, Bm, Cm, chunk: int, state0=None, *, interpret=False, hb=8):
+    """xdt [B,T,H,P]; a [B,T,H]; Bm/Cm [B,T,N] -> (y [B,T,H,P], S [B,H,P,N])."""
+    B, T, H, P = xdt.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, T)
+    assert T % Q == 0
+    nc = T // Q
+    xdt_c = xdt.reshape(B, nc, Q, H, P)
+    a_c = a.reshape(B, nc, Q, H).astype(jnp.float32)
+    B_c = Bm.reshape(B, nc, Q, N)
+    C_c = Cm.reshape(B, nc, Q, N)
+
+    y_intra, S_local = ssd_intra_chunk(xdt_c, a_c, B_c, C_c, hb=hb, interpret=interpret)
+
+    cum = jnp.cumsum(a_c, axis=2)                    # [B,nc,Q,H]
+    total = cum[:, :, -1]                            # [B,nc,H]
+    S0 = jnp.zeros((B, H, P, N), jnp.float32) if state0 is None else state0
+
+    def step(S, inp):
+        s_loc, tot = inp                             # [B,H,P,N], [B,H]
+        S_in = S
+        S = S * jnp.exp(tot)[..., None, None] + s_loc
+        return S, S_in                               # emit the *incoming* state
+
+    S_fin, S_prev = jax.lax.scan(
+        step, S0, (S_local.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2))
+    )
+    S_prev = S_prev.transpose(1, 0, 2, 3, 4)         # [B,nc,H,P,N]
+    y_inter = jnp.einsum("bcqn,bchpn->bcqhp", C_c.astype(jnp.float32), S_prev)
+    y_inter = y_inter * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(B, T, H, P)
+    return y.astype(xdt.dtype), S_fin

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the SSD kernel: the sequential state recurrence.
+
+    h_t = exp(a_t) * h_{t-1} + B_t (x) xdt_t
+    y_t = C_t . h_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(xdt, a, Bm, Cm, state0=None):
+    """xdt [B,T,H,P]; a [B,T,H]; Bm/Cm [B,T,N] -> (y [B,T,H,P], S [B,H,P,N])."""
+    B, T, H, P = xdt.shape
+    N = Bm.shape[-1]
+    S0 = jnp.zeros((B, H, P, N), jnp.float32) if state0 is None else state0
+
+    def step(S, inp):
+        xd, av, Bv, Cv = inp
+        S = S * jnp.exp(av.astype(jnp.float32))[..., None, None] + jnp.einsum(
+            "bn,bhp->bhpn", Bv.astype(jnp.float32), xd.astype(jnp.float32)
+        )
+        y = jnp.einsum("bn,bhpn->bhp", Cv.astype(jnp.float32), S)
+        return S, y
+
+    xs = (xdt.transpose(1, 0, 2, 3), a.transpose(1, 0, 2),
+          Bm.transpose(1, 0, 2), Cm.transpose(1, 0, 2))
+    S, ys = jax.lax.scan(step, S0, xs)
+    return ys.transpose(1, 0, 2, 3), S

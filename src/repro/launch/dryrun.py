@@ -1,0 +1,176 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) on the
+production meshes and extract memory / cost / collective statistics.
+
+MUST be run as its own process (`python -m repro.launch.dryrun ...`) so the
+XLA_FLAGS above take effect before jax initializes; nothing else in the
+repo sets that flag (smoke tests and benchmarks see 1 device).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod] [--archs a,b] [--shapes x,y]
+
+Outputs one JSON per combo under benchmarks/results/dryrun/.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from ..configs.base import INPUT_SHAPES
+from ..configs.registry import ASSIGNED, get_arch, get_shape
+from ..utils.logging import log
+from .mesh import make_production_mesh
+from .specs import make_setup
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _result_bytes(line: str) -> int:
+    """Sum byte sizes of the result shapes on an HLO op line (handles tuples)."""
+    lhs = line.split(" = ", 1)
+    if len(lhs) != 2:
+        return 0
+    rhs = lhs[1]
+    # result type(s) appear before the op name
+    head = rhs.split("(", 1)[0]
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(head):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-collective (count, result bytes) summed over the module."""
+    stats = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if " = " not in ls:
+            continue
+        for kind in _COLLECTIVES:
+            # match the op name, not substrings of e.g. "all-reduce-start"
+            if re.search(rf"\)?\s{kind}(-start)?\(", ls) or f" {kind}(" in ls:
+                stats[kind]["count"] += 1
+                stats[kind]["bytes"] += _result_bytes(ls)
+                break
+    stats["total_bytes"] = sum(v["bytes"] for k, v in stats.items() if isinstance(v, dict))
+    return stats
+
+
+def run_one(arch_name: str, shape_name: str, *, multi_pod: bool, out_dir: str,
+            setup_kwargs: dict | None = None, tag: str = "", unroll: bool = False) -> dict:
+    import dataclasses
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = get_arch(arch_name)
+    if unroll:  # exact cost accounting: XLA counts while bodies once
+        from ..models import _flags
+
+        _flags.UNROLL_INNER = True
+        cfg = dataclasses.replace(cfg, scan_unroll=cfg.n_layers)
+    shape = get_shape(shape_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    label = f"{arch_name}/{shape_name}/{mesh_name}{('/' + tag) if tag else ''}"
+    rec: dict = {"arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+                 "multi_pod": multi_pod, "tag": tag, "ok": False}
+    t0 = time.time()
+    try:
+        setup = make_setup(cfg, shape, mesh, **(setup_kwargs or {}))
+        with mesh:
+            jitted = jax.jit(setup.fn, in_shardings=setup.in_shardings)
+            lowered = jitted.lower(*setup.args)
+            rec["lower_s"] = round(time.time() - t0, 2)
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t1, 2)
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)
+        }
+        cost = compiled.cost_analysis() or {}
+        rec["cost"] = {k: float(v) for k, v in cost.items()
+                       if isinstance(v, (int, float)) and k in
+                       ("flops", "bytes accessed", "transcendentals",
+                        "bytes accessed output", "optimal_seconds")}
+        rec["collectives"] = collective_stats(compiled.as_text())
+        rec["ok"] = True
+        log(f"dryrun OK {label}", lower_s=rec["lower_s"], compile_s=rec["compile_s"],
+            gflops=round(rec["cost"].get("flops", 0) / 1e9, 1),
+            temp_gb=round(rec["memory"].get("temp_size_in_bytes", 0) / 2**30, 2),
+            coll_mb=round(rec["collectives"]["total_bytes"] / 2**20, 1))
+    except Exception as e:  # record failures — they are bugs to fix
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        log(f"dryrun FAIL {label}: {rec['error'][:200]}")
+    rec["total_s"] = round(time.time() - t0, 2)
+    os.makedirs(out_dir, exist_ok=True)
+    fname = f"{arch_name}_{shape_name}_{mesh_name}{('_' + tag) if tag else ''}.json".replace("/", "-")
+    with open(os.path.join(out_dir, fname), "w") as f:
+        json.dump(rec, f, indent=2)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--archs", default=None, help="comma list (with --all)")
+    ap.add_argument("--shapes", default=None, help="comma list (with --all)")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--unroll", action="store_true",
+                    help="unroll layer scans (exact flops; slow compiles)")
+    args = ap.parse_args()
+
+    combos: list[tuple[str, str]] = []
+    if args.all:
+        archs = args.archs.split(",") if args.archs else ASSIGNED
+        shapes = args.shapes.split(",") if args.shapes else list(INPUT_SHAPES)
+        combos = [(a, s) for a in archs for s in shapes]
+    else:
+        assert args.arch and args.shape, "need --arch and --shape (or --all)"
+        combos = [(args.arch, args.shape)]
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    n_ok = n_fail = 0
+    for mp in meshes:
+        for a, s in combos:
+            rec = run_one(a, s, multi_pod=mp, out_dir=args.out, tag=args.tag,
+                          unroll=args.unroll)
+            n_ok += rec["ok"]
+            n_fail += not rec["ok"]
+    log(f"dry-run complete: {n_ok} ok, {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state; callers (dryrun.py) must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first jax use.
+
+Target hardware: TPU v5e pods — 256 chips/pod (16x16), 2 pods = 512 chips.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (host) devices exist — for tests."""
+    n = len(jax.devices())
+    assert data * model <= n, (data, model, n)
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple:
+    """The batch/client axes of a mesh: ('pod','data') or ('data',)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def dp_size(mesh) -> int:
+    s = 1
+    for a in dp_axes(mesh):
+        s *= mesh.shape[a]
+    return s
+
+
+# v5e hardware constants for the roofline (per chip)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 50e9                   # bytes/s per link (~3 links usable per chip)

@@ -1,0 +1,221 @@
+"""Per-(arch x input-shape) dry-run setups: step fn + ShapeDtypeStruct args +
+shardings.  No device allocation happens here (everything goes through
+``jax.eval_shape``); ``dryrun.py`` lowers and compiles these.
+
+Mapping of the assigned input shapes onto the FL system:
+
+* ``train_4k``    -> one federated ROUND (train_step): the cohort covers the
+  global batch.  vmapped mode: C = |dp axes| clients in parallel, each with a
+  local batch of global_batch/C; sequential mode (huge models): C=4 clients
+  scanned, each step's local batch global_batch/4 sharded over dp.
+  K=1 local step is lowered (roofline is per-local-step; more steps scale
+  FLOPs linearly inside the same lax.scan).
+* ``prefill_32k`` -> ``prefill`` of the global model (inference).
+* ``decode_32k``  -> ``serve_step``: ONE token against a 32k KV/SSM cache.
+* ``long_500k``   -> ``serve_step`` with a 524288-token context; quadratic
+  (full-attention) archs serve it through the sliding-window ring cache
+  (window ``serve_window_long``), SSM/hybrid natively (see DESIGN.md).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, FLConfig, ShapeConfig
+from ..data.federated import ClientMeta, RoundBatch
+from ..dist.sharding import batch_shardings, cache_shardings, params_shardings, seq_batch_shardings
+from ..fed.losses import make_loss
+from ..fed.rounds import build_round_step
+from ..fed.server import init_server
+from ..models.model import build_model
+from .mesh import dp_axes, dp_size
+
+SEQUENTIAL_ARCHS = {"qwen2-72b", "deepseek-v3-671b"}  # one replica needs the mesh
+
+
+@dataclass
+class Setup:
+    name: str
+    fn: Callable
+    args: tuple                   # ShapeDtypeStructs
+    in_shardings: Any
+    out_shardings: Any = None
+    static_kwargs: dict | None = None
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+def _meta_specs(C: int):
+    return ClientMeta(
+        weight=_sds((C,), jnp.float32), prob=_sds((C,), jnp.float32),
+        num_samples=_sds((C,), jnp.float32), epochs=_sds((C,), jnp.float32),
+        num_steps=_sds((C,), jnp.float32), num_steps_planned=_sds((C,), jnp.float32),
+        valid=_sds((C,), jnp.float32), client_id=_sds((C,), jnp.int32),
+    )
+
+
+def _replicated(mesh, tree):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def _train_data_specs(cfg: ArchConfig, C: int, K: int, B: int, seq: int) -> dict:
+    if cfg.family == "vlm":
+        s_text = seq - cfg.num_patches
+        return {
+            "tokens": _sds((C, K, B, s_text + 1), jnp.int32),
+            "patches": _sds((C, K, B, cfg.num_patches, cfg.d_model), jnp.dtype(cfg.dtype)),
+        }
+    if cfg.family == "audio":
+        return {
+            "tokens": _sds((C, K, B, seq + 1), jnp.int32),
+            "frames": _sds((C, K, B, cfg.src_frames, cfg.d_model), jnp.dtype(cfg.dtype)),
+        }
+    return {"tokens": _sds((C, K, B, seq + 1), jnp.int32)}
+
+
+def train_setup(cfg: ArchConfig, shape: ShapeConfig, mesh, *, k_steps: int = 1,
+                cohort_mode: str | None = None, server_opt: str = "sgd",
+                fsdp_override: str | None = "auto", accum_dtype: str = "float32") -> Setup:
+    mode = cohort_mode or ("sequential" if cfg.name in SEQUENTIAL_ARCHS else "vmapped")
+    dpx = dp_axes(mesh)
+    dpn = dp_size(mesh)
+    if mode == "vmapped":
+        C = dpn
+        B = max(1, shape.global_batch // C)
+    else:
+        C = 4
+        B = max(1, shape.global_batch // C)
+    fl = FLConfig(
+        num_clients=max(64, C), cohort_size=C, sampling="uniform",
+        algorithm="fedshuffle", local_lr=1e-2, server_lr=1.0,
+        server_opt=server_opt, cohort_mode=mode, local_batch=B, k_max=k_steps,
+        accum_dtype=accum_dtype,
+    )
+    model = build_model(cfg)
+    loss_fn = make_loss(model)
+
+    # state specs without allocation
+    key = jax.random.PRNGKey(0)
+    state_spec = jax.eval_shape(lambda: init_server(fl, model.init(key)))
+
+    batch = RoundBatch(
+        data=_train_data_specs(cfg, C, k_steps, B, shape.seq_len),
+        step_mask=_sds((C, k_steps), jnp.float32),
+        meta=_meta_specs(C),
+    )
+    lr_spec = _sds((), jnp.float32)
+
+    fsdp = None
+    if fsdp_override == "auto":
+        fsdp = dpx if mode == "sequential" else None
+    elif fsdp_override:
+        fsdp = fsdp_override
+    p_shard = params_shardings(state_spec.params, mesh, tp="model", fsdp=fsdp)
+    # opt entries mirror the params structure (momentum trees / x_prev)
+    opt_shard = {k: p_shard for k in state_spec.opt}
+    state_shard = type(state_spec)(params=p_shard, opt=opt_shard,
+                                   rnd=NamedSharding(mesh, P()))
+    if mode == "vmapped":
+        b_shard = RoundBatch(
+            data=batch_shardings(batch.data, mesh, client_axis=dpx),
+            step_mask=batch_shardings({"m": batch.step_mask}, mesh, client_axis=dpx)["m"],
+            meta=jax.tree.map(lambda _: NamedSharding(mesh, P(dpx)), batch.meta)
+            if C % dpn == 0 else _replicated(mesh, batch.meta),
+        )
+    else:
+        b_shard = RoundBatch(
+            data=seq_batch_shardings(batch.data, mesh, dp_axis=dpx),
+            step_mask=NamedSharding(mesh, P()),
+            meta=_replicated(mesh, batch.meta),
+        )
+
+    round_step = build_round_step(loss_fn, fl, num_clients=fl.num_clients)
+    return Setup(
+        name=f"{cfg.name}/{shape.name}",
+        fn=round_step,
+        args=(state_spec, batch, lr_spec),
+        in_shardings=(state_shard, b_shard, NamedSharding(mesh, P())),
+    )
+
+
+def prefill_setup(cfg: ArchConfig, shape: ShapeConfig, mesh, *,
+                  seq_over_model: bool = False) -> Setup:
+    model = build_model(cfg)
+    dpx = dp_axes(mesh)
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    key = jax.random.PRNGKey(0)
+    params_spec = jax.eval_shape(lambda: model.init(key))
+
+    if cfg.family == "vlm":
+        batch = {"tokens": _sds((B, S - cfg.num_patches), jnp.int32),
+                 "patches": _sds((B, cfg.num_patches, cfg.d_model), dt)}
+    elif cfg.family == "audio":
+        batch = {"tokens": _sds((B, S), jnp.int32),
+                 "frames": _sds((B, cfg.src_frames, cfg.d_model), dt)}
+    else:
+        batch = {"tokens": _sds((B, S), jnp.int32)}
+
+    fn = partial(model.prefill, cache_len=S)
+
+    def _bshard(l):
+        spec = [dpx if l.shape[0] % dp_size(mesh) == 0 else None]
+        spec += [None] * (len(l.shape) - 1)
+        if seq_over_model and len(l.shape) >= 2 and l.shape[1] % mesh.shape["model"] == 0:
+            spec[1] = "model"  # sequence-sharded inputs (perf iteration)
+        return NamedSharding(mesh, P(*spec))
+
+    b_shard = jax.tree.map(_bshard, batch)
+    return Setup(
+        name=f"{cfg.name}/{shape.name}",
+        fn=fn,
+        args=(params_spec, batch),
+        in_shardings=(params_shardings(params_spec, mesh, tp="model"), b_shard),
+    )
+
+
+def decode_setup(cfg: ArchConfig, shape: ShapeConfig, mesh, **_ignored) -> Setup:
+    """serve_step: one token against a seq_len-deep cache."""
+    model = build_model(cfg)
+    dpx = dp_axes(mesh)
+    B, S = shape.global_batch, shape.seq_len
+    long_ctx = S > 100_000
+    # quadratic-attention archs serve long contexts through the window ring
+    ring = long_ctx and cfg.family in ("dense", "vlm", "moe", "audio")
+    cache_len = min(S, cfg.serve_window_long) if ring else S
+
+    key = jax.random.PRNGKey(0)
+    params_spec = jax.eval_shape(lambda: model.init(key))
+    cache_spec = jax.eval_shape(lambda: model.init_cache(B, cache_len))
+    token = _sds((B, 1), jnp.int32)
+
+    fn = partial(model.decode_step, ring=ring)
+    shard_seq = (B == 1)  # batch=1 long ctx: sequence-parallel the cache
+    c_shard = {
+        "layers": cache_shardings(cache_spec["layers"], mesh, dp_axis=dpx,
+                                  shard_seq=shard_seq),
+        "pos": NamedSharding(mesh, P()),
+    }
+    t_shard = NamedSharding(mesh, P(dpx if B % dp_size(mesh) == 0 else None, None))
+    return Setup(
+        name=f"{cfg.name}/{shape.name}",
+        fn=fn,
+        args=(params_spec, token, cache_spec),
+        in_shardings=(params_shardings(params_spec, mesh, tp="model"), t_shard, c_shard),
+    )
+
+
+def make_setup(cfg: ArchConfig, shape: ShapeConfig, mesh, **kw) -> Setup:
+    if shape.kind == "train":
+        return train_setup(cfg, shape, mesh, **kw)
+    if shape.kind == "prefill":
+        return prefill_setup(cfg, shape, mesh, **kw)
+    return decode_setup(cfg, shape, mesh, **kw)

@@ -1,0 +1,105 @@
+"""Federated training launcher.
+
+Two regimes:
+
+* ``--smoke`` (CPU, default): reduced same-family config, synthetic federated
+  token data, a few rounds — proves the full stack end-to-end per arch.
+* full scale: composes the production setup (same code path the dry-run
+  lowers); on real TPU hardware this is the entry point.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b --smoke
+  PYTHONPATH=src python -m repro.launch.train --config charlm_e2e --rounds 300
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from ..configs.base import FLConfig
+from ..configs.registry import get_arch
+from ..data.federated import FederatedPipeline, Population
+from ..data.tasks import CharLMTask, TokenTask
+from ..fed.losses import make_loss
+from ..fed.train_loop import train
+from ..models.model import build_model
+from ..utils.logging import log
+
+
+def smoke_task_for(cfg, fl: FLConfig):
+    extras = {}
+    if cfg.family == "vlm":
+        extras["patches"] = (cfg.num_patches, cfg.d_model)
+    if cfg.family == "audio":
+        extras["frames"] = (cfg.src_frames, cfg.d_model)
+    return TokenTask(vocab=cfg.vocab, seq_len=32, num_clients=fl.num_clients,
+                     seed=fl.seed, extras=extras)
+
+
+def run_smoke(arch: str, rounds: int, algorithm: str, server_opt: str) -> None:
+    cfg = get_arch(arch).reduced()
+    fl = FLConfig(num_clients=6, cohort_size=3, sampling="uniform", epochs=1,
+                  local_batch=2, algorithm=algorithm, local_lr=0.05,
+                  server_opt=server_opt, mean_samples=4, seed=0)
+    task = smoke_task_for(cfg, fl)
+    pop = Population.build(fl)
+    pipe = FederatedPipeline(task, pop, fl)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    res = train(make_loss(model), params, pipe, fl, rounds,
+                name=f"smoke-{arch}", log_every=max(1, rounds // 5))
+    first, last = res.metrics.rows[0]["local_loss"], res.metrics.rows[-1]["local_loss"]
+    log(f"smoke {arch}: loss {first:.4f} -> {last:.4f}")
+
+
+def run_charlm_e2e(rounds: int, algorithm: str, server_opt: str,
+                   checkpoint: str | None) -> None:
+    """The e2e driver: ~100M-param char-LM, heterogeneous clients."""
+    from ..configs.paper_tasks import CHARLM_100M
+
+    cfg = CHARLM_100M
+    fl = FLConfig(num_clients=32, cohort_size=8, sampling="uniform", epochs=1,
+                  local_batch=4, algorithm=algorithm, local_lr=0.05,
+                  server_opt=server_opt, imbalance="lognormal", mean_samples=8,
+                  cohort_mode="sequential", seed=1)
+    task = CharLMTask(vocab=min(cfg.vocab, 512), seq_len=128, num_clients=fl.num_clients)
+    import dataclasses
+    cfg = dataclasses.replace(cfg, vocab=min(cfg.vocab, 512))
+    pop = Population.build(fl)
+    pipe = FederatedPipeline(task, pop, fl)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n = sum(int(x.size) for x in jax.tree.leaves(params))
+    log(f"charlm e2e: {n/1e6:.1f}M params, {rounds} rounds")
+
+    ev = task.batch(0, np.arange(4).reshape(1, 4))
+    eval_batch = {k: jax.numpy.asarray(v[0]) for k, v in ev.items()}
+    loss_fn = make_loss(model)
+    eval_fn = jax.jit(lambda p: {"loss": loss_fn(p, eval_batch)[0]})
+    res = train(loss_fn, params, pipe, fl, rounds, eval_fn=eval_fn, eval_every=20,
+                schedule="staircase", checkpoint_path=checkpoint,
+                checkpoint_every=100 if checkpoint else 0,
+                name="charlm-e2e", log_every=10)
+    print(res.metrics.csv())
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--config", default=None, choices=[None, "charlm_e2e"])
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--algorithm", default="fedshuffle")
+    ap.add_argument("--server-opt", default="sgd")
+    ap.add_argument("--checkpoint", default=None)
+    args = ap.parse_args()
+    if args.config == "charlm_e2e":
+        run_charlm_e2e(args.rounds, args.algorithm, args.server_opt, args.checkpoint)
+    else:
+        run_smoke(args.arch, args.rounds, args.algorithm, args.server_opt)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Trace-time flags (set by launch/dryrun.py --unroll only).
+
+UNROLL_INNER: unroll the chunked-attention / SSD-chunk scans so XLA's
+HloCostAnalysis (which counts while bodies once) reports exact totals.
+"""
+UNROLL_INNER = False

@@ -1,0 +1,162 @@
+"""Mamba2 SSD block (state-space duality, arXiv:2405.21060).
+
+The sequence mixer is the chunked SSD algorithm: quadratic attention-like
+computation *within* chunks + a linear recurrence on [H, P, N] states *across*
+chunks (``lax.scan``).  Decode is the pure recurrence (O(1) per token), which
+is why the ``long_500k`` shape is native for SSM/hybrid archs.
+
+The intra-chunk computation is the hot spot mirrored by the Pallas kernel in
+``repro/kernels/ssd`` (same math, block-tiled for VMEM).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import dense_init, rmsnorm, rmsnorm_init
+
+
+def dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = s.num_heads or d_inner // s.head_dim
+    return d_inner, H, s.head_dim, s.state_dim
+
+
+def mamba2_init(key, cfg: ArchConfig, dtype):
+    s = cfg.ssm
+    d_inner, H, P, N = dims(cfg)
+    conv_ch = d_inner + 2 * N
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], cfg.d_model, 2 * d_inner + 2 * N + H, dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_width, conv_ch)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),            # A = -exp(A_log) = -1
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),     # softplus(-2) ~ 0.13
+        "D": jnp.ones((H,), jnp.float32),
+        "gate_norm": rmsnorm_init(d_inner, dtype),
+        "out_proj": dense_init(ks[2], d_inner, cfg.d_model, dtype),
+    }
+
+
+def _split_proj(params, cfg, x):
+    d_inner, H, P, N = dims(cfg)
+    zxbcdt = x @ params["in_proj"]
+    z, xc, Bm, Cm, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N], axis=-1
+    )
+    return z, xc, Bm, Cm, dt
+
+
+def _causal_conv(params, cfg, u, conv_cache=None):
+    """u [B,T,C]; depthwise causal conv, width w.  With a cache (decode, T=1)
+    uses/updates the [B, w-1, C] history buffer."""
+    w = cfg.ssm.conv_width
+    if conv_cache is None:
+        pad = jnp.zeros(u.shape[:1] + (w - 1,) + u.shape[2:], u.dtype)
+        ext = jnp.concatenate([pad, u], axis=1)
+        out = sum(ext[:, i : i + u.shape[1]] * params["conv_w"][i] for i in range(w))
+        return jax.nn.silu(out + params["conv_b"]), None
+    ext = jnp.concatenate([conv_cache, u], axis=1)        # [B, w, C]
+    out = sum(ext[:, i : i + 1] * params["conv_w"][i] for i in range(w))
+    new_cache = ext[:, 1:]
+    return jax.nn.silu(out + params["conv_b"]), new_cache
+
+
+def ssd_chunked(xdt, a, Bm, Cm, chunk: int, state0=None):
+    """Chunked SSD scan.
+
+    xdt [B,T,H,P] (inputs pre-multiplied by dt), a [B,T,H] (log decays, <=0),
+    Bm/Cm [B,T,N].  Returns (y [B,T,H,P], final_state [B,H,P,N]).
+    """
+    B, T, H, P = xdt.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, T)
+    assert T % Q == 0, f"T={T} not divisible by chunk={Q}"
+    nc = T // Q
+    xdt_c = xdt.reshape(B, nc, Q, H, P).transpose(1, 0, 2, 3, 4)
+    a_c = a.reshape(B, nc, Q, H).transpose(1, 0, 2, 3)
+    B_c = Bm.reshape(B, nc, Q, N).transpose(1, 0, 2, 3)
+    C_c = Cm.reshape(B, nc, Q, N).transpose(1, 0, 2, 3)
+    S0 = jnp.zeros((B, H, P, N), jnp.float32) if state0 is None else state0
+
+    idx = jnp.arange(Q)
+    tri = (idx[:, None] >= idx[None, :]).astype(jnp.float32)      # [Q,Q]
+
+    def step(S, inp):
+        xd, av, Bv, Cv = inp                                      # [B,Q,H,P],[B,Q,H],[B,Q,N]x2
+        av = av.astype(jnp.float32)
+        cum = jnp.cumsum(av, axis=1)                              # [B,Q,H]
+        total = cum[:, -1]                                        # [B,H]
+        # inter-chunk: previous state decayed to each position
+        y_inter = jnp.einsum("bqn,bhpn->bqhp", Cv.astype(jnp.float32), S)
+        y_inter = y_inter * jnp.exp(cum)[..., None]
+        # intra-chunk (the quadratic part; Pallas kernel mirrors this)
+        seg = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])    # [B,Qi,Qj,H]
+        scores = jnp.einsum("bin,bjn->bij", Cv.astype(jnp.float32), Bv.astype(jnp.float32))
+        att = seg * scores[..., None] * tri[None, :, :, None]
+        y_intra = jnp.einsum("bijh,bjhp->bihp", att, xd.astype(jnp.float32))
+        # state update
+        decay_to_end = jnp.exp(total[:, None, :] - cum)           # [B,Q,H]
+        S_local = jnp.einsum("bqn,bqh,bqhp->bhpn", Bv.astype(jnp.float32), decay_to_end, xd.astype(jnp.float32))
+        S_new = S * jnp.exp(total)[..., None, None] + S_local
+        return S_new, (y_inter + y_intra)
+
+    from . import _flags
+
+    S_fin, y = jax.lax.scan(step, S0, (xdt_c, a_c, B_c, C_c),
+                            unroll=nc if _flags.UNROLL_INNER else 1)
+    y = y.transpose(1, 0, 2, 3, 4).reshape(B, T, H, P)
+    return y.astype(xdt.dtype), S_fin
+
+
+def mamba2_forward(params, cfg: ArchConfig, x, state0=None):
+    """Train/prefill. x [B,T,D] -> (y [B,T,D], cache {"state","conv"}).
+
+    ``cache`` is decode-ready: final SSD state + the last (w-1) raw conv
+    inputs, so a prefill can hand off directly to ``mamba2_decode``.
+    """
+    d_inner, H, P, N = dims(cfg)
+    B, T, _ = x.shape
+    w = cfg.ssm.conv_width
+    z, xc, Bm, Cm, dt = _split_proj(params, cfg, x)
+    conv_in = jnp.concatenate([xc, Bm, Cm], axis=-1)
+    conv_out, _ = _causal_conv(params, cfg, conv_in)
+    if T >= w - 1:
+        conv_tail = conv_in[:, T - (w - 1) :]
+    else:  # short prefill: left-pad with zeros
+        pad = jnp.zeros((B, (w - 1) - T) + conv_in.shape[2:], conv_in.dtype)
+        conv_tail = jnp.concatenate([pad, conv_in], axis=1)
+    xc, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])          # [B,T,H]
+    a = -jnp.exp(params["A_log"]) * dt                                        # [B,T,H]
+    xh = xc.reshape(B, T, H, P)
+    y, S = ssd_chunked(xh * dt[..., None].astype(xh.dtype), a, Bm, Cm, cfg.ssm.chunk, state0)
+    y = y + xh * params["D"][None, None, :, None].astype(xh.dtype)
+    y = y.reshape(B, T, d_inner) * jax.nn.silu(z)
+    y = rmsnorm(params["gate_norm"], y, cfg.norm_eps)
+    return y @ params["out_proj"], {"state": S, "conv": conv_tail}
+
+
+def mamba2_decode(params, cfg: ArchConfig, x, cache):
+    """One-token recurrence. x [B,1,D]; cache {"state":[B,H,P,N], "conv":[B,w-1,C]}."""
+    d_inner, H, P, N = dims(cfg)
+    B = x.shape[0]
+    z, xc, Bm, Cm, dt = _split_proj(params, cfg, x)
+    conv_in = jnp.concatenate([xc, Bm, Cm], axis=-1)
+    conv_out, conv_cache = _causal_conv(params, cfg, conv_in, cache["conv"])
+    xc, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])          # [B,1,H]
+    a = -jnp.exp(params["A_log"]) * dt                                        # [B,1,H]
+    xh = (xc.reshape(B, 1, H, P) * dt[..., None].astype(xc.dtype))[:, 0]      # [B,H,P]
+    S = cache["state"]
+    S = S * jnp.exp(a[:, 0])[..., None, None] + jnp.einsum(
+        "bn,bhp->bhpn", Bm[:, 0].astype(jnp.float32), xh.astype(jnp.float32)
+    )
+    y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), S)
+    y = y.astype(x.dtype) + xc.reshape(B, 1, H, P)[:, 0] * params["D"][None, :, None].astype(x.dtype)
+    y = y.reshape(B, 1, d_inner) * jax.nn.silu(z)
+    y = rmsnorm(params["gate_norm"], y, cfg.norm_eps)
+    return y @ params["out_proj"], {"state": S, "conv": conv_cache}

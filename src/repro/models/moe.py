@@ -1,0 +1,114 @@
+"""Mixture-of-Experts: top-k router, GShard-style grouped capacity dispatch,
+shared experts, and load-balance auxiliary loss.
+
+Dispatch is group-wise (``group_size`` tokens per group, capacity
+``C = ceil(g*k/E * capacity_factor)``) so the one-hot dispatch tensor is
+[g, E, C] per group rather than [T, E, C] globally; groups are batched (the
+token axis is sharded over the data mesh axes, experts over the model axis —
+the dispatch/combine einsums lower to all-to-alls on a real mesh).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import dense_init, swiglu, swiglu_init
+
+
+def moe_init(key, cfg: ArchConfig, dtype):
+    m = cfg.moe
+    D = cfg.d_model
+    ks = jax.random.split(key, 5)
+    ek = jax.random.split(ks[0], 3)
+    p = {
+        "router": dense_init(ks[1], D, m.num_experts, jnp.float32),  # fp32 router
+        "experts": {
+            "gate": jax.vmap(lambda k: dense_init(k, D, m.expert_ff, dtype))(
+                jax.random.split(ek[0], m.num_experts)
+            ),
+            "up": jax.vmap(lambda k: dense_init(k, D, m.expert_ff, dtype))(
+                jax.random.split(ek[1], m.num_experts)
+            ),
+            "down": jax.vmap(lambda k: dense_init(k, m.expert_ff, D, dtype))(
+                jax.random.split(ek[2], m.num_experts)
+            ),
+        },
+    }
+    if m.num_shared:
+        p["shared"] = swiglu_init(ks[2], D, m.expert_ff * m.num_shared, dtype)
+    return p
+
+
+def capacity(cfg: ArchConfig, group: int) -> int:
+    m = cfg.moe
+    return max(1, math.ceil(group * m.top_k / m.num_experts * m.capacity_factor))
+
+
+def _dispatch_group(router_probs, k: int, cap: int):
+    """router_probs [g, E] -> (dispatch [g,E,C] bool, combine [g,E,C] f32, aux).
+
+    Position-in-expert via cumsum of the flattened (priority-ordered)
+    assignment stream; overflowing tokens are dropped (classic GShard)."""
+    g, E = router_probs.shape
+    gates, idx = jax.lax.top_k(router_probs, k)                   # [g,k]
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)            # [g,k,E]
+    # priority: expert choice j of token t ranks after all j'<j choices and
+    # all earlier tokens' choice-j assignments (GShard ordering).
+    flat = onehot.transpose(1, 0, 2).reshape(k * g, E)            # [k*g, E]
+    pos_flat = jnp.cumsum(flat, axis=0) - flat                    # position in expert
+    pos = pos_flat.reshape(k, g, E).transpose(1, 0, 2)            # [g,k,E]
+    pos = jnp.sum(pos * onehot, axis=-1)                          # [g,k]
+    keep = (pos < cap) & (gates > 0)
+    pos_oh = jax.nn.one_hot(pos, cap, dtype=jnp.float32) * keep[..., None]
+    disp = jnp.einsum("gke,gkc->gec", onehot, pos_oh)             # [g,E,C]
+    comb = jnp.einsum("gke,gkc->gec", onehot * gates[..., None], pos_oh)
+    # load-balance aux (Switch): E * sum_e f_e * P_e
+    f_e = jnp.mean(jnp.sum(onehot, axis=1), axis=0)               # frac routed
+    P_e = jnp.mean(router_probs, axis=0)
+    aux = E * jnp.sum(f_e * P_e) / k
+    return disp, comb, aux
+
+
+def moe_forward(params, cfg: ArchConfig, x):
+    """x [B, T, D] -> (y [B, T, D], aux_loss scalar)."""
+    m = cfg.moe
+    B, T, D = x.shape
+    tokens = x.reshape(B * T, D)
+    g = min(m.group_size, B * T)
+    pad = (-(B * T)) % g
+    if pad:  # pad the trailing group (padded tokens' outputs are discarded)
+        tokens = jnp.concatenate([tokens, jnp.zeros((pad, D), tokens.dtype)], axis=0)
+    n_groups = tokens.shape[0] // g
+    cap = capacity(cfg, g)
+    xg = tokens.reshape(n_groups, g, D)
+
+    ex = params["experts"]
+
+    def group_ffn(xg_n):
+        """One group [g, D] -> (y [g, D], aux)."""
+        logits = (xg_n.astype(jnp.float32) @ params["router"]).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        disp, comb, aux = _dispatch_group(probs, m.top_k, cap)
+        disp = disp.astype(x.dtype)
+        expert_in = jnp.einsum("gec,gd->ecd", disp, xg_n)         # [E,C,D]
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in, ex["gate"]))
+        h = h * jnp.einsum("ecd,edf->ecf", expert_in, ex["up"])
+        eout = jnp.einsum("ecf,efd->ecd", h, ex["down"])          # [E,C,D]
+        return jnp.einsum("gec,ecd->gd", comb.astype(x.dtype), eout), aux
+
+    if m.scan_groups and n_groups > 1:
+        # bound the dispatch working set to one group (huge-config path)
+        _, (ys, auxs) = jax.lax.scan(lambda c, xg_n: (c, group_ffn(xg_n)), None, xg)
+    else:
+        ys, auxs = jax.vmap(group_ffn)(xg)
+    ys = ys.reshape(-1, D)
+    if pad:
+        ys = ys[: B * T]
+    y, aux = ys.reshape(B, T, D), auxs
+
+    if m.num_shared:
+        y = y + swiglu(params["shared"], x)
+    return y, aux.mean() * m.aux_coef

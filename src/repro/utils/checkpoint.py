@@ -1,0 +1,61 @@
+"""Minimal, dependency-free checkpointing.
+
+Saves a parameter/optimizer pytree as a flat ``.npz`` (one entry per leaf,
+keyed by '/'-joined tree path) plus a JSON sidecar with metadata.  Sharded
+arrays are gathered to host before saving; loading restores the exact tree
+structure from a template.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+from .pytree import tree_paths
+
+
+def save_checkpoint(path: str, tree, metadata: dict[str, Any] | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = {}
+    for key, leaf in tree_paths(tree):
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype.kind == "V" or arr.dtype.name == "bfloat16":
+            arr = arr.astype(np.float32)  # non-native dtypes stored widened
+        flat[key] = arr
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    meta_path = (path[:-4] if path.endswith(".npz") else path) + ".json"
+    with open(meta_path, "w") as f:
+        json.dump(metadata or {}, f, indent=2, default=str)
+
+
+def load_checkpoint(path: str, template):
+    """Restore a pytree with the structure of ``template`` from ``path``."""
+    npz = np.load(path if path.endswith(".npz") else path + ".npz")
+    keys = [k for k, _ in tree_paths(template)]
+    missing = [k for k in keys if k not in npz]
+    if missing:
+        raise KeyError(f"checkpoint missing keys: {missing[:5]} (+{max(0, len(missing) - 5)} more)")
+    leaves = [npz[k] for k in keys]
+    treedef = jax.tree.structure(template)
+    restored = jax.tree.unflatten(treedef, leaves)
+
+    # Cast back to template dtypes (bf16 stored widened; jnp handles the cast).
+    def _cast(t, r):
+        if not hasattr(t, "dtype"):
+            return r
+        if np.dtype(t.dtype).kind == "V" or np.dtype(t.dtype).name == "bfloat16":
+            import jax.numpy as jnp
+
+            return jnp.asarray(r, dtype=t.dtype)
+        return np.asarray(r, dtype=t.dtype)
+
+    return jax.tree.map(_cast, template, restored)
+
+
+def load_metadata(path: str) -> dict[str, Any]:
+    meta_path = (path[:-4] if path.endswith(".npz") else path) + ".json"
+    with open(meta_path) as f:
+        return json.load(f)

@@ -1,0 +1,51 @@
+"""Tiny structured logger + metrics accumulation (CSV-friendly)."""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from dataclasses import dataclass, field
+from typing import Any
+
+
+def log(msg: str, **kv: Any) -> None:
+    ts = time.strftime("%H:%M:%S")
+    extras = " ".join(f"{k}={v}" for k, v in kv.items())
+    print(f"[{ts}] {msg} {extras}".rstrip(), flush=True)
+
+
+@dataclass
+class MetricLogger:
+    """Accumulates per-round scalar metrics; can dump CSV or JSONL."""
+
+    name: str = "run"
+    rows: list = field(default_factory=list)
+
+    def append(self, **kv: Any) -> None:
+        self.rows.append({k: (float(v) if hasattr(v, "item") else v) for k, v in kv.items()})
+
+    def last(self) -> dict:
+        return self.rows[-1] if self.rows else {}
+
+    def csv(self) -> str:
+        if not self.rows:
+            return ""
+        keys = list(self.rows[0].keys())
+        lines = [",".join(keys)]
+        for r in self.rows:
+            lines.append(",".join(str(r.get(k, "")) for k in keys))
+        return "\n".join(lines)
+
+    def dump(self, path: str) -> None:
+        with open(path, "w") as f:
+            for r in self.rows:
+                f.write(json.dumps(r) + "\n")
+
+    def print_csv(self, every: int = 1, file=sys.stdout) -> None:
+        if not self.rows:
+            return
+        keys = list(self.rows[0].keys())
+        print(",".join(keys), file=file)
+        for i, r in enumerate(self.rows):
+            if i % every == 0 or i == len(self.rows) - 1:
+                print(",".join(str(r.get(k, "")) for k in keys), file=file)

@@ -1,0 +1,111 @@
+"""Pytree arithmetic helpers used throughout the FL stack.
+
+All FL algorithms in the paper operate on whole parameter pytrees
+(``Delta_i = y_i - x``, ``x <- x - eta_g * Delta`` ...).  These helpers keep
+that arithmetic readable and dtype-safe.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(tree, s):
+    """Multiply every leaf by scalar ``s`` (python or 0-d array)."""
+    return jax.tree.map(lambda x: x * s, tree)
+
+
+def tree_axpy(alpha, x, y):
+    """alpha * x + y, leafwise."""
+    return jax.tree.map(lambda a, b: alpha * a + b, x, y)
+
+
+def tree_lerp(a, b, t):
+    """(1 - t) * a + t * b, leafwise."""
+    return jax.tree.map(lambda x, y: (1.0 - t) * x + t * y, a, b)
+
+
+def tree_dot(a, b):
+    """Sum of elementwise products across all leaves (fp32 accumulate)."""
+    parts = jax.tree.leaves(
+        jax.tree.map(lambda x, y: jnp.vdot(x.astype(jnp.float32), y.astype(jnp.float32)), a, b)
+    )
+    return jnp.sum(jnp.stack(parts))
+
+
+def tree_sq_norm(a):
+    return tree_dot(a, a)
+
+
+def tree_norm(a):
+    return jnp.sqrt(tree_sq_norm(a))
+
+
+def tree_cast(tree, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), tree)
+
+
+def tree_count_params(tree) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def tree_any_nan(tree):
+    """True if any leaf contains a NaN/Inf (for smoke tests / guards)."""
+    flags = [jnp.any(~jnp.isfinite(x)) for x in jax.tree.leaves(tree) if jnp.issubdtype(x.dtype, jnp.floating)]
+    if not flags:
+        return jnp.asarray(False)
+    return jnp.any(jnp.stack(flags))
+
+
+def tree_paths(tree):
+    """List of (path-string, leaf) pairs, '/'-joined keys."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        keys = []
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey):
+                keys.append(str(p.key))
+            elif isinstance(p, jax.tree_util.SequenceKey):
+                keys.append(str(p.idx))
+            elif isinstance(p, jax.tree_util.GetAttrKey):
+                keys.append(str(p.name))
+            else:
+                keys.append(str(p))
+        out.append(("/".join(keys), leaf))
+    return out
+
+
+def tree_map_with_path_str(fn, tree):
+    """tree.map where fn receives ('a/b/c', leaf)."""
+
+    def _fn(path, leaf):
+        keys = []
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey):
+                keys.append(str(p.key))
+            elif isinstance(p, jax.tree_util.SequenceKey):
+                keys.append(str(p.idx))
+            elif isinstance(p, jax.tree_util.GetAttrKey):
+                keys.append(str(p.name))
+            else:
+                keys.append(str(p))
+        return fn("/".join(keys), leaf)
+
+    return jax.tree_util.tree_map_with_path(_fn, tree)

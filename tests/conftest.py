@@ -1,0 +1,10 @@
+import os
+import sys
+
+# Tests must see 1 CPU device (the dry-run sets its own flags in-process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,77 @@
+"""FedShuffleGen parametrization: coefficients and special cases (App. E.2)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.algorithms import PRESETS, agg_coeff, lr_scale, spec_for
+from repro.data.federated import ClientMeta
+
+
+def meta(w, p, steps, planned=None, valid=None):
+    C = len(w)
+    return ClientMeta(
+        weight=jnp.asarray(w, jnp.float32), prob=jnp.asarray(p, jnp.float32),
+        num_samples=jnp.ones(C), epochs=jnp.ones(C),
+        num_steps=jnp.asarray(steps, jnp.float32),
+        num_steps_planned=jnp.asarray(planned if planned is not None else steps, jnp.float32),
+        valid=jnp.asarray(valid if valid is not None else [1.0] * C, jnp.float32),
+        client_id=jnp.arange(C, dtype=jnp.int32),
+    )
+
+
+def test_fedshuffle_lr_scaling_is_inverse_steps():
+    m = meta([0.5, 0.5], [1.0, 1.0], [4.0, 8.0])
+    s = lr_scale(spec_for("fedshuffle"), m)
+    assert np.allclose(s, [0.25, 0.125])
+    s1 = lr_scale(spec_for("fedavg"), m)
+    assert np.allclose(s1, [1.0, 1.0])
+
+
+def test_unbiased_coeff_is_w_over_p():
+    m = meta([0.2, 0.8], [0.5, 0.5], [2.0, 2.0])
+    c = agg_coeff(spec_for("fedshuffle"), m, num_clients=4, cohort_size=2)
+    assert np.allclose(c, [0.4, 1.6])
+
+
+def test_sum_one_matches_algorithm2():
+    """fedavg_so: coeff_i = (n/b) * w_i / sum_{j in S} w_j."""
+    m = meta([0.2, 0.3], [0.5, 0.5], [2.0, 2.0])
+    c = agg_coeff(spec_for("fedavg_so"), m, num_clients=4, cohort_size=2)
+    expect = np.array([0.2, 0.3]) / 0.5 * (4 / 2)
+    assert np.allclose(c, expect)
+
+
+def test_fednova_full_participation_consistency():
+    """Full participation: FedNova coeff_i * K_i must be proportional to w_i
+    (update magnitude ∝ steps) => fixed point is consistent."""
+    w = np.array([1, 2, 3]) / 6.0
+    K = np.array([1.0, 2.0, 3.0])
+    m = meta(w, [1.0, 1.0, 1.0], K)
+    c = np.asarray(agg_coeff(spec_for("fednova"), m, num_clients=3, cohort_size=3))
+    tau_eff = np.sum(w * K)
+    assert np.allclose(c, w * tau_eff / K)
+    contrib = c * K  # per-client update scale ∝ steps
+    assert np.allclose(contrib / contrib.sum(), w)
+
+
+def test_gen_hybrid_rescales_interrupted_clients():
+    """Planned 4 steps, did 3: lr uses planned (1/4); update scaled by 4/3."""
+    m = meta([1.0], [1.0], steps=[3.0], planned=[4.0])
+    spec = spec_for("gen")
+    assert np.allclose(lr_scale(spec, m), [0.25])
+    c = agg_coeff(spec, m, num_clients=1, cohort_size=1)
+    assert np.allclose(c, [4.0 / 3.0])
+
+
+def test_invalid_slots_are_zeroed():
+    m = meta([0.5, 0.5], [0.5, 0.5], [2.0, 2.0], valid=[1.0, 0.0])
+    c = np.asarray(agg_coeff(spec_for("fedshuffle"), m, num_clients=4, cohort_size=2))
+    assert c[1] == 0.0 and c[0] > 0.0
+
+
+def test_all_presets_exist():
+    for name in ("fedshuffle", "fedavg", "fedavg_so", "fednova", "fedavg_min",
+                 "fedavg_mean", "gen"):
+        assert name in PRESETS
+    with pytest.raises(KeyError):
+        spec_for("nope")

@@ -1,0 +1,47 @@
+"""Checkpoint round-trip."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils.checkpoint import load_checkpoint, load_metadata, save_checkpoint
+
+
+def test_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"w": jnp.ones((4,), jnp.bfloat16), "i": jnp.arange(3)}}
+    path = os.path.join(tmp_path, "ckpt.npz")
+    save_checkpoint(path, tree, {"round": 7})
+    restored = load_checkpoint(path, tree)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(x, np.float32), np.asarray(y, np.float32))
+        assert x.dtype == y.dtype
+    assert load_metadata(path)["round"] == 7
+
+
+def test_missing_key_raises(tmp_path):
+    import pytest
+
+    path = os.path.join(tmp_path, "ckpt.npz")
+    save_checkpoint(path, {"a": jnp.ones(2)})
+    with pytest.raises(KeyError):
+        load_checkpoint(path, {"a": jnp.ones(2), "b": jnp.ones(2)})
+
+
+def test_train_loop_checkpointing(tmp_path):
+    from repro.configs.base import FLConfig
+    from repro.data.federated import FederatedPipeline, Population
+    from repro.data.tasks import DuplicatedQuadraticTask
+    from repro.fed.losses import make_quadratic_loss
+    from repro.fed.train_loop import train
+
+    task = DuplicatedQuadraticTask(copies=(1, 2))
+    fl = FLConfig(num_clients=2, cohort_size=2, sampling="full", local_batch=1,
+                  algorithm="fedshuffle", local_lr=0.1)
+    pipe = FederatedPipeline(task, Population.build(fl, sizes=task.sizes()), fl)
+    path = os.path.join(tmp_path, "run.npz")
+    res = train(make_quadratic_loss(2), {"x": jnp.zeros(2)}, pipe, fl, 5,
+                checkpoint_path=path, log_every=0)
+    restored = load_checkpoint(path, {"x": jnp.zeros(2)})
+    np.testing.assert_allclose(np.asarray(res.state.params["x"]), restored["x"], atol=1e-6)

@@ -1,0 +1,89 @@
+"""Distribution layer: sharding rules + multi-device lower/compile smoke.
+
+The multi-device part runs in a subprocess so the forced device count never
+leaks into this test session.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import param_spec
+
+
+class FakeMesh:
+    """Duck-typed mesh with just .shape for the rule checks."""
+
+    def __init__(self, **axes):
+        self.shape = axes
+
+
+MESH = FakeMesh(data=16, model=16)
+
+
+def test_tp_rules():
+    assert param_spec("blocks/attn/wq", (24, 1024, 2048), MESH) == P(None, None, "model")
+    assert param_spec("blocks/attn/wo", (24, 2048, 1024), MESH) == P(None, "model", None)
+    assert param_spec("blocks/mlp/gate", (24, 1024, 4096), MESH) == P(None, None, "model")
+    assert param_spec("embed", (152064, 8192), MESH) == P("model", None)
+    assert param_spec("blocks/ln1/scale", (24, 1024), MESH) == P()
+
+
+def test_divisibility_fallback():
+    # hymba vocab 32001 is not divisible by 16 -> replicate
+    assert param_spec("embed", (32001, 1600), MESH) == P(None, None)
+    # 8 kv heads can't shard over 16 -> flat dim 8*128=1024 still divides
+    assert param_spec("blocks/attn/wk", (80, 8192, 1024), MESH) == P(None, None, "model")
+
+
+def test_fsdp_rules():
+    spec = param_spec("blocks/mlp/gate", (80, 8192, 29568), MESH, fsdp=("data",))
+    assert spec == P(None, ("data",), "model")
+    spec = param_spec("blocks/attn/wo", (80, 8192, 8192), MESH, fsdp=("data",))
+    assert spec == P(None, "model", ("data",))
+
+
+def test_expert_parallel_rules():
+    # experts [L, E, D, F]: experts over model axis
+    assert param_spec("blocks/moe/experts/gate", (61, 256, 7168, 2048), MESH) == \
+        P(None, "model", None, None)
+    assert param_spec("blocks/moe/experts/down", (61, 256, 2048, 7168), MESH) == \
+        P(None, "model", None, None)
+
+
+SUBPROC = textwrap.dedent("""
+    import os, sys, json
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    sys.path.insert(0, "src")
+    import jax
+    from repro.configs.registry import ARCHS
+    from repro.configs.base import ShapeConfig
+    from repro.launch.specs import make_setup
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    out = {}
+    for arch, kind, seq, gb in [
+        ("qwen1.5-0.5b", "train", 64, 8),
+        ("mamba2-1.3b", "decode", 128, 8),
+        ("deepseek-v2-lite-16b", "prefill", 128, 8),
+    ]:
+        cfg = ARCHS[arch].reduced()
+        setup = make_setup(cfg, ShapeConfig("t", seq, gb, kind), mesh)
+        with mesh:
+            c = jax.jit(setup.fn, in_shardings=setup.in_shardings).lower(*setup.args).compile()
+        out[f"{arch}/{kind}"] = c.cost_analysis().get("flops", 0) > 0
+    print(json.dumps(out))
+""")
+
+
+@pytest.mark.slow
+def test_mesh_lower_compile_subprocess():
+    r = subprocess.run([sys.executable, "-c", SUBPROC], capture_output=True,
+                       text=True, timeout=900, cwd=".")
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert all(out.values()), out

@@ -1,0 +1,63 @@
+"""Fused server-update Pallas kernel: sweep (sizes, blocks, dtypes) vs oracle,
+plus a hypothesis property over the scalar parameters."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.server_update.kernel import fused_server_update
+from repro.kernels.server_update.ops import apply_fused_update, apply_reference_update
+from repro.kernels.server_update.ref import server_update_ref
+
+KEY = jax.random.PRNGKey(3)
+
+
+@pytest.mark.parametrize("n,block", [(64, 64), (1000, 256), (65536, 8192), (7, 16)])
+def test_fused_update_sizes(n, block):
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.normal(ks[0], (n,))
+    d = jax.random.normal(ks[1], (n,)) * 0.01
+    m = jax.random.normal(ks[2], (n,))
+    x1, m1 = fused_server_update(x, d, m, 1.0, 0.1, 0.05, block=block, interpret=True)
+    x2, m2 = server_update_ref(x, d, m, 1.0, 0.1, 0.05)
+    np.testing.assert_allclose(np.asarray(x1), np.asarray(x2), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_update_dtypes(dtype):
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.normal(ks[0], (512,)).astype(dtype)
+    d = (jax.random.normal(ks[1], (512,)) * 0.01).astype(dtype)
+    m = jnp.zeros((512,), jnp.float32)
+    x1, m1 = fused_server_update(x, d, m, 1.0, 0.1, 0.05, block=128, interpret=True)
+    x2, m2 = server_update_ref(x, d, m, 1.0, 0.1, 0.05)
+    assert x1.dtype == dtype
+    np.testing.assert_allclose(np.asarray(x1, np.float32), np.asarray(x2, np.float32),
+                               atol=1e-2 if dtype == jnp.bfloat16 else 1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(eta_g=st.floats(0.1, 2.0), a=st.floats(0.0, 1.0), eta_l=st.floats(0.01, 1.0))
+def test_fused_update_scalar_property(eta_g, a, eta_l):
+    x = jnp.linspace(-1, 1, 130)
+    d = jnp.sin(x) * 0.1
+    m = jnp.cos(x)
+    x1, m1 = fused_server_update(x, d, m, eta_g, a, eta_l, block=64, interpret=True)
+    x2, m2 = server_update_ref(x, d, m, eta_g, a, eta_l)
+    np.testing.assert_allclose(np.asarray(x1), np.asarray(x2), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), atol=1e-5)
+
+
+def test_pytree_wrapper_matches_reference():
+    params = {"w": jax.random.normal(KEY, (33, 9)), "b": jnp.ones((5,))}
+    delta = jax.tree.map(lambda t: t * 0.01, params)
+    mom = jax.tree.map(jnp.zeros_like, params)
+    x1, m1 = apply_fused_update(params, delta, mom, eta_g=1.0, a=0.1, eta_l=0.1,
+                                interpret=True, block=32)
+    x2, m2 = apply_reference_update(params, delta, mom, eta_g=1.0, a=0.1, eta_l=0.1)
+    for a_, b_ in zip(jax.tree.leaves(x1), jax.tree.leaves(x2)):
+        np.testing.assert_allclose(np.asarray(a_), np.asarray(b_), atol=1e-6)
+    for a_, b_ in zip(jax.tree.leaves(m1), jax.tree.leaves(m2)):
+        np.testing.assert_allclose(np.asarray(a_), np.asarray(b_), atol=1e-5)

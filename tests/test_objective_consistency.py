@@ -1,0 +1,100 @@
+"""THE paper claim (§4.1, Thm E.1): objective (in)consistency fixed points.
+
+On the duplicated-quadratic (clients hold 1/2/3 copies of e_i):
+  * FedAvg with local epochs converges to x~ = sum |D_i|^2 e_i / sum |D_i|^2
+  * FedShuffle and FedNova converge to x* = sum |D_i| e_i / sum |D_i|
+  * FedShuffle's step-size scaling == GD on the true objective (duplicates)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.data.federated import FederatedPipeline, Population
+from repro.data.tasks import DuplicatedQuadraticTask, QuadraticTask
+from repro.fed.losses import make_quadratic_loss
+from repro.fed.rounds import as_device_batch, build_round_step
+from repro.fed.server import init_server
+
+TASK = DuplicatedQuadraticTask(copies=(1, 2, 3))
+LOSS = make_quadratic_loss(3)
+
+
+def run(alg, rounds=500, lr=0.05, sampling="full", cohort=3, opt="sgd", seed=0,
+        epochs=1, drop_last=0, mode="vmapped"):
+    fl = FLConfig(num_clients=3, cohort_size=cohort, sampling=sampling,
+                  epochs=epochs, local_batch=1, algorithm=alg, local_lr=lr,
+                  server_lr=1.0, server_opt=opt, cohort_mode=mode, seed=seed,
+                  drop_last_steps=drop_last)
+    pop = Population.build(fl, sizes=TASK.sizes())
+    pipe = FederatedPipeline(TASK, pop, fl)
+    state = init_server(fl, {"x": jnp.zeros(3)})
+    step = jax.jit(build_round_step(LOSS, fl, num_clients=3))
+    for r in range(rounds):
+        state, _ = step(state, as_device_batch(pipe.round_batch(r)))
+    return np.asarray(state.params["x"])
+
+
+def test_fedavg_converges_to_biased_point():
+    x = run("fedavg", rounds=800, lr=0.02)
+    assert np.allclose(x, TASK.fedavg_biased_point(), atol=0.02)
+    assert not np.allclose(x, TASK.optimum(), atol=0.05)
+
+
+def test_fedshuffle_converges_to_optimum():
+    x = run("fedshuffle", rounds=800, lr=0.05)
+    assert np.allclose(x, TASK.optimum(), atol=0.01)
+
+
+def test_fednova_converges_to_optimum():
+    x = run("fednova", rounds=1500, lr=0.02)
+    assert np.allclose(x, TASK.optimum(), atol=0.02)
+
+
+def test_fedavg_min_is_consistent_but_slower():
+    """Equal (min) steps remove the inconsistency (at the cost of local work)."""
+    x = run("fedavg_min", rounds=1500, lr=0.05)
+    assert np.allclose(x, TASK.optimum(), atol=0.05)
+
+
+def test_multi_epoch_consistency():
+    x = run("fedshuffle", rounds=600, lr=0.08, epochs=2)
+    assert np.allclose(x, TASK.optimum(), atol=0.01)
+
+
+def test_hybrid_gen_fixes_interrupted_clients():
+    """Fig. 4: clients dropping their last step break FedShuffle's consistency;
+    FedShuffleGen's hybrid (planned-c + nova-style rescale) restores it."""
+    # larger per-client work so dropping one step is a partial interruption
+    x_shuffle = run("fedshuffle", rounds=900, lr=0.05, epochs=2, drop_last=1)
+    x_gen = run("gen", rounds=900, lr=0.05, epochs=2, drop_last=1)
+    err_shuffle = np.abs(x_shuffle - TASK.optimum()).max()
+    err_gen = np.abs(x_gen - TASK.optimum()).max()
+    assert err_gen < err_shuffle
+    assert err_gen < 0.02
+
+
+def test_sequential_equals_vmapped():
+    xa = run("fedshuffle", rounds=50, mode="vmapped")
+    xb = run("fedshuffle", rounds=50, mode="sequential")
+    assert np.allclose(xa, xb, atol=1e-6)
+
+
+def test_partial_participation_unbiased_vs_sum_one():
+    """Under 2-of-3 uniform sampling the sum-one aggregation lands farther from
+    the (already NL-biased) target than w/p aggregation (paper §4.2, Fig. 1)."""
+    x_u = run("fedshuffle", rounds=3000, lr=0.03, sampling="uniform", cohort=2, seed=3)
+    x_so = run("fedavg_so", rounds=3000, lr=0.03, sampling="uniform", cohort=2, seed=3)
+    err_u = TASK.loss_np(x_u) - TASK.loss_np(np.asarray(TASK.optimum()))
+    err_so = TASK.loss_np(x_so) - TASK.loss_np(np.asarray(TASK.optimum()))
+    assert err_u < err_so
+
+
+def test_importance_sampling_beats_uniform():
+    """Paper Fig. 1 right: 1-client-per-round, p_i ∝ w_i vs uniform."""
+    errs = {}
+    for kind in ("uniform", "independent"):
+        x = run("fedshuffle", rounds=3000, lr=0.03, sampling=kind, cohort=1, seed=7)
+        errs[kind] = TASK.loss_np(x) - TASK.loss_np(np.asarray(TASK.optimum()))
+    assert errs["independent"] <= errs["uniform"] * 1.5  # IS no worse; usually better

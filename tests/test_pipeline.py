@@ -1,0 +1,86 @@
+"""Federated data pipeline invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import FLConfig
+from repro.data.federated import FederatedPipeline, Population
+from repro.data.tasks import CharLMTask, TokenTask
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(3, 10), mean=st.integers(2, 10),
+       imb=st.sampled_from(["equal", "lognormal", "zipf"]))
+def test_population_weights_sum_to_one(n, mean, imb):
+    fl = FLConfig(num_clients=n, mean_samples=mean, imbalance=imb, min_samples=1)
+    pop = Population.build(fl)
+    assert pop.sizes.min() >= 1
+    assert np.isclose(pop.weights.sum(), 1.0)
+
+
+def test_round_batch_shapes_static_across_rounds():
+    fl = FLConfig(num_clients=6, cohort_size=3, epochs=1, epochs_max=3,
+                  local_batch=2, mean_samples=5, seed=2)
+    task = TokenTask(vocab=64, seq_len=8, num_clients=6)
+    pipe = FederatedPipeline(task, Population.build(fl), fl)
+    shapes = None
+    for r in range(4):
+        rb = pipe.round_batch(r)
+        s = (rb.data["tokens"].shape, rb.step_mask.shape, rb.meta.weight.shape)
+        if shapes is None:
+            shapes = s
+        assert s == shapes
+        # steps within k_max and consistent with the mask
+        assert np.all(rb.meta.num_steps <= pipe.k_max)
+        assert np.allclose(rb.step_mask.sum(1), rb.meta.num_steps)
+
+
+def test_epochs_max_varies_local_epochs():
+    fl = FLConfig(num_clients=4, cohort_size=4, sampling="full", epochs=2,
+                  epochs_max=5, local_batch=1, mean_samples=4, seed=3)
+    task = TokenTask(vocab=32, seq_len=4, num_clients=4)
+    pipe = FederatedPipeline(task, Population.build(fl), fl)
+    es = set()
+    for r in range(6):
+        es.update(pipe.round_batch(r).meta.epochs.tolist())
+    assert len(es) > 1
+    assert min(es) >= 2 and max(es) <= 5
+
+
+def test_fedavg_min_equalizes_steps():
+    fl = FLConfig(num_clients=5, cohort_size=3, algorithm="fedavg_min",
+                  local_batch=1, mean_samples=6, imbalance="lognormal", seed=4)
+    pipe = FederatedPipeline(TokenTask(vocab=32, seq_len=4, num_clients=5),
+                             Population.build(fl), fl)
+    rb = pipe.round_batch(0)
+    steps = rb.meta.num_steps[rb.meta.valid > 0]
+    assert len(set(steps.tolist())) == 1
+
+
+def test_drop_last_steps_reports_planned_vs_actual():
+    fl = FLConfig(num_clients=3, cohort_size=3, sampling="full", epochs=2,
+                  local_batch=1, mean_samples=4, drop_last_steps=1, seed=5)
+    pipe = FederatedPipeline(TokenTask(vocab=32, seq_len=4, num_clients=3),
+                             Population.build(fl), fl)
+    rb = pipe.round_batch(0)
+    assert np.all(rb.meta.num_steps_planned - rb.meta.num_steps == 1)
+
+
+def test_charlm_batches_deterministic():
+    task = CharLMTask(vocab=32, seq_len=8, num_clients=3)
+    idx = np.arange(4).reshape(2, 2)
+    b1 = task.batch(1, idx)["tokens"]
+    b2 = task.batch(1, idx)["tokens"]
+    assert np.array_equal(b1, b2)
+    assert b1.shape == (2, 2, 9)
+    assert b1.max() < 32
+
+
+def test_charlm_client_heterogeneity():
+    """Different clients produce different conditional distributions."""
+    task = CharLMTask(vocab=32, seq_len=64, num_clients=4, heterogeneity=0.9)
+    idx = np.arange(20).reshape(20, 1)
+    t0 = task.batch(0, idx)["tokens"].reshape(-1)
+    t1 = task.batch(1, idx)["tokens"].reshape(-1)
+    h0 = np.bincount(t0, minlength=32) / len(t0)
+    h1 = np.bincount(t1, minlength=32) / len(t1)
+    assert np.abs(h0 - h1).sum() > 0.1  # unigram distributions differ

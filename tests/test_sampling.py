@@ -1,0 +1,100 @@
+"""Client sampling + aggregation unbiasedness (paper §3, §4.2).
+
+Property-based: for any weights and any configured proper sampling, the
+inverse-probability aggregation  E[sum_{i in S} (w_i/p_i) z_i] = sum_i w_i z_i
+holds empirically, while the TFF sum-one aggregation is biased whenever
+dataset sizes are unbalanced (the paper's 3-client example is exact).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import FLConfig
+from repro.core.sampling import M_term, expected_cohort, probs, s_vector
+from repro.data.federated import FederatedPipeline, Population
+from repro.data.tasks import QuadraticTask
+
+
+def test_probs_closed_forms():
+    w = np.array([0.1, 0.2, 0.3, 0.4])
+    assert np.allclose(probs("full", 4, 2), 1.0)
+    assert np.allclose(probs("uniform", 4, 2), 0.5)
+    assert np.allclose(probs("independent", 4, 2, w), np.minimum(1, 2 * w))
+    assert np.allclose(s_vector("full", 4, 2), 0.0)
+    assert np.allclose(s_vector("uniform", 4, 2), (4 - 2) / 3)
+
+
+def test_importance_sampling_minimizes_M():
+    w = np.array([0.5, 0.25, 0.125, 0.0625, 0.0625])
+    m_unif = M_term("uniform", 5, 2, w)
+    m_is = M_term("independent", 5, 2, w)
+    assert m_is <= m_unif  # paper §5: M = (1-min w)/b under IS
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    sizes=st.lists(st.integers(1, 20), min_size=3, max_size=8),
+    kind=st.sampled_from(["uniform", "independent", "full"]),
+    b=st.integers(1, 3),
+)
+def test_empirical_inclusion_probabilities(sizes, kind, b):
+    """Realized cohorts match the declared p_i (the premise of w/p debiasing)."""
+    n = len(sizes)
+    b = min(b, n)
+    fl = FLConfig(num_clients=n, cohort_size=b, sampling=kind, seed=123)
+    pop = Population.build(fl, sizes=np.array(sizes))
+    pipe = FederatedPipeline(QuadraticTask(dim=n, assignment=tuple((i,) for i in range(n))), pop, fl)
+    p = pipe.inclusion_probs()
+    R = 400
+    counts = np.zeros(n)
+    for r in range(R):
+        for cid in pipe.sample_cohort(r):
+            counts[cid] += 1
+    emp = counts / R
+    assert np.all(np.abs(emp - p) < 5 * np.sqrt(p * (1 - p) / R) + 0.08)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    w=st.lists(st.floats(0.05, 1.0), min_size=3, max_size=6),
+    b=st.integers(2, 3),
+    seed=st.integers(0, 10_000),
+)
+def test_inverse_probability_aggregation_unbiased(w, b, seed):
+    """Monte-Carlo: E[sum_{i in S} w_i/p_i * z_i] ~= sum w_i z_i for uniform
+    b-of-n sampling — the paper's unbiased aggregation (§4.2)."""
+    rng = np.random.default_rng(seed)
+    w = np.array(w) / np.sum(w)
+    n = len(w)
+    b = min(b, n)
+    z = rng.normal(size=n)
+    p = b / n
+    target = np.sum(w * z)
+    R = 4000
+    draws = np.empty(R)
+    for r in range(R):
+        S = rng.choice(n, size=b, replace=False)
+        draws[r] = np.sum(w[S] / p * z[S])
+    est = draws.mean()
+    se = draws.std() / np.sqrt(R)
+    assert abs(est - target) < 6 * se + 1e-6
+
+
+def test_sum_one_bias_paper_example():
+    """Paper §4.2: clients with 1/2/3 points, 2-of-3 uniform sampling; the
+    expected sum-one contribution is 7/36, 16/45, 9/20 — NOT proportional to w."""
+    w = np.array([1, 2, 3]) / 6.0
+    cohorts = [(0, 1), (0, 2), (1, 2)]
+    exp = np.zeros(3)
+    for S in cohorts:
+        denom = sum(w[j] for j in S)
+        for i in S:
+            exp[i] += (1 / 3) * w[i] / denom
+    assert np.allclose(exp, [7 / 36, 16 / 45, 9 / 20])
+    assert not np.allclose(exp / exp.sum(), w, atol=1e-3)
+
+
+def test_expected_cohort_size():
+    w = np.array([0.4, 0.3, 0.2, 0.1])
+    assert expected_cohort("uniform", 4, 2) == pytest.approx(2.0)
+    assert expected_cohort("independent", 4, 2, w) == pytest.approx(np.minimum(1, 2 * w).sum())

@@ -1,0 +1,70 @@
+"""End-to-end behaviour tests: federated training improves a real model's loss,
+serving generates coherently, and the paper's headline ordering holds on the
+char-LM task (FedShuffle <= FedAvg in final local loss).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.configs.paper_tasks import CHARLM_TINY
+from repro.data.federated import FederatedPipeline, Population
+from repro.data.tasks import CharLMTask
+from repro.fed.losses import make_loss
+from repro.fed.train_loop import train
+from repro.models.model import build_model
+
+
+def _setup(algorithm="fedshuffle", server_opt="sgd", rounds=25, seed=0):
+    fl = FLConfig(num_clients=8, cohort_size=4, sampling="uniform", epochs=1,
+                  local_batch=2, algorithm=algorithm, local_lr=0.3,
+                  server_opt=server_opt, imbalance="lognormal", mean_samples=6,
+                  seed=seed)
+    task = CharLMTask(vocab=CHARLM_TINY.vocab, seq_len=32, num_clients=8)
+    pipe = FederatedPipeline(task, Population.build(fl), fl)
+    if algorithm in ("fedshuffle", "gen"):
+        # paper App. F convention: FedShuffle's eta_l is quoted for the client
+        # with the most local steps, i.e. eta_l := eta * K_max
+        import dataclasses
+        fl = dataclasses.replace(fl, local_lr=fl.local_lr * pipe.k_max)
+    model = build_model(CHARLM_TINY)
+    params = model.init(jax.random.PRNGKey(seed))
+    res = train(make_loss(model), params, pipe, fl, rounds, log_every=0)
+    return res
+
+
+def test_federated_training_reduces_loss():
+    res = _setup(rounds=25)
+    first = res.metrics.rows[0]["local_loss"]
+    last = np.mean([r["local_loss"] for r in res.metrics.rows[-5:]])
+    assert last < first - 0.3, (first, last)
+
+
+def test_fedshuffle_not_worse_than_fedavg_on_charlm():
+    # same data stream (identical seeds) — paper Table 2 ordering
+    last = {}
+    for alg in ("fedavg", "fedshuffle"):
+        res = _setup(algorithm=alg, rounds=30, seed=1)
+        last[alg] = np.mean([r["local_loss"] for r in res.metrics.rows[-5:]])
+    assert last["fedshuffle"] <= last["fedavg"] + 0.05
+
+
+def test_serving_after_training():
+    from repro.launch.serve import generate
+
+    res = _setup(rounds=5)
+    model = build_model(CHARLM_TINY)
+    prompts = jnp.zeros((2, 8), jnp.int32)
+    gen = generate(model, res.state.params, prompts, steps=4, cache_len=16)
+    assert gen.shape == (2, 4)
+    assert int(gen.max()) < CHARLM_TINY.vocab
+
+
+def test_wsd_schedule_shape():
+    from repro.fed.server import wsd_schedule
+
+    total = 100
+    vals = [wsd_schedule(r, total) for r in range(total)]
+    assert vals[0] < 1.0          # warmup
+    assert vals[50] == 1.0        # stable
+    assert vals[-1] < 0.2         # decayed
