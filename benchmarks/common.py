@@ -13,7 +13,7 @@ import numpy as np
 from repro.configs.base import FLConfig
 from repro.data.federated import FederatedPipeline, Population
 from repro.fed.rounds import as_device_batch, build_round_step
-from repro.fed.server import init_server
+from repro.fed.strategy import BoundStrategy, bind_strategy
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 
@@ -31,14 +31,21 @@ def paper_lr_convention(fl: FLConfig, pipe: FederatedPipeline) -> FLConfig:
 
 
 def run_fl(task, sizes, fl: FLConfig, init_params, loss_fn, rounds: int,
-           *, eval_fn=None, lr_convention=True):
+           *, strategy=None, eval_fn=None, lr_convention=True):
     """Generic FL driver returning the metric trace (no logging)."""
     pop = Population.build(fl, sizes=sizes) if sizes is not None else Population.build(fl)
     pipe = FederatedPipeline(task, pop, fl)
     if lr_convention:
-        fl = paper_lr_convention(fl, pipe)
-    state = init_server(fl, init_params)
-    step = jax.jit(build_round_step(loss_fn, fl, num_clients=fl.num_clients))
+        new_fl = paper_lr_convention(fl, pipe)
+        if isinstance(strategy, BoundStrategy) and new_fl != strategy.fl:
+            raise ValueError(
+                "run_fl's paper lr convention rewrites fl.local_lr; pass an "
+                "unbound strategy (or lr_convention=False) instead of one "
+                "bound over the original fl")
+        fl = new_fl
+    strat = bind_strategy(strategy, fl, loss_fn, num_clients=fl.num_clients)
+    state = strat.init(init_params)
+    step = jax.jit(build_round_step(loss_fn, strat, fl, num_clients=fl.num_clients))
     trace = []
     t0 = time.time()
     for r in range(rounds):

@@ -17,7 +17,7 @@ from repro.data.federated import FederatedPipeline, Population
 from repro.data.tasks import DuplicatedQuadraticTask
 from repro.fed.losses import make_quadratic_loss
 from repro.fed.rounds import as_device_batch, build_round_step
-from repro.fed.server import init_server
+from repro.fed.strategy import bind_strategy, strategy_for
 
 
 def main():
@@ -30,8 +30,9 @@ def main():
         fl = FLConfig(num_clients=3, cohort_size=3, sampling="full", epochs=1,
                       local_batch=1, algorithm=alg, local_lr=0.05, server_opt="sgd")
         pipe = FederatedPipeline(task, Population.build(fl, sizes=task.sizes()), fl)
-        state = init_server(fl, {"x": jnp.zeros(3)})
-        step = jax.jit(build_round_step(loss_fn, fl, num_clients=3))
+        strategy = bind_strategy(strategy_for(alg), fl, loss_fn, num_clients=3)
+        state = strategy.init({"x": jnp.zeros(3)})
+        step = jax.jit(build_round_step(loss_fn, strategy, fl, num_clients=3))
         for r in range(600):
             state, _ = step(state, as_device_batch(pipe.round_batch(r)))
         x = np.asarray(state.params["x"])

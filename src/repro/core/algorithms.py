@@ -26,27 +26,97 @@ Special cases (App. E.2):
 biased (§4.2).  The "gen" hybrid handles system-level interruptions (§4.3,
 Fig. 4): step sizes are scaled for the *planned* work, and clients that were
 cut short get FedNova-style update rescaling to stay consistent.
+
+Each of the three choices is a *registered primitive* (``C_KINDS`` /
+``W_KINDS`` / ``Q_KINDS``); a ``GenSpec`` names one primitive per slot and
+``repro.fed.strategy`` composes them (plus a server optimizer) into a full
+``FedStrategy``.  New behaviours plug in via ``register_c_kind`` & co instead
+of new branches.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Literal
+from typing import Callable
 
 import jax.numpy as jnp
-
-CKind = Literal["one", "steps", "steps_planned"]
-WKind = Literal["w", "nova", "nova_actual"]
-QKind = Literal["p", "sum_one"]
 
 
 @dataclass(frozen=True)
 class GenSpec:
-    """The (c, w~, q) parametrization of FedShuffleGen."""
+    """The (c, w~, q) parametrization of FedShuffleGen.
 
-    c: CKind = "steps"
-    w: WKind = "w"
-    q: QKind = "p"
+    Each field names a primitive registered in ``C_KINDS`` / ``W_KINDS`` /
+    ``Q_KINDS`` below.
+    """
 
+    c: str = "steps"
+    w: str = "w"
+    q: str = "p"
+
+
+# ---------------------------------------------------------------------------
+# Primitive registries.  All primitives are pure [C]-array functions of the
+# per-cohort ClientMeta; ``steps``/``planned`` are pre-clamped (>= 1).
+# ---------------------------------------------------------------------------
+
+# c-kind: (steps, planned) -> 1/c_i.  Note "steps" also uses the *planned*
+# step count: a client fixes its local step size before training (it cannot
+# know it will be interrupted), which is exactly why plain FedShuffle loses
+# consistency under interruptions and the "gen" hybrid adds update rescaling
+# (§4.3 / Fig. 4).
+C_KINDS: dict[str, Callable] = {
+    "one": lambda steps, planned: jnp.ones_like(steps),
+    "steps": lambda steps, planned: 1.0 / planned,
+    "steps_planned": lambda steps, planned: 1.0 / planned,
+}
+
+# w-kind: (meta, steps, planned) -> w~_i
+W_KINDS: dict[str, Callable] = {
+    "w": lambda meta, steps, planned: meta.weight,
+    # tau_eff from the cohort, debiased by p (exact for full participation)
+    "nova": lambda meta, steps, planned: meta.weight * jnp.sum(
+        meta.valid * (meta.weight / meta.prob) * steps) / steps,
+    "nova_actual": lambda meta, steps, planned: meta.weight * planned / steps,
+}
+
+
+def _q_sum_one(meta, num_clients, cohort_size):
+    # Algorithm 2 line 15: Delta = (n/b) * (1/sum_{j in S} w_j) * sum w_i Delta_i
+    q = jnp.sum(meta.valid * meta.weight) * (cohort_size / num_clients)
+    return jnp.maximum(q, 1e-12)
+
+
+# q-kind: (meta, num_clients, cohort_size) -> q_i^S
+Q_KINDS: dict[str, Callable] = {
+    "p": lambda meta, num_clients, cohort_size: meta.prob,
+    "sum_one": _q_sum_one,
+}
+
+
+def _register(registry: dict, slot: str, name: str, fn: Callable) -> None:
+    if name in registry:
+        raise ValueError(f"{slot}-kind {name!r} already registered")
+    registry[name] = fn
+
+
+def register_c_kind(name: str, fn: Callable) -> None:
+    """fn(steps, planned) -> 1/c_i ([C])."""
+    _register(C_KINDS, "c", name, fn)
+
+
+def register_w_kind(name: str, fn: Callable) -> None:
+    """fn(meta, steps, planned) -> w~_i ([C])."""
+    _register(W_KINDS, "w", name, fn)
+
+
+def register_q_kind(name: str, fn: Callable) -> None:
+    """fn(meta, num_clients, cohort_size) -> q_i^S ([C] or scalar)."""
+    _register(Q_KINDS, "q", name, fn)
+
+
+# ---------------------------------------------------------------------------
+# Presets (App. E.2) + the composed per-cohort math
+# ---------------------------------------------------------------------------
 
 PRESETS: dict[str, GenSpec] = {
     "fedshuffle": GenSpec(c="steps", w="w", q="p"),
@@ -66,47 +136,26 @@ def spec_for(algorithm: str) -> GenSpec:
     return PRESETS[algorithm]
 
 
-def lr_scale(spec: GenSpec, meta) -> jnp.ndarray:
-    """Per-client 1/c_i ([C]).  meta fields are [C] arrays.
-
-    Note "steps" also uses the *planned* step count: a client fixes its local
-    step size before training (it cannot know it will be interrupted), which
-    is exactly why plain FedShuffle loses consistency under interruptions and
-    the "gen" hybrid adds update rescaling (§4.3 / Fig. 4).
-    """
+def _steps(meta):
     steps = jnp.maximum(meta.num_steps, 1.0)
     planned = jnp.maximum(getattr(meta, "num_steps_planned", meta.num_steps), 1.0)
-    if spec.c == "one":
-        return jnp.ones_like(steps)
-    if spec.c in ("steps", "steps_planned"):
-        return 1.0 / planned
-    raise ValueError(spec.c)
+    return steps, planned
+
+
+def lr_scale(spec: GenSpec, meta) -> jnp.ndarray:
+    """Per-client 1/c_i ([C]).  meta fields are [C] arrays."""
+    if spec.c not in C_KINDS:
+        raise ValueError(spec.c)
+    return C_KINDS[spec.c](*_steps(meta))
 
 
 def agg_coeff(spec: GenSpec, meta, *, num_clients: int, cohort_size: int) -> jnp.ndarray:
     """Per-client aggregation coefficient w~_i / q_i^S * valid_i ([C])."""
-    w, p, valid = meta.weight, meta.prob, meta.valid
-    steps = jnp.maximum(meta.num_steps, 1.0)
-    planned = jnp.maximum(getattr(meta, "num_steps_planned", meta.num_steps), 1.0)
-
-    if spec.w == "w":
-        wt = w
-    elif spec.w == "nova":
-        # tau_eff from the cohort, debiased by p (exact for full participation)
-        tau_eff = jnp.sum(valid * (w / p) * steps)
-        wt = w * tau_eff / steps
-    elif spec.w == "nova_actual":
-        wt = w * planned / steps
-    else:
+    if spec.w not in W_KINDS:
         raise ValueError(spec.w)
-
-    if spec.q == "p":
-        q = p
-    elif spec.q == "sum_one":
-        # Algorithm 2 line 15: Delta = (n/b) * (1/sum_{j in S} w_j) * sum w_i Delta_i
-        q = jnp.sum(valid * w) * (cohort_size / num_clients)
-        q = jnp.maximum(q, 1e-12)
-    else:
+    if spec.q not in Q_KINDS:
         raise ValueError(spec.q)
-
-    return valid * wt / q
+    steps, planned = _steps(meta)
+    wt = W_KINDS[spec.w](meta, steps, planned)
+    q = Q_KINDS[spec.q](meta, num_clients, cohort_size)
+    return meta.valid * wt / q

@@ -132,15 +132,20 @@ class FederatedPipeline:
     # -- batch assembly ----------------------------------------------------
 
     def _equalized_steps(self, rnd: int, cohort: np.ndarray) -> int | None:
-        """FedAvgMin / FedAvgMean: a common fixed K for the whole cohort."""
-        if self.fl.algorithm not in ("fedavg_min", "fedavg_mean"):
+        """Equalized-K strategies (FedAvgMin / FedAvgMean): a common fixed K
+        for the whole cohort.  Whether (and how) to equalize is declared by
+        the registered strategy, so custom strategies can opt in too."""
+        from ..fed.strategy import equalized_mode  # deferred: avoids import cycle
+
+        mode = equalized_mode(self.fl.algorithm)
+        if mode is None:
             return None
         ks = [
             steps_for(int(self.population.sizes[int(c)]), self.epochs_for(rnd, int(c)),
                       self.fl.local_batch)
             for c in cohort
         ]
-        return int(min(ks)) if self.fl.algorithm == "fedavg_min" else int(round(np.mean(ks)))
+        return int(min(ks)) if mode == "min" else int(round(np.mean(ks)))
 
     def round_batch(self, rnd: int) -> RoundBatch:
         cohort = self.sample_cohort(rnd)

@@ -1,0 +1,13 @@
+"""Distribution layer: sharding rules for params, batches and decode caches."""
+from .sharding import (
+    batch_shardings,
+    cache_shardings,
+    param_spec,
+    params_shardings,
+    seq_batch_shardings,
+)
+
+__all__ = [
+    "param_spec", "params_shardings", "batch_shardings",
+    "seq_batch_shardings", "cache_shardings",
+]

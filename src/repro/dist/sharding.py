@@ -1,0 +1,163 @@
+"""Sharding rules: param-name pattern -> PartitionSpec, plus tree helpers.
+
+The rules follow the standard Megatron/GSPMD layout for the param trees built
+by ``models/model.py`` (blocks are stacked on a leading layer axis):
+
+* column-parallel weights (``wq``/``wk``/``wv``/``gate``/``up``/...) shard the
+  *output* (last) dim over the tensor-parallel axis;
+* row-parallel weights (``wo``/``down``/``out_proj``) shard the *input*
+  (second-to-last) dim, so each TP rank consumes the activation shard the
+  preceding column-parallel matmul produced;
+* the token embedding shards the vocab dim; ``lm_head`` is column-parallel;
+* MoE expert stacks ``[L, E, D, F]`` shard the expert dim over the TP axis
+  (expert parallelism);
+* norms / biases / gates / conv kernels are replicated.
+
+Every rule is subject to a divisibility fallback: if the target dim does not
+divide the axis size, the rule degrades (a matched-but-indivisible param is
+replicated with an explicit all-``None`` spec of its rank; an unmatched param
+gets the empty ``P()``).
+
+FSDP composes on top: ``fsdp=("data",)`` additionally shards the other weight
+dim over the given axes — the input dim for column-parallel weights, the last
+dim for row-parallel / embed / expert stacks (classic 2D TP x FSDP layout).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# leaf name -> which dim (negative, from the end) the TP axis shards
+_COL_PARALLEL = {
+    "wq", "wk", "wv", "gate", "up", "wdkv", "wkr", "wuk", "wuv",
+    "in_proj", "router", "lm_head", "patch_proj", "mtp_proj",
+}
+_ROW_PARALLEL = {"wo", "down", "out_proj"}
+_EMBED = {"embed"}
+
+
+def _axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    s = 1
+    for a in axes:
+        s *= mesh.shape[a]
+    return s
+
+
+def _divides(dim: int, mesh, axes) -> bool:
+    n = _axis_size(mesh, axes)
+    return n > 0 and dim % n == 0
+
+
+def param_spec(path: str, shape: tuple, mesh, *, tp: str = "model",
+               fsdp: Any = None) -> P:
+    """PartitionSpec for one parameter.
+
+    ``path`` is the "/"-joined key path (e.g. ``"blocks/attn/wq"``); ``shape``
+    its full shape including any leading stacked-layer dim.  ``fsdp`` is an
+    axis name or tuple of axis names for fully-sharded data parallelism, or
+    None.
+    """
+    rank = len(shape)
+    parts = path.split("/")
+    leaf = parts[-1]
+    spec: list = [None] * rank
+
+    tp_dim = None  # index the tp axis occupies (for fsdp placement)
+    if "experts" in parts and rank >= 3:
+        # expert stacks [L, E, D, F]: experts over the tp axis
+        e_dim = rank - 3
+        if not _divides(shape[e_dim], mesh, tp):
+            return P(*spec)
+        spec[e_dim] = tp
+        tp_dim = e_dim
+    elif leaf in _EMBED and rank == 2:
+        if not _divides(shape[0], mesh, tp):
+            return P(*spec)
+        spec[0] = tp
+        tp_dim = 0
+    elif leaf in _COL_PARALLEL and rank >= 2:
+        if not _divides(shape[-1], mesh, tp):
+            return P(*spec)
+        spec[-1] = tp
+        tp_dim = rank - 1
+    elif leaf in _ROW_PARALLEL and rank >= 2:
+        if not _divides(shape[-2], mesh, tp):
+            return P(*spec)
+        spec[-2] = tp
+        tp_dim = rank - 2
+    else:
+        # norms, biases, scalars, conv kernels: replicate
+        return P()
+
+    if fsdp:
+        axes = (fsdp,) if isinstance(fsdp, str) else tuple(fsdp)
+        # shard the other weight dim: the input dim for col-parallel, the
+        # output dim for row-parallel / embed / expert stacks
+        fsdp_dim = rank - 2 if tp_dim == rank - 1 else rank - 1
+        if spec[fsdp_dim] is None and _divides(shape[fsdp_dim], mesh, axes):
+            spec[fsdp_dim] = axes
+    return P(*spec)
+
+
+def _path_str(key_path) -> str:
+    out = []
+    for k in key_path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return "/".join(out)
+
+
+def params_shardings(params, mesh, *, tp: str = "model", fsdp: Any = None):
+    """NamedSharding tree mirroring ``params`` under the param_spec rules."""
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: NamedSharding(
+            mesh, param_spec(_path_str(kp), tuple(leaf.shape), mesh, tp=tp, fsdp=fsdp)
+        ),
+        params,
+    )
+
+
+def _leading_dim_sharding(mesh, axes, dim: int, leaf) -> NamedSharding:
+    spec: list = [None] * len(leaf.shape)
+    if dim < len(leaf.shape) and _divides(leaf.shape[dim], mesh, axes):
+        spec[dim] = tuple(axes) if not isinstance(axes, str) else axes
+    return NamedSharding(mesh, P(*spec))
+
+
+def batch_shardings(data, mesh, *, client_axis):
+    """vmapped-cohort batches: leaves [C, K, B, ...]; the client dim is split
+    over the data axes (one cohort slot per dp slice)."""
+    return jax.tree.map(lambda l: _leading_dim_sharding(mesh, client_axis, 0, l), data)
+
+
+def seq_batch_shardings(data, mesh, *, dp_axis):
+    """sequential-cohort batches: leaves [C, K, B, ...]; each scanned client's
+    local batch B is split over the data axes (the whole mesh serves one
+    client at a time)."""
+    return jax.tree.map(lambda l: _leading_dim_sharding(mesh, dp_axis, 2, l), data)
+
+
+def cache_shardings(layers, mesh, *, dp_axis, shard_seq: bool = False):
+    """Decode caches: leaves [L, B, S|H, ...]; batch over the data axes, and —
+    for batch=1 long-context serving — the sequence/state dim over the TP
+    axis (``shard_seq``)."""
+
+    def one(leaf):
+        spec: list = [None] * len(leaf.shape)
+        if len(leaf.shape) >= 2 and _divides(leaf.shape[1], mesh, dp_axis):
+            spec[1] = tuple(dp_axis) if not isinstance(dp_axis, str) else dp_axis
+        if shard_seq and len(leaf.shape) >= 3 and _divides(leaf.shape[2], mesh, "model"):
+            spec[2] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, layers)

@@ -1,6 +1,25 @@
 from .rounds import as_device_batch, build_round_step
 from .server import ServerState, apply_server, init_server, wsd_schedule, cosine_schedule
+from .strategy import (
+    SERVER_OPTS,
+    STRATEGIES,
+    BoundStrategy,
+    FedStrategy,
+    ServerOpt,
+    ServerTransform,
+    bind_strategy,
+    chain,
+    heavy_ball,
+    register_local_update,
+    register_server_opt,
+    register_strategy,
+    strategy_for,
+)
 from .train_loop import train
 
 __all__ = ["as_device_batch", "build_round_step", "ServerState", "apply_server",
-           "init_server", "wsd_schedule", "cosine_schedule", "train"]
+           "init_server", "wsd_schedule", "cosine_schedule", "train",
+           "FedStrategy", "BoundStrategy", "ServerOpt", "ServerTransform",
+           "STRATEGIES", "SERVER_OPTS", "strategy_for", "bind_strategy",
+           "register_strategy", "register_server_opt", "register_local_update",
+           "chain", "heavy_ball"]

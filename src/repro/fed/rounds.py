@@ -1,11 +1,13 @@
-"""The federated round step — the paper's Algorithm 1/3/4 as one jitted fn.
+"""The federated round step — a thin jit-able driver over a FedStrategy.
 
-``build_round_step(loss_fn, fl, num_clients)`` returns
+``build_round_step(loss_fn, strategy, fl, num_clients)`` returns
 
     round_step(state: ServerState, batch: RoundBatch-as-jnp, lr_mult) ->
         (ServerState, metrics)
 
-with two cohort execution modes:
+The driver owns ONLY cohort execution; everything algorithm-specific (local
+step sizes, aggregation coefficients, server optimizer) comes from the bound
+strategy hooks (``repro.fed.strategy``).  Two cohort execution modes:
 
 * ``vmapped``    — clients of the cohort run in parallel (``jax.vmap``); on a
   mesh the client axis is sharded over (pod, data) and each client's local
@@ -18,6 +20,10 @@ Both modes compute *identical* math:
     Delta = sum_i coeff_i * (y_i - x),   coeff_i = valid_i * w~_i / q_i^S
     x    <- x + eta_g * Delta            (+ server optimizer state)
 with per-client local steps  y <- y - (eta_l / c_i) * g  (masked RR scan).
+
+Legacy call style ``build_round_step(loss_fn, fl, num_clients=...)`` still
+works: the FLConfig's ``algorithm``/``server_opt`` strings resolve through
+the strategy registry (see :func:`repro.fed.strategy.strategy_for`).
 """
 from __future__ import annotations
 
@@ -27,27 +33,35 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import FLConfig
-from ..core.algorithms import agg_coeff, lr_scale, spec_for
-from ..core.local import full_local_gradient, local_mvr, local_sgd
 from ..utils.pytree import tree_zeros_like
-from .server import ServerState, apply_server
+from .server import ServerState
+from .strategy import BoundStrategy, FedStrategy, RoundCtx, bind_strategy
 
 
-def build_round_step(loss_fn: Callable, fl: FLConfig, num_clients: int) -> Callable:
-    spec = spec_for(fl.algorithm)
-    use_mvr = fl.server_opt == "mvr"
-
-    def one_client(params, momentum, data_i, mask_i, eta_i):
-        if use_mvr:
-            return local_mvr(loss_fn, params, momentum, data_i, mask_i, eta_i, fl.mvr_a)
-        return local_sgd(loss_fn, params, data_i, mask_i, eta_i)
+def build_round_step(loss_fn: Callable,
+                     strategy: "FedStrategy | BoundStrategy | FLConfig | None" = None,
+                     fl: FLConfig | None = None, num_clients: int | None = None) -> Callable:
+    if isinstance(strategy, FLConfig):
+        # legacy signature build_round_step(loss_fn, fl[, num_clients])
+        if isinstance(fl, int) and num_clients is None:
+            num_clients = fl
+        elif fl is not None:
+            raise TypeError("pass either (strategy, fl) or the legacy (fl, num_clients)")
+        strategy, fl = None, strategy
+    if not isinstance(strategy, BoundStrategy):
+        if fl is None:
+            raise TypeError("build_round_step needs an FLConfig (fl=...)")
+        if num_clients is None:
+            num_clients = fl.num_clients
+    # a BoundStrategy passes through bind_strategy, which validates that any
+    # fl/num_clients given here agree with the config it was bound over
+    strat = bind_strategy(strategy, fl, loss_fn, num_clients=num_clients)
+    fl, num_clients = strat.fl, strat.num_clients
+    one_client = strat.local_step
 
     def round_step(state: ServerState, batch, lr_mult=1.0):
         meta = batch.meta
-        inv_c = lr_scale(spec, meta)                                   # [C]
-        coeff = agg_coeff(spec, meta, num_clients=num_clients,
-                          cohort_size=fl.cohort_size)                  # [C]
-        eta = fl.local_lr * lr_mult * inv_c                            # [C]
+        plan = strat.client_transform(meta, lr_mult)                   # eta [C]
         momentum = state.opt.get("m", None)
         if momentum is None:
             momentum = tree_zeros_like(state.params)
@@ -55,13 +69,13 @@ def build_round_step(loss_fn: Callable, fl: FLConfig, num_clients: int) -> Calla
         if fl.cohort_mode == "vmapped":
             deltas, losses = jax.vmap(
                 lambda d, m, e: one_client(state.params, momentum, d, m, e)
-            )(batch.data, batch.step_mask, eta)
-            delta_agg = jax.tree.map(
-                lambda t: jnp.einsum("c,c...->...", coeff.astype(jnp.float32),
-                                     t.astype(jnp.float32)).astype(t.dtype),
-                deltas,
-            )
-        else:  # sequential
+            )(batch.data, batch.step_mask, plan.eta)
+            delta_agg = strat.aggregate(deltas, meta)
+        else:  # sequential: the scan accumulates coeff_i * Delta_i as it goes,
+            # so the strategy contributes through agg_coeffs rather than the
+            # whole-cohort aggregate hook
+            coeff = strat.agg_coeffs(meta)                             # [C]
+
             def body(acc, xs):
                 data_i, mask_i, eta_i, coeff_i = xs
                 delta, loss = one_client(state.params, momentum, data_i, mask_i, eta_i)
@@ -74,60 +88,13 @@ def build_round_step(loss_fn: Callable, fl: FLConfig, num_clients: int) -> Calla
             acc_dt = jnp.dtype(fl.accum_dtype)
             acc0 = jax.tree.map(lambda x: jnp.zeros_like(x, acc_dt), state.params)
             delta_agg, losses = jax.lax.scan(
-                body, acc0, (batch.data, batch.step_mask, eta, coeff)
+                body, acc0, (batch.data, batch.step_mask, plan.eta, coeff)
             )
             delta_agg = jax.tree.map(lambda a, p: a.astype(p.dtype), delta_agg, state.params)
 
-        # ---- FedShuffleMVR momentum (eq. 14 exact, or App. F approximation)
-        new_opt = dict(state.opt)
-        if use_mvr:
-            wp = meta.valid * meta.weight / meta.prob                  # [C]
-            if fl.mvr_exact:
-                def grads_at(p):
-                    if fl.cohort_mode == "vmapped":
-                        gs = jax.vmap(lambda d, m: full_local_gradient(loss_fn, p, d, m))(
-                            batch.data, batch.step_mask)
-                        return jax.tree.map(
-                            lambda t: jnp.einsum("c,c...->...", wp.astype(jnp.float32), t), gs)
-                    def body(acc, xs):
-                        d, m, c = xs
-                        g = full_local_gradient(loss_fn, p, d, m)
-                        return jax.tree.map(lambda A, G: A + c * G, acc, g), None
-                    acc0 = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), p)
-                    out, _ = jax.lax.scan(body, acc0, (batch.data, batch.step_mask, wp))
-                    return out
-
-                G_x = grads_at(state.params)
-                G_prev = grads_at(state.opt["x_prev"])
-                # m_new = G_x + (1-a) * (m - G_prev)   [= eq. 14 rearranged]
-                new_opt["m"] = jax.tree.map(
-                    lambda gx, m, gp: gx + (1.0 - fl.mvr_a) * (m.astype(jnp.float32) - gp),
-                    G_x, momentum, G_prev,
-                )
-                new_opt["x_prev"] = state.params
-            else:
-                # App. F: grad-estimate from the aggregated update itself.
-                # With FedShuffle's c_i = K_i, Delta_i ~= -eta_l * mean grad_i,
-                # so g_hat = -Delta_agg / eta_l.  For unscaled-step algorithms
-                # (c_i = 1), Delta_i ~= -eta_l * K_i * mean grad_i, so divide
-                # by the cohort-average step count as well.
-                if spec.c == "one":
-                    wp_sum = jnp.maximum(jnp.sum(meta.valid * meta.weight / meta.prob), 1e-9)
-                    k_bar = jnp.sum(meta.valid * (meta.weight / meta.prob)
-                                    * meta.num_steps) / wp_sum
-                else:
-                    k_bar = 1.0
-                ghat = jax.tree.map(
-                    lambda d: -d.astype(jnp.float32) / (fl.local_lr * lr_mult * k_bar),
-                    delta_agg,
-                )
-                new_opt["m"] = jax.tree.map(
-                    lambda g, m: fl.mvr_a * g + (1.0 - fl.mvr_a) * m.astype(jnp.float32),
-                    ghat, momentum,
-                )
-
-        state = ServerState(params=state.params, opt=new_opt, rnd=state.rnd)
-        state = apply_server(fl, state, delta_agg, jnp.asarray(fl.server_lr, jnp.float32))
+        ctx = RoundCtx(batch=batch, lr_mult=lr_mult, momentum=momentum)
+        state = strat.server_update(state, delta_agg,
+                                    jnp.asarray(fl.server_lr, jnp.float32), ctx)
 
         valid_sum = jnp.maximum(meta.valid.sum(), 1.0)
         metrics = {

@@ -1,28 +1,21 @@
-"""Server state + server-side optimizers.
+"""Server state + LR schedules.
 
 Server semantics (descent form of Algorithm 1/3/4):
     ``x <- x + eta_g * Delta``  with  ``Delta = sum_{i in S} (w~_i/q_i^S) Delta_i``
 (Delta_i = y_i - x points *against* the local gradient, so adding it descends.)
 
-Optimizers on top of the aggregated pseudo-update:
-  * sgd       — x += lr * Delta
-  * momentum  — classic heavy-ball: m <- beta*m + Delta; x += lr*m
-  * mvr       — FedShuffleMVR (paper §5.1): the server *maintains a gradient
-                estimate* m (eq. 14) that clients use in their corrected local
-                steps (eq. 12-13); x itself still moves by +lr*Delta.  The
-                momentum update lives in rounds.py (it needs client gradients);
-                here we only hold the state.
-  * adam      — FedAdam (Reddi et al. 2020) on g = -Delta (beyond-paper).
+The server-side optimizers themselves (sgd / momentum / mvr / adam) are
+registered compositions in ``repro.fed.strategy`` (``SERVER_OPTS``);
+``init_server`` / ``apply_server`` remain as the legacy string-keyed entry
+points and delegate to that registry.
 """
 from __future__ import annotations
 
 from typing import Any, NamedTuple
 
-import jax
 import jax.numpy as jnp
 
 from ..configs.base import FLConfig
-from ..utils.pytree import tree_zeros_like
 
 
 class ServerState(NamedTuple):
@@ -32,44 +25,22 @@ class ServerState(NamedTuple):
 
 
 def init_server(fl: FLConfig, params) -> ServerState:
-    opt: dict = {}
-    if fl.server_opt == "momentum":
-        opt["m"] = tree_zeros_like(params)
-    elif fl.server_opt == "mvr":
-        opt["m"] = tree_zeros_like(params)       # gradient estimate (eq. 14)
-        if fl.mvr_exact:
-            opt["x_prev"] = params
-    elif fl.server_opt == "adam":
-        opt["mu"] = tree_zeros_like(params)
-        opt["nu"] = tree_zeros_like(params)
-    return ServerState(params=params, opt=opt, rnd=jnp.zeros((), jnp.int32))
+    from .strategy import server_opt_init  # deferred: strategy imports ServerState
+
+    return ServerState(params=params, opt=server_opt_init(fl, params),
+                       rnd=jnp.zeros((), jnp.int32))
 
 
 def apply_server(fl: FLConfig, state: ServerState, delta, lr: jnp.ndarray) -> ServerState:
-    """One server update given the aggregated pseudo-update ``delta``."""
-    p, opt = state.params, dict(state.opt)
-    if fl.server_opt == "sgd" or fl.server_opt == "mvr":
-        p = jax.tree.map(lambda a, d: a + (lr * d).astype(a.dtype), p, delta)
-    elif fl.server_opt == "momentum":
-        m = jax.tree.map(lambda m0, d: fl.momentum * m0 + d, opt["m"], delta)
-        opt["m"] = m
-        p = jax.tree.map(lambda a, m0: a + (lr * m0).astype(a.dtype), p, m)
-    elif fl.server_opt == "adam":
-        b1, b2, eps = 0.9, 0.99, 1e-8
-        g = jax.tree.map(lambda d: -d, delta)
-        mu = jax.tree.map(lambda m0, gl: b1 * m0 + (1 - b1) * gl, opt["mu"], g)
-        nu = jax.tree.map(lambda n0, gl: b2 * n0 + (1 - b2) * gl * gl, opt["nu"], g)
-        t = state.rnd.astype(jnp.float32) + 1.0
-        mu_hat = jax.tree.map(lambda m0: m0 / (1 - b1**t), mu)
-        nu_hat = jax.tree.map(lambda n0: n0 / (1 - b2**t), nu)
-        p = jax.tree.map(
-            lambda a, m0, n0: a - (lr * m0 / (jnp.sqrt(n0) + eps)).astype(a.dtype),
-            p, mu_hat, nu_hat,
-        )
-        opt["mu"], opt["nu"] = mu, nu
-    else:
-        raise ValueError(fl.server_opt)
-    return ServerState(params=p, opt=opt, rnd=state.rnd + 1)
+    """One server update given the aggregated pseudo-update ``delta``.
+
+    Legacy path without a round context: optimizers that estimate gradients
+    from client data (mvr) apply only their parameter step here — inside a
+    round the full ``server_update`` strategy hook runs instead.
+    """
+    from .strategy import apply_server_opt  # deferred: strategy imports ServerState
+
+    return apply_server_opt(fl, state, delta, lr)
 
 
 def wsd_schedule(rnd: int, total: int, warmup_frac: float = 0.05, decay_frac: float = 0.2) -> float:

@@ -1,0 +1,501 @@
+"""Composable federated strategies — the paper's Algorithm 4 as an API.
+
+A :class:`FedStrategy` declares the round recipe as a composition of four
+orthogonal pieces instead of string branches scattered through the engine:
+
+* a **(c, w~, q) parametrization** (:class:`~repro.core.algorithms.GenSpec`)
+  choosing the local step-size normalization, the aggregation weighting and
+  the aggregation normalization — the registries in ``repro.core.algorithms``;
+* a **server optimizer** from :data:`SERVER_OPTS` (``sgd`` / ``momentum`` /
+  ``mvr`` exact + App. F approx / ``adam``) — declared via :func:`chain` of
+  pseudo-update transforms or as a bespoke whole-state update;
+* a **local update rule** from :data:`LOCAL_UPDATES` (plain RR-SGD or the
+  MVR-corrected steps of eq. 12-13);
+* optionally an **equalized-step pipeline mode** (``fedavg_min`` /
+  ``fedavg_mean``), which the data pipeline must apply — binding such a
+  strategy against a config that would not equalize raises instead of
+  silently running plain FedAvg.
+
+:func:`bind_strategy` closes a strategy over a concrete ``FLConfig`` +
+``loss_fn`` and yields the pure pytree hooks the round driver
+(``repro.fed.rounds``) calls:
+
+    ``init(params) -> ServerState``
+    ``client_transform(meta, lr_mult) -> ClientPlan``      (per-client lr)
+    ``agg_coeffs(meta) -> [C]`` / ``aggregate(deltas, meta) -> delta_agg``
+    ``server_update(state, delta_agg, lr, ctx) -> ServerState``
+
+Aggregation contract: ``agg_coeffs`` is the primitive — the ``sequential``
+driver streams ``sum_i coeff_i * Delta_i`` through its scan, while the
+``vmapped`` driver calls ``aggregate`` on the stacked deltas.  The built-in
+``aggregate`` is exactly ``weighted_sum(deltas, agg_coeffs(meta))``; a
+hand-built BoundStrategy replacing it with anything non-linear holds only in
+``vmapped`` mode.
+
+The driver owns only cohort execution (vmap vs lax.scan); everything
+algorithm-specific lives here.  All preset compositions are bit-for-bit
+identical to the original monolithic implementation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import FLConfig
+from ..core import algorithms as _alg
+from ..core.algorithms import GenSpec, PRESETS, agg_coeff, lr_scale
+from ..core.local import full_local_gradient, local_mvr, local_sgd
+from ..utils.pytree import tree_zeros_like
+from .server import ServerState
+
+StrategyState = dict  # the server-side optimizer state (the ``opt`` dict)
+
+
+class RoundCtx(NamedTuple):
+    """Traced round inputs a server update may need beyond the delta.
+
+    ``batch`` is the device RoundBatch (data / step_mask / meta), ``lr_mult``
+    the schedule multiplier, and ``momentum`` the momentum tree the clients
+    used this round (zeros when the optimizer keeps none).  A ``None`` ctx
+    (legacy :func:`repro.fed.server.apply_server` path) applies only the
+    parameter step of the optimizer.
+    """
+
+    batch: Any
+    lr_mult: Any
+    momentum: Any
+
+
+class ClientPlan(NamedTuple):
+    """Per-client local-work plan: the step sizes eta_l * lr_mult / c_i ([C]).
+    (Which local-update *function* runs is a static choice — see
+    ``BoundStrategy.local_update`` / ``local_step``.)"""
+
+    eta: jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# Local update registry — fn(loss_fn, fl) -> one_client(params, momentum,
+# data_i, mask_i, eta_i) -> (delta, loss)
+# ---------------------------------------------------------------------------
+
+LOCAL_UPDATES: dict[str, Callable] = {
+    "sgd": lambda loss_fn, fl: (
+        lambda params, momentum, data_i, mask_i, eta_i:
+            local_sgd(loss_fn, params, data_i, mask_i, eta_i)),
+    "mvr": lambda loss_fn, fl: (
+        lambda params, momentum, data_i, mask_i, eta_i:
+            local_mvr(loss_fn, params, momentum, data_i, mask_i, eta_i, fl.mvr_a)),
+}
+
+
+def register_local_update(name: str, make: Callable) -> None:
+    """make(loss_fn, fl) -> one_client(params, momentum, data, mask, eta)."""
+    if name in LOCAL_UPDATES:
+        raise ValueError(f"local update {name!r} already registered")
+    LOCAL_UPDATES[name] = make
+
+
+# ---------------------------------------------------------------------------
+# Server optimizers.  Simple ones are declared as a `chain` of pseudo-update
+# transforms (optax-style) followed by the canonical descent application
+# ``x <- x + lr * delta'``; optimizers whose parameter step is not of that
+# form (adam) or that maintain a gradient estimate from client data (mvr)
+# provide a bespoke whole-state update.
+# ---------------------------------------------------------------------------
+
+
+class ServerTransform(NamedTuple):
+    """One link of a server chain.
+
+    ``init(fl, params) -> opt-state slice`` and
+    ``update(fl, delta, opt, state, ctx) -> (delta', opt-state updates)``.
+    """
+
+    init: Callable
+    update: Callable
+
+
+def heavy_ball() -> ServerTransform:
+    """Classic heavy-ball: m <- beta*m + Delta; the chain then applies lr*m."""
+
+    def init(fl: FLConfig, params):
+        return {"m": tree_zeros_like(params)}
+
+    def update(fl: FLConfig, delta, opt, state, ctx):
+        m = jax.tree.map(lambda m0, d: fl.momentum * m0 + d, opt["m"], delta)
+        return m, {"m": m}
+
+    return ServerTransform(init, update)
+
+
+class ServerOpt(NamedTuple):
+    """A registered server optimizer.
+
+    ``make_update(fl, gen, loss_fn, cohort_mode)`` returns the jit-able
+    ``update(state, delta_agg, lr, ctx) -> ServerState``; ``local_update``
+    names the client-side rule this optimizer pairs with (MVR's corrected
+    local steps need the server's gradient estimate).
+    """
+
+    name: str
+    init: Callable                 # (fl, params) -> opt dict
+    make_update: Callable
+    local_update: str = "sgd"
+
+
+def chain(name: str, *transforms: ServerTransform, local_update: str = "sgd") -> ServerOpt:
+    """Compose pseudo-update transforms into a server optimizer ending in the
+    descent application ``x <- x + (lr * delta').astype(x.dtype)``."""
+
+    def init(fl: FLConfig, params) -> dict:
+        opt: dict = {}
+        for t in transforms:
+            new = t.init(fl, params)
+            dup = set(new) & set(opt)
+            if dup:
+                raise ValueError(
+                    f"server chain {name!r}: transforms collide on opt-state "
+                    f"keys {sorted(dup)}")
+            opt.update(new)
+        return opt
+
+    def make_update(fl: FLConfig, gen, loss_fn, cohort_mode):
+        def update(state: ServerState, delta_agg, lr, ctx) -> ServerState:
+            opt = dict(state.opt)
+            d = delta_agg
+            for t in transforms:
+                d, new = t.update(fl, d, opt, state, ctx)
+                opt.update(new)
+            p = jax.tree.map(lambda a, dl: a + (lr * dl).astype(a.dtype),
+                             state.params, d)
+            return ServerState(params=p, opt=opt, rnd=state.rnd + 1)
+
+        return update
+
+    return ServerOpt(name, init, make_update, local_update)
+
+
+def _mvr_opt() -> ServerOpt:
+    """FedShuffleMVR (§5.1): x still moves by +lr*Delta, but the server
+    maintains the gradient estimate m of eq. 14 (exact) or its App. F
+    approximation, which clients consume in their corrected local steps."""
+
+    def init(fl: FLConfig, params) -> dict:
+        opt = {"m": tree_zeros_like(params)}    # gradient estimate (eq. 14)
+        if fl.mvr_exact:
+            opt["x_prev"] = params
+        return opt
+
+    def make_update(fl: FLConfig, gen: GenSpec, loss_fn, cohort_mode):
+        def update(state: ServerState, delta_agg, lr, ctx) -> ServerState:
+            opt = dict(state.opt)
+            if ctx is not None:
+                batch, meta = ctx.batch, ctx.batch.meta
+                momentum = ctx.momentum
+                wp = meta.valid * meta.weight / meta.prob              # [C]
+                if fl.mvr_exact:
+                    def grads_at(p):
+                        if cohort_mode == "vmapped":
+                            gs = jax.vmap(
+                                lambda d, m: full_local_gradient(loss_fn, p, d, m)
+                            )(batch.data, batch.step_mask)
+                            return jax.tree.map(
+                                lambda t: jnp.einsum(
+                                    "c,c...->...", wp.astype(jnp.float32), t), gs)
+
+                        def body(acc, xs):
+                            d, m, c = xs
+                            g = full_local_gradient(loss_fn, p, d, m)
+                            return jax.tree.map(lambda A, G: A + c * G, acc, g), None
+
+                        acc0 = jax.tree.map(
+                            lambda x: jnp.zeros_like(x, jnp.float32), p)
+                        out, _ = jax.lax.scan(
+                            body, acc0, (batch.data, batch.step_mask, wp))
+                        return out
+
+                    G_x = grads_at(state.params)
+                    G_prev = grads_at(opt["x_prev"])
+                    # m_new = G_x + (1-a) * (m - G_prev)   [= eq. 14 rearranged]
+                    opt["m"] = jax.tree.map(
+                        lambda gx, m, gp: gx + (1.0 - fl.mvr_a)
+                        * (m.astype(jnp.float32) - gp),
+                        G_x, momentum, G_prev,
+                    )
+                    opt["x_prev"] = state.params
+                else:
+                    # App. F: grad-estimate from the aggregated update itself.
+                    # With FedShuffle's c_i = K_i, Delta_i ~= -eta_l * mean
+                    # grad_i, so g_hat = -Delta_agg / eta_l.  For unscaled-step
+                    # strategies (c_i = 1), Delta_i ~= -eta_l * K_i * mean
+                    # grad_i, so divide by the cohort-average step count too.
+                    if gen.c == "one":
+                        wp_sum = jnp.maximum(
+                            jnp.sum(meta.valid * meta.weight / meta.prob), 1e-9)
+                        k_bar = jnp.sum(meta.valid * (meta.weight / meta.prob)
+                                        * meta.num_steps) / wp_sum
+                    else:
+                        k_bar = 1.0
+                    ghat = jax.tree.map(
+                        lambda d: -d.astype(jnp.float32)
+                        / (fl.local_lr * ctx.lr_mult * k_bar),
+                        delta_agg,
+                    )
+                    opt["m"] = jax.tree.map(
+                        lambda g, m: fl.mvr_a * g
+                        + (1.0 - fl.mvr_a) * m.astype(jnp.float32),
+                        ghat, momentum,
+                    )
+            p = jax.tree.map(lambda a, d: a + (lr * d).astype(a.dtype),
+                             state.params, delta_agg)
+            return ServerState(params=p, opt=opt, rnd=state.rnd + 1)
+
+        return update
+
+    return ServerOpt("mvr", init, make_update, local_update="mvr")
+
+
+def _adam_opt() -> ServerOpt:
+    """FedAdam (Reddi et al. 2020) on g = -Delta (beyond-paper)."""
+
+    def init(fl: FLConfig, params) -> dict:
+        return {"mu": tree_zeros_like(params), "nu": tree_zeros_like(params)}
+
+    def make_update(fl: FLConfig, gen, loss_fn, cohort_mode):
+        def update(state: ServerState, delta_agg, lr, ctx) -> ServerState:
+            opt = dict(state.opt)
+            b1, b2, eps = 0.9, 0.99, 1e-8
+            g = jax.tree.map(lambda d: -d, delta_agg)
+            mu = jax.tree.map(lambda m0, gl: b1 * m0 + (1 - b1) * gl, opt["mu"], g)
+            nu = jax.tree.map(lambda n0, gl: b2 * n0 + (1 - b2) * gl * gl,
+                              opt["nu"], g)
+            t = state.rnd.astype(jnp.float32) + 1.0
+            mu_hat = jax.tree.map(lambda m0: m0 / (1 - b1**t), mu)
+            nu_hat = jax.tree.map(lambda n0: n0 / (1 - b2**t), nu)
+            p = jax.tree.map(
+                lambda a, m0, n0: a - (lr * m0 / (jnp.sqrt(n0) + eps)).astype(a.dtype),
+                state.params, mu_hat, nu_hat,
+            )
+            opt["mu"], opt["nu"] = mu, nu
+            return ServerState(params=p, opt=opt, rnd=state.rnd + 1)
+
+        return update
+
+    return ServerOpt("adam", init, make_update)
+
+
+SERVER_OPTS: dict[str, ServerOpt] = {
+    "sgd": chain("sgd"),
+    "momentum": chain("momentum", heavy_ball()),
+    "mvr": _mvr_opt(),
+    "adam": _adam_opt(),
+}
+
+
+def register_server_opt(opt: ServerOpt) -> None:
+    if opt.name in SERVER_OPTS:
+        raise ValueError(f"server opt {opt.name!r} already registered")
+    SERVER_OPTS[opt.name] = opt
+
+
+def server_opt_init(fl: FLConfig, params) -> dict:
+    if fl.server_opt not in SERVER_OPTS:
+        raise ValueError(fl.server_opt)
+    return SERVER_OPTS[fl.server_opt].init(fl, params)
+
+
+# ---------------------------------------------------------------------------
+# FedStrategy: the declared composition + its registry
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class FedStrategy:
+    """A declared (c, w~, q) x server-opt composition.
+
+    ``server_opt=None`` defers to ``FLConfig.server_opt`` at bind time, so one
+    registered preset covers every server optimizer.  ``equalize`` marks the
+    strategies that only make sense with the equalized-K pipeline mode
+    (Table 4's FedAvgMin / FedAvgMean): the data pipeline applies it and
+    :func:`bind_strategy` refuses configurations that would not.
+    """
+
+    name: str
+    gen: GenSpec
+    server_opt: str | None = None
+    equalize: str | None = None       # None | "min" | "mean"
+
+    def with_server_opt(self, server_opt: str) -> "FedStrategy":
+        return replace(self, server_opt=server_opt)
+
+
+STRATEGIES: dict[str, FedStrategy] = {}
+
+
+def register_strategy(strategy: FedStrategy, *, overwrite: bool = False) -> FedStrategy:
+    if not overwrite and strategy.name in STRATEGIES:
+        raise ValueError(f"strategy {strategy.name!r} already registered")
+    if strategy.equalize not in (None, "min", "mean"):
+        raise ValueError(
+            f"strategy {strategy.name!r}: equalize must be None, 'min' or "
+            f"'mean', got {strategy.equalize!r}")
+    for slot, kind, registry in (("c", strategy.gen.c, _alg.C_KINDS),
+                                 ("w", strategy.gen.w, _alg.W_KINDS),
+                                 ("q", strategy.gen.q, _alg.Q_KINDS)):
+        if kind not in registry:
+            raise ValueError(f"strategy {strategy.name!r}: unknown {slot}-kind {kind!r}")
+    STRATEGIES[strategy.name] = strategy
+    return strategy
+
+
+_EQUALIZED_PRESETS = {"fedavg_min": "min", "fedavg_mean": "mean"}
+for _name, _gen in PRESETS.items():
+    register_strategy(FedStrategy(name=_name, gen=_gen,
+                                  equalize=_EQUALIZED_PRESETS.get(_name)))
+
+
+def strategy_for(algorithm: "str | FLConfig", *, server_opt: str | None = None) -> FedStrategy:
+    """Resolve a config string (or a whole FLConfig) to its FedStrategy.
+
+    This is the deprecation shim for the old string-dispatch API: everything
+    ``FLConfig.algorithm`` used to select is now a registered composition.
+    """
+    if isinstance(algorithm, FLConfig):
+        return strategy_for(algorithm.algorithm, server_opt=algorithm.server_opt)
+    if algorithm not in STRATEGIES:
+        raise KeyError(f"unknown strategy {algorithm!r}; have {sorted(STRATEGIES)}")
+    s = STRATEGIES[algorithm]
+    if server_opt is not None:
+        if s.server_opt is None:
+            s = s.with_server_opt(server_opt)
+        elif s.server_opt != server_opt:
+            raise ValueError(
+                f"strategy {algorithm!r} pins server_opt={s.server_opt!r}; "
+                f"requested {server_opt!r}")
+    return s
+
+
+def equalized_mode(algorithm: str) -> str | None:
+    """The equalized-step pipeline mode an algorithm requires (None, "min" or
+    "mean").  Raises for unregistered algorithm names so typos fail loudly."""
+    return strategy_for(algorithm).equalize
+
+
+# ---------------------------------------------------------------------------
+# Binding: close a FedStrategy over (FLConfig, loss_fn) into pure hooks
+# ---------------------------------------------------------------------------
+
+
+class BoundStrategy(NamedTuple):
+    name: str
+    gen: GenSpec
+    local_update: str                  # static local-rule selection
+    equalize: str | None
+    fl: FLConfig                       # the config the hooks closed over
+    num_clients: int
+    loss_fn: Callable                  # the loss the local/server hooks use
+    init: Callable                     # (params) -> ServerState
+    client_transform: Callable         # (meta, lr_mult) -> ClientPlan
+    agg_coeffs: Callable               # (meta) -> [C]
+    aggregate: Callable                # (deltas, meta) -> delta_agg
+    server_update: Callable            # (state, delta_agg, lr, ctx) -> ServerState
+    local_step: Callable               # one_client(params, momentum, data, mask, eta)
+
+
+def weighted_sum(deltas, coeff: jnp.ndarray):
+    """sum_i coeff_i * Delta_i over the leading client axis (fp32 accumulate,
+    result cast back to the delta dtype) — the canonical aggregation."""
+    return jax.tree.map(
+        lambda t: jnp.einsum("c,c...->...", coeff.astype(jnp.float32),
+                             t.astype(jnp.float32)).astype(t.dtype),
+        deltas,
+    )
+
+
+def bind_strategy(strategy: "FedStrategy | BoundStrategy | None", fl: FLConfig,
+                  loss_fn, *, num_clients: int) -> BoundStrategy:
+    if isinstance(strategy, BoundStrategy):
+        # bind-once-reuse: just validate agreement with what was bound
+        if fl is not None and fl != strategy.fl:
+            raise ValueError("fl differs from the config this strategy was bound over")
+        if num_clients is not None and num_clients != strategy.num_clients:
+            raise ValueError("num_clients differs from the bound strategy's")
+        if loss_fn is not None and loss_fn is not strategy.loss_fn:
+            raise ValueError("loss_fn differs from the one this strategy was bound over")
+        return strategy
+    if strategy is None:
+        strategy = strategy_for(fl)
+    # strict on purpose: raises for unregistered fl.algorithm, exactly like
+    # the pipeline will — better at bind time than at the first round_batch
+    pipeline_mode = equalized_mode(fl.algorithm)
+    if pipeline_mode != strategy.equalize:
+        # the pipeline keys its K-equalization off FLConfig.algorithm; any
+        # disagreement with the strategy silently runs different math than
+        # either name promises (equalized strategy on free-K batches == plain
+        # FedAvg; free-K strategy on equalized batches == a different recipe)
+        raise ValueError(
+            f"strategy {strategy.name!r} expects equalized-step pipeline mode "
+            f"{strategy.equalize!r}, but FLConfig.algorithm={fl.algorithm!r} "
+            f"makes the pipeline apply {pipeline_mode!r}. Set algorithm="
+            f"{strategy.name!r} (or register a strategy declaring "
+            f"equalize={pipeline_mode!r})."
+        )
+    if strategy.server_opt is not None and strategy.server_opt != fl.server_opt:
+        # a silent override would desync anything keyed off fl.server_opt
+        # (legacy init_server, logging/checkpoint metadata) from the actual
+        # update rule — e.g. adam opt state fed to a heavy-ball update
+        raise ValueError(
+            f"strategy {strategy.name!r} pins server_opt="
+            f"{strategy.server_opt!r} but FLConfig.server_opt is "
+            f"{fl.server_opt!r}; make them agree.")
+    server_opt = strategy.server_opt or fl.server_opt
+    if server_opt not in SERVER_OPTS:
+        raise ValueError(f"unknown server opt {server_opt!r}; have {sorted(SERVER_OPTS)}")
+    sdef = SERVER_OPTS[server_opt]
+    if sdef.local_update not in LOCAL_UPDATES:
+        raise ValueError(f"unknown local update {sdef.local_update!r}")
+    gen = strategy.gen
+
+    def init(params) -> ServerState:
+        return ServerState(params=params, opt=sdef.init(fl, params),
+                           rnd=jnp.zeros((), jnp.int32))
+
+    def client_transform(meta, lr_mult=1.0) -> ClientPlan:
+        inv_c = lr_scale(gen, meta)
+        return ClientPlan(eta=fl.local_lr * lr_mult * inv_c)
+
+    def agg_coeffs(meta) -> jnp.ndarray:
+        return agg_coeff(gen, meta, num_clients=num_clients,
+                         cohort_size=fl.cohort_size)
+
+    def aggregate(deltas, meta):
+        return weighted_sum(deltas, agg_coeffs(meta))
+
+    return BoundStrategy(
+        name=strategy.name,
+        gen=gen,
+        local_update=sdef.local_update,
+        equalize=strategy.equalize,
+        fl=fl,
+        num_clients=num_clients,
+        loss_fn=loss_fn,
+        init=init,
+        client_transform=client_transform,
+        agg_coeffs=agg_coeffs,
+        aggregate=aggregate,
+        server_update=sdef.make_update(fl, gen, loss_fn, fl.cohort_mode),
+        local_step=LOCAL_UPDATES[sdef.local_update](loss_fn, fl),
+    )
+
+
+def apply_server_opt(fl: FLConfig, state: ServerState, delta, lr) -> ServerState:
+    """Legacy one-shot server application (no round context): runs the
+    configured optimizer's parameter step on an aggregated pseudo-update."""
+    if fl.server_opt not in SERVER_OPTS:
+        raise ValueError(fl.server_opt)
+    sdef = SERVER_OPTS[fl.server_opt]
+    return sdef.make_update(fl, None, None, fl.cohort_mode)(state, delta, lr, None)

@@ -17,7 +17,8 @@ from ..data.federated import FederatedPipeline
 from ..utils.checkpoint import save_checkpoint
 from ..utils.logging import MetricLogger, log
 from .rounds import as_device_batch, build_round_step
-from .server import ServerState, cosine_schedule, init_server, wsd_schedule
+from .server import ServerState, cosine_schedule, wsd_schedule
+from .strategy import BoundStrategy, FedStrategy, bind_strategy
 
 SCHEDULES: dict[str, Callable[[int, int], float]] = {
     "constant": lambda r, total: 1.0,
@@ -41,6 +42,7 @@ def train(
     fl: FLConfig,
     rounds: int,
     *,
+    strategy: FedStrategy | BoundStrategy | None = None,
     eval_fn: Callable[[Any], dict] | None = None,
     eval_every: int = 50,
     schedule: str = "constant",
@@ -50,8 +52,9 @@ def train(
     name: str = "run",
 ) -> TrainResult:
     sched = SCHEDULES[schedule]
-    state = init_server(fl, init_params)
-    step = jax.jit(build_round_step(loss_fn, fl, num_clients=fl.num_clients))
+    strat = bind_strategy(strategy, fl, loss_fn, num_clients=fl.num_clients)
+    state = strat.init(init_params)
+    step = jax.jit(build_round_step(loss_fn, strat, fl, num_clients=fl.num_clients))
     ml = MetricLogger(name=name)
     t0 = time.time()
     for r in range(rounds):

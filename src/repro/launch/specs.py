@@ -32,7 +32,7 @@ from ..data.federated import ClientMeta, RoundBatch
 from ..dist.sharding import batch_shardings, cache_shardings, params_shardings, seq_batch_shardings
 from ..fed.losses import make_loss
 from ..fed.rounds import build_round_step
-from ..fed.server import init_server
+from ..fed.strategy import bind_strategy, strategy_for
 from ..models.model import build_model
 from .mesh import dp_axes, dp_size
 
@@ -82,8 +82,9 @@ def _train_data_specs(cfg: ArchConfig, C: int, K: int, B: int, seq: int) -> dict
 
 
 def train_setup(cfg: ArchConfig, shape: ShapeConfig, mesh, *, k_steps: int = 1,
-                cohort_mode: str | None = None, server_opt: str = "sgd",
-                fsdp_override: str | None = "auto", accum_dtype: str = "float32") -> Setup:
+                cohort_mode: str | None = None, algorithm: str = "fedshuffle",
+                server_opt: str = "sgd", fsdp_override: str | None = "auto",
+                accum_dtype: str = "float32") -> Setup:
     mode = cohort_mode or ("sequential" if cfg.name in SEQUENTIAL_ARCHS else "vmapped")
     dpx = dp_axes(mesh)
     dpn = dp_size(mesh)
@@ -95,16 +96,17 @@ def train_setup(cfg: ArchConfig, shape: ShapeConfig, mesh, *, k_steps: int = 1,
         B = max(1, shape.global_batch // C)
     fl = FLConfig(
         num_clients=max(64, C), cohort_size=C, sampling="uniform",
-        algorithm="fedshuffle", local_lr=1e-2, server_lr=1.0,
+        algorithm=algorithm, local_lr=1e-2, server_lr=1.0,
         server_opt=server_opt, cohort_mode=mode, local_batch=B, k_max=k_steps,
         accum_dtype=accum_dtype,
     )
     model = build_model(cfg)
     loss_fn = make_loss(model)
+    strategy = bind_strategy(strategy_for(fl), fl, loss_fn, num_clients=fl.num_clients)
 
     # state specs without allocation
     key = jax.random.PRNGKey(0)
-    state_spec = jax.eval_shape(lambda: init_server(fl, model.init(key)))
+    state_spec = jax.eval_shape(lambda: strategy.init(model.init(key)))
 
     batch = RoundBatch(
         data=_train_data_specs(cfg, C, k_steps, B, shape.seq_len),
@@ -137,7 +139,7 @@ def train_setup(cfg: ArchConfig, shape: ShapeConfig, mesh, *, k_steps: int = 1,
             meta=_replicated(mesh, batch.meta),
         )
 
-    round_step = build_round_step(loss_fn, fl, num_clients=fl.num_clients)
+    round_step = build_round_step(loss_fn, strategy, fl, num_clients=fl.num_clients)
     return Setup(
         name=f"{cfg.name}/{shape.name}",
         fn=round_step,

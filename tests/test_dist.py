@@ -46,6 +46,9 @@ def test_fsdp_rules():
     assert spec == P(None, ("data",), "model")
     spec = param_spec("blocks/attn/wo", (80, 8192, 8192), MESH, fsdp=("data",))
     assert spec == P(None, "model", ("data",))
+    # embed: vocab holds the tp axis, fsdp shards the model dim
+    assert param_spec("embed", (152064, 8192), MESH, fsdp=("data",)) == \
+        P("model", ("data",))
 
 
 def test_expert_parallel_rules():
@@ -54,6 +57,9 @@ def test_expert_parallel_rules():
         P(None, "model", None, None)
     assert param_spec("blocks/moe/experts/down", (61, 256, 2048, 7168), MESH) == \
         P(None, "model", None, None)
+    # fsdp composes on top: the last weight dim over the data axes
+    assert param_spec("blocks/moe/experts/up", (61, 256, 7168, 2048), MESH,
+                      fsdp=("data",)) == P(None, "model", None, ("data",))
 
 
 SUBPROC = textwrap.dedent("""
@@ -75,7 +81,10 @@ SUBPROC = textwrap.dedent("""
         setup = make_setup(cfg, ShapeConfig("t", seq, gb, kind), mesh)
         with mesh:
             c = jax.jit(setup.fn, in_shardings=setup.in_shardings).lower(*setup.args).compile()
-        out[f"{arch}/{kind}"] = c.cost_analysis().get("flops", 0) > 0
+        ca = c.cost_analysis()
+        if isinstance(ca, list):  # older jax: one dict per computation
+            ca = ca[0]
+        out[f"{arch}/{kind}"] = ca.get("flops", 0) > 0
     print(json.dumps(out))
 """)
 

@@ -10,7 +10,7 @@ from repro.data.federated import FederatedPipeline, Population
 from repro.data.tasks import DuplicatedQuadraticTask
 from repro.fed.losses import make_quadratic_loss
 from repro.fed.rounds import as_device_batch, build_round_step
-from repro.fed.server import init_server
+from repro.fed.strategy import bind_strategy
 
 TASK = DuplicatedQuadraticTask(copies=(1, 2, 3))
 LOSS = make_quadratic_loss(3)
@@ -56,8 +56,9 @@ def _run(opt, exact=False, rounds=400, lr=0.05, sampling="uniform", cohort=1, se
                   server_opt=opt, mvr_a=0.1, mvr_exact=exact, seed=seed)
     pop = Population.build(fl, sizes=TASK.sizes())
     pipe = FederatedPipeline(TASK, pop, fl)
-    state = init_server(fl, {"x": jnp.zeros(3)})
-    step = jax.jit(build_round_step(LOSS, fl, num_clients=3))
+    strategy = bind_strategy(None, fl, LOSS, num_clients=3)  # resolved from fl
+    state = strategy.init({"x": jnp.zeros(3)})
+    step = jax.jit(build_round_step(LOSS, strategy, fl, num_clients=3))
     for r in range(rounds):
         state, _ = step(state, as_device_batch(pipe.round_batch(r)))
     x = np.asarray(state.params["x"])

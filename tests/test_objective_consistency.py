@@ -15,7 +15,7 @@ from repro.data.federated import FederatedPipeline, Population
 from repro.data.tasks import DuplicatedQuadraticTask, QuadraticTask
 from repro.fed.losses import make_quadratic_loss
 from repro.fed.rounds import as_device_batch, build_round_step
-from repro.fed.server import init_server
+from repro.fed.strategy import bind_strategy, strategy_for
 
 TASK = DuplicatedQuadraticTask(copies=(1, 2, 3))
 LOSS = make_quadratic_loss(3)
@@ -29,8 +29,9 @@ def run(alg, rounds=500, lr=0.05, sampling="full", cohort=3, opt="sgd", seed=0,
                   drop_last_steps=drop_last)
     pop = Population.build(fl, sizes=TASK.sizes())
     pipe = FederatedPipeline(TASK, pop, fl)
-    state = init_server(fl, {"x": jnp.zeros(3)})
-    step = jax.jit(build_round_step(LOSS, fl, num_clients=3))
+    strategy = bind_strategy(strategy_for(fl), fl, LOSS, num_clients=3)
+    state = strategy.init({"x": jnp.zeros(3)})
+    step = jax.jit(build_round_step(LOSS, strategy, fl, num_clients=3))
     for r in range(rounds):
         state, _ = step(state, as_device_batch(pipe.round_batch(r)))
     return np.asarray(state.params["x"])

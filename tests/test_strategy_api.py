@@ -1,0 +1,256 @@
+"""FedStrategy API behaviours: registry resolution, misconfiguration guards
+(the fedavg_min/fedavg_mean silent-no-op fix), and extensibility (custom
+(c,w,q) kinds, custom strategies, chained server optimizers)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.core.algorithms import GenSpec, register_q_kind
+from repro.data.federated import FederatedPipeline, Population
+from repro.data.tasks import DuplicatedQuadraticTask
+from repro.fed.losses import make_quadratic_loss
+from repro.fed.rounds import as_device_batch, build_round_step
+from repro.fed.server import apply_server, init_server
+from repro.fed.strategy import (
+    FedStrategy,
+    ServerTransform,
+    bind_strategy,
+    chain,
+    register_server_opt,
+    register_strategy,
+    strategy_for,
+)
+
+TASK = DuplicatedQuadraticTask(copies=(1, 2, 3))
+LOSS = make_quadratic_loss(3)
+
+
+@pytest.fixture(autouse=True)
+def _registry_sandbox():
+    """Snapshot/restore the process-global registries so the registration
+    tests below are rerunnable and leak nothing into other modules."""
+    import repro.core.algorithms as alg
+    import repro.fed.strategy as strat
+
+    registries = (alg.C_KINDS, alg.W_KINDS, alg.Q_KINDS,
+                  strat.STRATEGIES, strat.SERVER_OPTS, strat.LOCAL_UPDATES)
+    snapshots = [dict(r) for r in registries]
+    yield
+    for registry, snapshot in zip(registries, snapshots):
+        registry.clear()
+        registry.update(snapshot)
+
+
+def _fl(**kw):
+    base = dict(num_clients=3, cohort_size=3, sampling="full", epochs=1,
+                local_batch=1, algorithm="fedshuffle", local_lr=0.05)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def _one_round(fl, strategy=None):
+    pipe = FederatedPipeline(TASK, Population.build(fl, sizes=TASK.sizes()), fl)
+    strat = bind_strategy(strategy, fl, LOSS, num_clients=fl.num_clients)
+    step = build_round_step(LOSS, strat, fl, num_clients=fl.num_clients)
+    state = strat.init({"x": jnp.zeros(3)})
+    return step(state, as_device_batch(pipe.round_batch(0)))
+
+
+# -- resolution --------------------------------------------------------------
+
+
+def test_strategy_for_resolves_config_strings():
+    s = strategy_for(_fl(algorithm="fednova", server_opt="momentum"))
+    assert s.name == "fednova"
+    assert s.gen == GenSpec(c="one", w="nova", q="p")
+    assert s.server_opt == "momentum"
+
+
+def test_strategy_for_unknown_name_raises():
+    with pytest.raises(KeyError, match="unknown strategy"):
+        strategy_for("fedavgg")
+
+
+def test_all_presets_resolve_and_bind():
+    for name in ("fedshuffle", "fedavg", "fedavg_so", "fedshuffle_so",
+                 "fednova", "fedavg_min", "fedavg_mean", "gen"):
+        fl = _fl(algorithm=name)
+        strat = bind_strategy(strategy_for(fl), fl, LOSS, num_clients=3)
+        assert strat.name == name
+
+
+# -- the fedavg_min / fedavg_mean misconfiguration guard ---------------------
+
+
+def test_equalized_strategy_with_mismatched_config_raises():
+    """fedavg_min without the equalized-K pipeline is silently plain FedAvg —
+    binding it against a config whose pipeline would not equalize must raise."""
+    with pytest.raises(ValueError, match="equalized-step"):
+        bind_strategy(strategy_for("fedavg_min"), _fl(algorithm="fedavg"),
+                      LOSS, num_clients=3)
+
+
+def test_equalized_strategy_with_matching_config_binds():
+    fl = _fl(algorithm="fedavg_mean")
+    strat = bind_strategy(strategy_for(fl), fl, LOSS, num_clients=3)
+    assert strat.equalize == "mean"
+    state, mets = _one_round(fl)
+    assert float(mets["delta_norm"]) > 0
+
+
+def test_non_equalized_strategy_with_equalizing_config_raises():
+    """The mirror direction: a free-K strategy on a config whose pipeline
+    clamps every cohort to min-K is also silently-wrong math."""
+    with pytest.raises(ValueError, match="equalized-step"):
+        bind_strategy(strategy_for("fedshuffle"), _fl(algorithm="fedavg_min"),
+                      LOSS, num_clients=3)
+
+
+def test_bind_is_idempotent_on_bound_strategies():
+    """bind once, reuse in train() / build_round_step; any disagreement with
+    what was bound (config, cohort size, loss) raises instead of silently
+    running the bound-over values."""
+    fl = _fl()
+    strat = bind_strategy(None, fl, LOSS, num_clients=3)
+    assert bind_strategy(strat, fl, LOSS, num_clients=3) is strat
+    with pytest.raises(ValueError, match="bound"):
+        bind_strategy(strat, _fl(server_opt="adam"), LOSS, num_clients=3)
+    with pytest.raises(ValueError, match="num_clients"):
+        bind_strategy(strat, fl, LOSS, num_clients=5)
+    with pytest.raises(ValueError, match="loss_fn"):
+        bind_strategy(strat, fl, make_quadratic_loss(3), num_clients=3)
+
+
+def test_bound_strategy_rejects_mismatched_config():
+    fl = _fl(cohort_mode="vmapped")
+    strat = bind_strategy(None, fl, LOSS, num_clients=3)
+    other = _fl(cohort_mode="sequential")
+    with pytest.raises(ValueError, match="bound"):
+        build_round_step(LOSS, strat, other)
+    with pytest.raises(ValueError, match="num_clients"):
+        build_round_step(LOSS, strat, fl, num_clients=5)
+    # omitting fl entirely is fine — the bound strategy carries it
+    assert callable(build_round_step(LOSS, strat))
+
+
+def test_bind_rejects_unregistered_config_algorithm():
+    """Even with an explicit strategy, an unregistered FLConfig.algorithm
+    fails at bind time (the pipeline would reject it at round_batch anyway)."""
+    with pytest.raises(KeyError, match="unknown strategy"):
+        bind_strategy(strategy_for("fedshuffle"), _fl(algorithm="my_custom"),
+                      LOSS, num_clients=3)
+
+
+def test_pipeline_rejects_unregistered_algorithm():
+    fl = _fl(algorithm="fedavg_minn")  # typo: would silently run without K-equalization
+    pipe = FederatedPipeline(TASK, Population.build(fl, sizes=TASK.sizes()), fl)
+    with pytest.raises(KeyError, match="unknown strategy"):
+        pipe.round_batch(0)
+
+
+# -- extensibility -----------------------------------------------------------
+
+
+def test_register_custom_strategy_new_composition():
+    """A new (c,w,q) combination — FedNova weighting with FedShuffle step
+    scaling — runs through the engine without touching it."""
+    strategy = register_strategy(FedStrategy(
+        name="nova_shuffled_test", gen=GenSpec(c="steps", w="nova", q="p")))
+    state, mets = _one_round(_fl(), strategy=strategy)
+    assert np.all(np.isfinite(np.asarray(state.params["x"])))
+    assert float(mets["delta_norm"]) > 0
+
+
+def test_register_strategy_validates_kinds():
+    with pytest.raises(ValueError, match="unknown w-kind"):
+        register_strategy(FedStrategy(name="bad_test", gen=GenSpec(w="nope")))
+    with pytest.raises(ValueError, match="already registered"):
+        register_strategy(FedStrategy(name="fedavg", gen=GenSpec()))
+    with pytest.raises(ValueError, match="equalize"):
+        register_strategy(FedStrategy(name="bad_eq_test", gen=GenSpec(),
+                                      equalize="max"))
+
+
+def test_chain_rejects_colliding_state_keys():
+    from repro.fed import heavy_ball
+    from repro.fed.strategy import server_opt_init
+
+    register_server_opt(chain("double_hb_test", heavy_ball(), heavy_ball()))
+    with pytest.raises(ValueError, match="collide"):
+        server_opt_init(_fl(server_opt="double_hb_test"), {"x": jnp.zeros(3)})
+
+
+def test_pinned_server_opt_conflicts_raise():
+    """A strategy that pins its server optimizer must agree with the config —
+    a silent override would desync fl-keyed state (init_server, logging)."""
+    pinned = register_strategy(FedStrategy(
+        name="pinned_opt_test", gen=GenSpec(), server_opt="momentum"))
+    with pytest.raises(ValueError, match="pins server_opt"):
+        bind_strategy(pinned, _fl(server_opt="adam"), LOSS, num_clients=3)
+    with pytest.raises(ValueError, match="pins server_opt"):
+        strategy_for("pinned_opt_test", server_opt="adam")
+    # agreement binds fine
+    strat = bind_strategy(pinned, _fl(server_opt="momentum"), LOSS, num_clients=3)
+    assert "m" in strat.init({"x": jnp.zeros(3)}).opt
+
+
+def test_register_custom_q_kind():
+    register_q_kind("unit_test_q", lambda meta, n, b: jnp.ones_like(meta.prob))
+    strategy = register_strategy(FedStrategy(
+        name="unnormalized_test", gen=GenSpec(c="one", w="w", q="unit_test_q")))
+    fl = _fl()
+    strat = bind_strategy(strategy, fl, LOSS, num_clients=3)
+    pipe = FederatedPipeline(TASK, Population.build(fl, sizes=TASK.sizes()), fl)
+    meta = as_device_batch(pipe.round_batch(0)).meta
+    # with q == 1 the coefficients are just valid * w
+    np.testing.assert_allclose(np.asarray(strat.agg_coeffs(meta)),
+                               np.asarray(meta.valid * meta.weight))
+
+
+def test_chain_custom_server_opt():
+    """A chained server optimizer (delta clipping -> descent) plugs in as a
+    declared composition."""
+
+    import jax
+
+    def clip_transform(limit):
+        return ServerTransform(
+            init=lambda fl, params: {},
+            update=lambda fl, delta, opt, state, ctx: (
+                jax.tree.map(lambda d: jnp.clip(d, -limit, limit), delta), {}),
+        )
+
+    register_server_opt(chain("clipped_sgd_test", clip_transform(1e-4)))
+    fl = _fl(server_opt="clipped_sgd_test", server_lr=1.0)
+    state, _ = _one_round(fl)
+    # every coordinate moved by at most lr * limit per round
+    assert np.max(np.abs(np.asarray(state.params["x"]))) <= 1e-4 + 1e-12
+
+
+# -- legacy entry points -----------------------------------------------------
+
+
+def test_init_server_and_apply_server_still_resolve():
+    fl = _fl(server_opt="momentum")
+    state = init_server(fl, {"x": jnp.zeros(3)})
+    assert set(state.opt) == {"m"}
+    state2 = apply_server(fl, state, {"x": jnp.ones(3)}, jnp.float32(0.5))
+    np.testing.assert_allclose(np.asarray(state2.params["x"]), 0.5)
+    assert int(state2.rnd) == 1
+
+
+def test_apply_server_mvr_without_ctx_is_param_step_only():
+    fl = _fl(server_opt="mvr")
+    state = init_server(fl, {"x": jnp.zeros(3)})
+    state2 = apply_server(fl, state, {"x": jnp.ones(3)}, jnp.float32(1.0))
+    np.testing.assert_allclose(np.asarray(state2.params["x"]), 1.0)
+    np.testing.assert_allclose(np.asarray(state2.opt["m"]["x"]), 0.0)
+
+
+def test_unknown_server_opt_raises():
+    fl = _fl(server_opt="sgdd")
+    with pytest.raises(ValueError):
+        init_server(fl, {"x": jnp.zeros(3)})
+    with pytest.raises(ValueError, match="unknown server opt"):
+        bind_strategy(None, fl, LOSS, num_clients=3)
