@@ -1,0 +1,167 @@
+"""Cohort-engine benchmark: host assembly vs device-resident data plane.
+
+For population sizes 1e3 / 1e5 / 1e6 (quadratic task, uniform 64-client
+cohorts) measures rounds/sec of:
+
+* ``legacy``           — FederatedPipeline host assembly + full data copy
+* ``engine``           — device gather + on-device RR, prefetch OFF
+* ``engine_prefetch``  — same, async scheduler at depth 2 (host overlapped)
+* ``engine_host_rr``   — device gather but host PCG indices (bitwise path)
+
+Writes ``BENCH_cohort.json`` at the repo root (the committed perf-trajectory
+baseline) and ``benchmarks/results/bench_cohort.csv`` (CI artifact).
+``--check`` asserts the acceptance bar: engine_prefetch >= 2x legacy
+rounds/sec on the quadratic task at every measured population size.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FLConfig
+from repro.data.federated import FederatedPipeline, Population
+from repro.data.tasks import PopulationQuadraticTask
+from repro.fed.cohort import CohortEngine
+from repro.fed.losses import make_quadratic_loss
+from repro.fed.rounds import as_device_batch, build_round_step
+from repro.fed.strategy import bind_strategy, strategy_for
+
+from .common import RESULTS_DIR, csv_row
+
+BASELINE_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_cohort.json")
+
+# The regime the engine exists for: wide cohorts of small local batches,
+# where the legacy path is bound by its per-client python assembly loop
+# (C=256 slots x 16 RR steps/round), not by the jitted round compute.
+DIM = 8
+COHORT = 256
+SAMPLES = 16
+
+
+def _fl(pop: int, **kw) -> FLConfig:
+    return FLConfig(num_clients=pop, cohort_size=COHORT, sampling="uniform",
+                    epochs=2, local_batch=2, algorithm="fedshuffle",
+                    local_lr=0.05, imbalance="equal", mean_samples=SAMPLES,
+                    seed=7, **kw)
+
+
+WARMUP = 5
+
+
+def _time_rounds(run_one, rounds: int) -> float:
+    for r in range(WARMUP):
+        state = run_one(r)
+    jax.block_until_ready(state.params)
+    t0 = time.perf_counter()
+    for r in range(WARMUP, WARMUP + rounds):
+        state = run_one(r)
+    jax.block_until_ready(state.params)
+    return rounds / (time.perf_counter() - t0)
+
+
+def _time_engine(eng, step, state, rounds: int, prefetch: int) -> float:
+    """Warm up *through* the prefetcher so the measured window is thread
+    steady-state, then time the remaining rounds."""
+    with eng.round_plans(WARMUP + rounds, prefetch=prefetch) as it:
+        for r, plan in it:
+            state, _ = step(state, plan)
+            if r == WARMUP - 1:
+                jax.block_until_ready(state.params)
+                t0 = time.perf_counter()
+        jax.block_until_ready(state.params)
+    return rounds / (time.perf_counter() - t0)
+
+
+def bench_population(pop: int, rounds: int) -> dict:
+    task = PopulationQuadraticTask(dim=DIM, num_clients=pop, samples_per_client=SAMPLES)
+    sizes = task.sizes()
+    loss = make_quadratic_loss(DIM)
+    params = {"x": jnp.zeros(DIM)}
+    out: dict = {}
+
+    # -- legacy: host assembly + full data copy every round
+    fl = _fl(pop)
+    pipe = FederatedPipeline(task, Population.build(fl, sizes=sizes), fl)
+    strat = bind_strategy(strategy_for(fl), fl, loss, num_clients=pop)
+    step = jax.jit(build_round_step(loss, strat, fl, num_clients=pop))
+    state = strat.init(params)
+
+    def legacy_one(r, _s=[state]):
+        _s[0], _ = step(_s[0], as_device_batch(pipe.round_batch(r)))
+        return _s[0]
+
+    out["legacy"] = _time_rounds(legacy_one, rounds)
+
+    # -- engine variants (same uniform iid sampling => same host sampling cost;
+    # the delta is purely the data plane + prefetch)
+    for name, backend, prefetch, participation in [
+        ("engine", "device_ref", 0, "iid"),
+        ("engine_prefetch", "device_ref", 2, "iid"),
+        ("engine_host_rr", "host", 2, "iid"),
+        # O(cohort) per-round sampling — the population-scale configuration
+        ("engine_floyd_prefetch", "device_ref", 2, "uniform_floyd"),
+    ]:
+        fl_e = _fl(pop, engine="cohort", rr_backend=backend, prefetch=prefetch,
+                   participation=participation)
+        eng = CohortEngine.build(task, Population.build(fl_e, sizes=sizes), fl_e)
+        strat_e = bind_strategy(strategy_for(fl_e), fl_e, loss, num_clients=pop)
+        step_e = jax.jit(build_round_step(loss, strat_e, fl_e, num_clients=pop,
+                                          plane=eng.plane))
+        st = strat_e.init(params)
+        st, _ = step_e(st, eng.device_plan(0))          # compile
+        jax.block_until_ready(st.params)
+        out[name] = _time_engine(eng, step_e, st, rounds, prefetch)
+
+    out["speedup_prefetch_vs_legacy"] = out["engine_prefetch"] / out["legacy"]
+    out["speedup_prefetch_vs_noprefetch"] = out["engine_prefetch"] / out["engine"]
+    return out
+
+
+def main(pops=(1_000, 100_000, 1_000_000), rounds: int = 60,
+         check: bool = False, write_baseline: bool = True) -> list[str]:
+    rows = []
+    results: dict = {"dim": DIM, "cohort": COHORT, "local_batch": 2, "epochs": 2,
+                     "samples_per_client": SAMPLES, "rounds_timed": rounds,
+                     "populations": {}}
+    for pop in pops:
+        res = bench_population(pop, rounds)
+        results["populations"][str(pop)] = res
+        for name, rps in res.items():
+            if name.startswith("speedup"):
+                continue
+            rows.append(csv_row(f"cohort/{pop}/{name}", 1.0 / rps,
+                                f"{rps:.1f}rps"))
+        print(f"pop={pop}: " + ", ".join(f"{k}={v:.1f}" for k, v in res.items()))
+        if check:
+            assert res["speedup_prefetch_vs_legacy"] >= 2.0, (pop, res)
+    if write_baseline:
+        import json
+
+        with open(BASELINE_PATH, "w") as f:
+            json.dump(results, f, indent=2, default=float)
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "bench_cohort.csv"), "w") as f:
+        f.write("name,us_per_call,derived\n")
+        f.writelines(r + "\n" for r in rows)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small populations / few rounds (CI smoke)")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--check", action="store_true",
+                    help="assert the >=2x acceptance bar")
+    args = ap.parse_args()
+    pops = (1_000, 10_000) if args.quick else (1_000, 100_000, 1_000_000)
+    rounds = args.rounds or (15 if args.quick else 60)
+    print("name,us_per_call,derived")
+    # --quick (CI smoke) must not clobber the committed full-size baseline
+    for row in main(pops=pops, rounds=rounds, check=args.check,
+                    write_baseline=not args.quick):
+        print(row)

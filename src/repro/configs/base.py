@@ -190,6 +190,15 @@ Sampling = Literal["full", "uniform", "independent"]
 Aggregation = Literal["unbiased", "sum_one"]
 ServerOpt = Literal["sgd", "momentum", "mvr", "adam"]
 CohortMode = Literal["vmapped", "sequential"]
+Engine = Literal["legacy", "cohort"]
+# Where the RR index matrices [C, K_max, B] come from:
+#   host        — numpy PCG permutations per cohort client (the seed semantics;
+#                 bitwise-identical to the legacy FederatedPipeline path)
+#   host_feistel — numpy counter-based swap-or-not permutations (bitwise-equal
+#                 to the device backends; useful for cross-checking)
+#   device_ref  — stateless swap-or-not generated inside the jitted round (jnp)
+#   device      — same math as a Pallas kernel (interpret-mode on CPU)
+RRBackend = Literal["host", "host_feistel", "device_ref", "device"]
 
 
 @dataclass(frozen=True)
@@ -218,6 +227,12 @@ class FLConfig:
     # distribution
     cohort_mode: CohortMode = "vmapped"
     accum_dtype: str = "float32"   # sequential-mode delta accumulator dtype
+    # cohort engine (population-scale data plane; repro.fed.cohort)
+    engine: Engine = "legacy"      # "cohort" => device-resident data plane
+    rr_backend: RRBackend = "host"
+    rr_rounds: int = 24            # swap-or-not cipher rounds (device/feistel RR)
+    prefetch: int = 2              # rounds sampled ahead by the async scheduler
+    participation: str = "iid"     # key into cohort.scheduler.PARTICIPATION
     # system heterogeneity (Fig. 4): every client is cut short by this many
     # local steps (planned vs actual); the "gen" hybrid algorithm corrects it
     drop_last_steps: int = 0

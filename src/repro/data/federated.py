@@ -5,9 +5,18 @@ shape arrays a jitted FL round consumes:
 
 * ``Population`` — client dataset sizes |D_i| (equal / log-normal / zipf
   imbalance), objective weights w_i = |D_i|/|D|.
-* ``RoundBatch`` — for the sampled cohort: data [C, K_max, B, ...], step masks,
-  per-client scalars (w_i, p_i, |D_i|, E_i, K_i).  All shapes static across
-  rounds, so the round step never recompiles.
+* ``IndexPlan`` — the *index-level* description of a round: RR index matrices
+  [C, K_max, B] (or None when the device generates them), step masks and
+  per-client scalars.  O(cohort) to build, O(cohort) to ship.
+* ``RoundBatch`` — the materialized plan: data [C, K_max, B, ...] gathered
+  through ``task.batch``.  All shapes static across rounds, so the round step
+  never recompiles.
+
+``FederatedPipeline`` is the **legacy / reference path**: it materializes
+every round batch on the host and copies it to the device.  The cohort
+engine (``repro.fed.cohort``) reuses ``index_plan`` and leaves the gather to
+a device-resident data plane; with the host RR backend both paths are
+bitwise-identical.
 """
 from __future__ import annotations
 
@@ -18,6 +27,7 @@ import numpy as np
 
 from ..configs.base import FLConfig
 from .reshuffle import local_step_indices, steps_for
+from .tasks import HELDOUT_BASE
 
 
 def _rng(*keys: int) -> np.random.Generator:
@@ -41,6 +51,23 @@ class RoundBatch(NamedTuple):
     data: Any                # pytree, leaves [C, K_max, B, ...]
     step_mask: np.ndarray    # [C, K_max]
     meta: ClientMeta
+
+
+class IndexPlan(NamedTuple):
+    """A round described by indices instead of data — what the cohort engine
+    ships to the device (``O(C * K_max * B)`` int32, not data bytes).
+
+    ``idx`` is None when a device RR backend regenerates the stream in-jit
+    from (seed, client, round) alone; ``sizes`` / ``spe`` are the int32
+    per-slot scalars that keying needs (both clamped >= 1 on padding slots).
+    """
+
+    idx: Any                 # [C, K_max, B] int32 | None
+    step_mask: Any           # [C, K_max] float32
+    meta: ClientMeta
+    sizes: Any               # [C] int32
+    spe: Any                 # [C] int32 (steps per epoch)
+    rnd: Any                 # [] int32
 
 
 @dataclass
@@ -82,9 +109,12 @@ class FederatedPipeline:
 
     def __post_init__(self):
         e_max = max(self.fl.epochs, self.fl.epochs_max)
-        self.k_max = self.fl.k_max or max(
-            steps_for(int(s), e_max, self.fl.local_batch) for s in self.population.sizes
-        )
+        spe_all = np.maximum(1, -(-self.population.sizes // self.fl.local_batch))
+        self.k_max = self.fl.k_max or int((spe_all * e_max).max())
+        # population-level arrays are computed ONCE — at million-client scale
+        # recomputing O(n) weights/probs every round would dominate the host
+        self._weights = self.population.weights
+        self._probs = self.inclusion_probs()
         self.cohort_slots = self._cohort_slots()
 
     def _cohort_slots(self) -> int:
@@ -92,8 +122,14 @@ class FederatedPipeline:
             return self.population.num_clients
         if self.fl.sampling == "uniform":
             return self.fl.cohort_size
-        # independent sampling: variable |S|; pad generously and mask
-        return min(self.population.num_clients, max(2 * self.fl.cohort_size, self.fl.cohort_size + 4))
+        # independent sampling: |S| is random with mean mu = sum_i p_i; pad to
+        # a Chernoff-style bound so silent truncation is pathological, not
+        # routine (overflow beyond the bound warns and drops uniformly — see
+        # fed.cohort.scheduler)
+        mu = float(self._probs.sum())
+        bound = int(np.ceil(mu + 4.0 * np.sqrt(mu) + 4.0))
+        b = self.fl.cohort_size
+        return min(self.population.num_clients, max(2 * b, b + 4, bound))
 
     # -- sampling ----------------------------------------------------------
 
@@ -106,30 +142,26 @@ class FederatedPipeline:
             return np.full(n, b / n)
         if self.fl.sampling == "independent":
             # importance sampling: p_i = min(1, b * w_i)  (paper §5)
-            return np.minimum(1.0, b * self.population.weights)
+            return np.minimum(1.0, b * self._weights)
         raise ValueError(self.fl.sampling)
+
+    def _sample(self, rnd: int):
+        """Realize S^r through the participation scheduler -> (ids, probs)."""
+        from ..fed.cohort.scheduler import sample_round  # deferred: avoids import cycle
+
+        return sample_round(self.fl, self.population, rnd,
+                            slots=self.cohort_slots, probs=self._probs)
 
     def sample_cohort(self, rnd: int) -> np.ndarray:
         """Realize S^r; returns int ids (possibly fewer than cohort_slots)."""
-        n = self.population.num_clients
-        r = _rng(self.fl.seed, 0xC0407, rnd)
-        if self.fl.sampling == "full":
-            return np.arange(n)
-        if self.fl.sampling == "uniform":
-            return r.choice(n, size=self.fl.cohort_size, replace=False)
-        probs = self.inclusion_probs()
-        mask = r.random(n) < probs
-        ids = np.nonzero(mask)[0]
-        if len(ids) == 0:  # proper sampling a.s. nonempty in expectation; resample guard
-            ids = np.array([int(r.integers(0, n))])
-        return ids[: self.cohort_slots]
+        return self._sample(rnd).ids
 
     def epochs_for(self, rnd: int, client: int) -> int:
         if self.fl.epochs_max <= self.fl.epochs:
             return self.fl.epochs
         return int(_rng(self.fl.seed, 0xE70C, rnd, client).integers(self.fl.epochs, self.fl.epochs_max + 1))
 
-    # -- batch assembly ----------------------------------------------------
+    # -- index-plan assembly ----------------------------------------------
 
     def _equalized_steps(self, rnd: int, cohort: np.ndarray) -> int | None:
         """Equalized-K strategies (FedAvgMin / FedAvgMean): a common fixed K
@@ -147,18 +179,23 @@ class FederatedPipeline:
         ]
         return int(min(ks)) if mode == "min" else int(round(np.mean(ks)))
 
-    def round_batch(self, rnd: int) -> RoundBatch:
-        cohort = self.sample_cohort(rnd)
+    def index_plan(self, rnd: int, *, with_idx: bool = True) -> IndexPlan:
+        """The index-level round description (everything but the data bytes).
+
+        ``with_idx=False`` skips host RR generation entirely (a device
+        backend will regenerate the streams in-jit) — the host then does only
+        O(cohort) scalar work plus the [C, K_max] mask.
+        """
+        sample = self._sample(rnd)
+        cohort = sample.ids
         C, K, B = self.cohort_slots, self.k_max, self.fl.local_batch
-        probs = self.inclusion_probs()
-        w = self.population.weights
+        w = self._weights
         fixed_k = self._equalized_steps(rnd, cohort)
 
-        spec = self.task.spec()
-        data = {
-            name: np.zeros((C, K, B) + tuple(shape), dtype=dt) for name, (dt, shape) in spec.items()
-        }
+        idx_all = np.zeros((C, K, B), dtype=np.int32) if with_idx else None
         step_mask = np.zeros((C, K), dtype=np.float32)
+        sizes = np.ones(C, dtype=np.int32)
+        spe = np.ones(C, dtype=np.int32)
         meta = ClientMeta(
             weight=np.zeros(C), prob=np.ones(C), num_samples=np.ones(C),
             epochs=np.ones(C), num_steps=np.ones(C), num_steps_planned=np.ones(C),
@@ -169,31 +206,38 @@ class FederatedPipeline:
             cid = int(cid)
             n_i = int(self.population.sizes[cid])
             e_i = self.epochs_for(rnd, cid)
+            steps_per_epoch = max(1, -(-n_i // B))
             if fixed_k is not None:
                 # equalized-steps heuristics sample *with replacement* (Table 4)
                 steps = min(fixed_k, K)
-                rr = _rng(self.fl.seed, 0xF1CED, rnd, cid)
-                idx = np.zeros((K, B), dtype=np.int32)
-                idx[:steps] = rr.integers(0, n_i, size=(steps, B))
+                if with_idx:
+                    rr = _rng(self.fl.seed, 0xF1CED, rnd, cid)
+                    idx_all[slot, :steps] = rr.integers(0, n_i, size=(steps, B))
                 mask = np.zeros((K,), np.float32)
                 mask[:steps] = 1.0
                 planned = steps
             else:
-                idx, mask = local_step_indices(
-                    self.fl.seed, cid, rnd, n_i, e_i, B, K, reshuffle=self.fl.reshuffle
-                )
                 planned = steps_for(n_i, e_i, B)
+                if with_idx:
+                    idx_all[slot], mask = local_step_indices(
+                        self.fl.seed, cid, rnd, n_i, e_i, B, K,
+                        reshuffle=self.fl.reshuffle,
+                    )
+                else:
+                    if planned > K:
+                        raise ValueError(f"client {cid}: K_i={planned} exceeds k_max={K}")
+                    mask = np.zeros((K,), np.float32)
+                    mask[:planned] = 1.0
             # system interruptions (Fig. 4): drop the last steps of the plan
             if self.fl.drop_last_steps:
                 done = int(mask.sum())
                 cut = max(1, done - self.fl.drop_last_steps)
                 mask[cut:] = 0.0
-            sample = self.task.batch(cid, idx)  # pytree leaves [K, B, ...]
-            for name in data:
-                data[name][slot] = sample[name]
             step_mask[slot] = mask
+            sizes[slot] = n_i
+            spe[slot] = steps_per_epoch
             meta.weight[slot] = w[cid]
-            meta.prob[slot] = probs[cid]
+            meta.prob[slot] = sample.probs[slot]
             meta.num_samples[slot] = n_i
             meta.epochs[slot] = e_i
             meta.num_steps[slot] = float(mask.sum())
@@ -202,14 +246,37 @@ class FederatedPipeline:
             meta.client_id[slot] = cid
 
         meta = ClientMeta(*[np.asarray(a) for a in meta])
-        return RoundBatch(data=data, step_mask=step_mask, meta=meta)
+        return IndexPlan(idx=idx_all, step_mask=step_mask, meta=meta,
+                         sizes=sizes, spe=spe, rnd=np.int32(rnd))
 
-    def eval_batch(self, rnd: int, per_client: int = 2) -> dict:
-        """A small held-out-style batch pooled across clients (host eval)."""
+    # -- batch materialization (the legacy / reference data path) ----------
+
+    def round_batch(self, rnd: int) -> RoundBatch:
+        plan = self.index_plan(rnd, with_idx=True)
+        C, K, B = self.cohort_slots, self.k_max, self.fl.local_batch
+        spec = self.task.spec()
+        data = {
+            name: np.zeros((C, K, B) + tuple(shape), dtype=dt) for name, (dt, shape) in spec.items()
+        }
+        for slot in np.nonzero(plan.meta.valid > 0)[0]:
+            sample = self.task.batch(int(plan.meta.client_id[slot]), plan.idx[slot])
+            for name in data:
+                data[name][slot] = sample[name]
+        return RoundBatch(data=data, step_mask=plan.step_mask, meta=plan.meta)
+
+    def eval_batch(self, rnd: int = 0, per_client: int = 2) -> dict:
+        """A small held-out batch pooled across clients (host eval).
+
+        Ids come from the task's explicit held-out split (``heldout_ids``);
+        tasks without one fall back to the documented ``HELDOUT_BASE`` offset
+        convention (train ids live strictly below it)."""
         parts = []
         for cid in range(self.population.num_clients):
-            idx = np.arange(per_client).reshape(1, per_client) + 10_000  # unseen ids
-            parts.append(self.task.batch(cid, idx))
+            if hasattr(self.task, "heldout_ids"):
+                ids = np.asarray(self.task.heldout_ids(cid, per_client))
+            else:
+                ids = HELDOUT_BASE + np.arange(per_client, dtype=np.int64)
+            parts.append(self.task.batch(cid, ids.reshape(1, per_client)))
         return {
             name: np.concatenate([p[name] for p in parts], axis=1)[0]
             for name in parts[0]

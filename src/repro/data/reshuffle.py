@@ -28,6 +28,17 @@ def with_replacement(seed: int, client: int, rnd: int, epoch: int, n: int) -> np
     return _rng(seed, 0xB0B, client, rnd, epoch).integers(0, n, size=n)
 
 
+def feistel_permutation(seed: int, client: int, rnd: int, epoch: int, n: int,
+                        rounds: int = 24) -> np.ndarray:
+    """Counter-based RR permutation (swap-or-not cipher) — same role as
+    :func:`epoch_permutation` but stateless integer math instead of a host
+    PCG stream, so the cohort engine's device backends regenerate the exact
+    same stream on-accelerator (``repro.kernels.rr_perm``)."""
+    from ..kernels.rr_perm.ref import permutation_np  # deferred: keeps numpy-only imports light
+
+    return permutation_np(seed, client, rnd, epoch, n, rounds=rounds)
+
+
 def local_step_indices(
     seed: int,
     client: int,
@@ -37,6 +48,7 @@ def local_step_indices(
     batch: int,
     k_max: int,
     reshuffle: bool = True,
+    order_fn=None,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Index matrix [k_max, batch] + mask [k_max] for one client's local work.
 
@@ -44,8 +56,13 @@ def local_step_indices(
     batches of ``batch`` (last partial batch of an epoch is wrapped within the
     same epoch's permutation, keeping every epoch exactly one pass as in the
     paper's Algorithm 1).  Steps beyond the client's real count are masked.
+
+    ``order_fn(seed, client, rnd, epoch, n) -> [n]`` overrides the per-epoch
+    order source (e.g. :func:`feistel_permutation` for the cohort engine's
+    host_feistel backend); default keeps the seed PCG streams.
     """
-    order_fn = epoch_permutation if reshuffle else with_replacement
+    if order_fn is None:
+        order_fn = epoch_permutation if reshuffle else with_replacement
     steps_per_epoch = max(1, -(-n_samples // batch))
     k_i = epochs * steps_per_epoch
     if k_i > k_max:

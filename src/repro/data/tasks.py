@@ -13,12 +13,30 @@ tasks with *matched heterogeneity structure*:
 
 Every task exposes ``batch(client, idx_matrix) -> pytree`` with numpy arrays,
 and ``spec()`` describing one data point, so the pipeline is model-agnostic.
+
+Two optional protocol extensions:
+
+* **held-out split** — ``heldout_ids(client, count)`` returns sample ids that
+  training never touches.  Procedural tasks reserve ids >= ``HELDOUT_BASE``
+  (training ids stay below it); finite tasks return ids of their choosing and
+  document the semantics.
+* **device bank** — ``bank()`` (pytree of [N, ...] arrays holding every
+  distinct sample once) + ``bank_rows(client_ids, idx)`` (a pure, broadcast-
+  only map from (client, local sample id) to bank row, valid for numpy AND
+  jax arrays).  Tasks exposing these get a device-resident data plane with
+  O(1) per-population metadata (``repro.fed.cohort.plane``); others fall back
+  to a materialized per-client table.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 
 import numpy as np
+
+# Training sample ids live in [0, HELDOUT_BASE); held-out ids start here.
+# Procedural tasks generate both from the same keyed stream, so any id is
+# valid data — the split is a disjoint-id contract, not a different source.
+HELDOUT_BASE = 1 << 20
 
 
 def _rng(*keys: int) -> np.random.Generator:
@@ -58,6 +76,13 @@ class QuadraticTask:
     def spec(self) -> dict:
         return {"e": (np.float32, (self.dim,))}
 
+    def heldout_ids(self, client: int, count: int) -> np.ndarray:
+        """Quadratic data is finite (eq. 36 has no generative process), so the
+        held-out 'split' revisits the client's own points — the objective
+        value at them is still the eval of record."""
+        n = len(self.assignment[client])
+        return np.arange(count, dtype=np.int64) % n
+
     def optimum(self) -> np.ndarray:
         return self.points.mean(axis=0)
 
@@ -88,6 +113,13 @@ class DuplicatedQuadraticTask(QuadraticTask):
     def batch(self, client: int, idx: np.ndarray) -> dict:
         return {"e": np.broadcast_to(self.points[client], idx.shape + (self.dim,)).copy()}
 
+    def bank(self) -> dict:
+        return {"e": self.points}
+
+    def bank_rows(self, client_ids, idx):
+        # every sample of client i IS e_i — broadcast the slot's client id
+        return client_ids[:, None, None] + 0 * idx
+
     def optimum(self) -> np.ndarray:
         sizes = np.asarray(self.copies, dtype=np.float64)
         return (sizes[:, None] * self.points).sum(0) / sizes.sum()
@@ -100,6 +132,62 @@ class DuplicatedQuadraticTask(QuadraticTask):
         sizes = np.asarray(self.copies, dtype=np.float64)
         per = np.sum((x[None, :] - self.points) ** 2, axis=-1)
         return float((sizes * per).sum() / sizes.sum())
+
+
+@dataclass
+class PopulationQuadraticTask:
+    """Population-scale quadratic: millions of clients over a shared basis.
+
+    The natural scale-up of eq. (36): a shared bank of ``dim`` basis points
+    e_0..e_{dim-1}; client ``i``'s local sample ``j`` is the point
+    ``(i * PHI + j) mod dim`` (a client-rotated walk over the basis; with
+    ``samples_per_client < dim`` clients own distinct heterogeneous slices,
+    with ``samples_per_client >= dim`` every client covers the full basis —
+    a homogeneous population, which is what the throughput benchmark wants).
+    Both the host ``batch`` and the device ``bank_rows`` evaluate the same
+    closed form, so the data plane needs ZERO per-client metadata —
+    per-population memory is O(dim), and a round's working set is
+    O(cohort * K_max * B) regardless of population.
+
+    All arithmetic is done mod-``dim`` termwise (dim**2 << 2**31), so int32
+    host/device implementations agree bit-for-bit.
+    """
+
+    dim: int = 16
+    num_clients: int = 1000
+    samples_per_client: int = 16
+    _PHI = 1000003
+
+    def __post_init__(self):
+        self.points = np.eye(self.dim, dtype=np.float32)
+
+    def sizes(self) -> np.ndarray:
+        return np.full(self.num_clients, self.samples_per_client, dtype=np.int64)
+
+    def _rows(self, client, idx):
+        d = self.dim
+        return ((client % d) * (self._PHI % d) + idx % d) % d
+
+    def batch(self, client: int, idx: np.ndarray) -> dict:
+        return {"e": self.points[self._rows(int(client), np.asarray(idx))]}
+
+    def spec(self) -> dict:
+        return {"e": (np.float32, (self.dim,))}
+
+    def heldout_ids(self, client: int, count: int) -> np.ndarray:
+        return HELDOUT_BASE + np.arange(count, dtype=np.int64)
+
+    def bank(self) -> dict:
+        return {"e": self.points}
+
+    def bank_rows(self, client_ids, idx):
+        return self._rows(client_ids[:, None, None], idx)
+
+    def optimum(self) -> np.ndarray:
+        return self.points.mean(axis=0)
+
+    def loss_np(self, x: np.ndarray) -> float:
+        return float(np.mean(np.sum((x[None, :] - self.points) ** 2, axis=-1)))
 
 
 # ---------------------------------------------------------------------------
@@ -172,6 +260,9 @@ class CharLMTask:
     def spec(self) -> dict:
         return {"tokens": (np.int32, (self.seq_len + 1,))}
 
+    def heldout_ids(self, client: int, count: int) -> np.ndarray:
+        return HELDOUT_BASE + np.arange(count, dtype=np.int64)
+
 
 # ---------------------------------------------------------------------------
 # Vision (CIFAR100 stand-in)
@@ -222,6 +313,9 @@ class VisionTask:
             "tokens": (np.int32, (2,)),
         }
 
+    def heldout_ids(self, client: int, count: int) -> np.ndarray:
+        return HELDOUT_BASE + np.arange(count, dtype=np.int64)
+
 
 # ---------------------------------------------------------------------------
 # Generic token task (assigned-arch smoke tests)
@@ -261,3 +355,6 @@ class TokenTask:
         for name, shape in self.extras.items():
             s[name] = (np.float32, tuple(shape))
         return s
+
+    def heldout_ids(self, client: int, count: int) -> np.ndarray:
+        return HELDOUT_BASE + np.arange(count, dtype=np.int64)

@@ -15,6 +15,14 @@ from .strategy import (
     register_strategy,
     strategy_for,
 )
+from .cohort import (
+    CohortEngine,
+    DevicePlane,
+    RoundPrefetcher,
+    as_device_plan,
+    build_plane,
+    register_participation,
+)
 from .train_loop import train
 
 __all__ = ["as_device_batch", "build_round_step", "ServerState", "apply_server",
@@ -22,4 +30,6 @@ __all__ = ["as_device_batch", "build_round_step", "ServerState", "apply_server",
            "FedStrategy", "BoundStrategy", "ServerOpt", "ServerTransform",
            "STRATEGIES", "SERVER_OPTS", "strategy_for", "bind_strategy",
            "register_strategy", "register_server_opt", "register_local_update",
-           "chain", "heavy_ball"]
+           "chain", "heavy_ball",
+           "CohortEngine", "DevicePlane", "RoundPrefetcher", "as_device_plan",
+           "build_plane", "register_participation"]

@@ -1,0 +1,14 @@
+"""Population-scale cohort engine: device-resident data plane, stateless
+on-device RR index generation, pluggable participation schedules, async
+round prefetch.  See README «Cohort engine» and the module docstrings."""
+from .engine import CohortEngine
+from .plan import as_device_plan
+from .plane import DevicePlane, build_plane
+from .prefetch import RoundPrefetcher
+from .scheduler import PARTICIPATION, CohortSample, register_participation, sample_round
+
+__all__ = [
+    "CohortEngine", "DevicePlane", "build_plane", "as_device_plan",
+    "RoundPrefetcher", "PARTICIPATION", "CohortSample",
+    "register_participation", "sample_round",
+]

@@ -1,0 +1,120 @@
+"""CohortEngine: the population-scale round producer.
+
+Owns everything between "population" and "jitted round step":
+
+* a :class:`~repro.fed.cohort.plane.DevicePlane` (task uploaded once, rounds
+  gathered on device),
+* index-plan assembly (reusing the legacy pipeline's host logic, so the host
+  RR backend is bitwise-identical to ``FederatedPipeline.round_batch``),
+* the RR backend choice (host PCG / host feistel / device ref / Pallas),
+* async round prefetch (:class:`~repro.fed.cohort.prefetch.RoundPrefetcher`).
+
+Per-round host work is O(cohort) scalars + the [C, K_max] mask (plus the
+[C, K_max, B] int32 indices for host backends); per-round device memory is
+O(cohort * K_max * B), independent of population size.
+
+Typical use::
+
+    engine = CohortEngine.build(task, population, fl)
+    step = jax.jit(build_round_step(loss_fn, strategy, fl, plane=engine.plane))
+    with engine.round_plans(rounds) as it:
+        for r, plan in it:
+            state, metrics = step(state, plan)
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from dataclasses import dataclass
+from typing import Any
+
+from ...configs.base import FLConfig
+from ...data.federated import FederatedPipeline, IndexPlan, Population
+from .plan import as_device_plan
+from .plane import DevicePlane, build_plane
+from .prefetch import RoundPrefetcher
+
+_HOST_BACKENDS = ("host", "host_feistel")
+_DEVICE_BACKENDS = ("device_ref", "device")
+_BACKENDS = _HOST_BACKENDS + _DEVICE_BACKENDS
+
+
+@dataclass
+class CohortEngine:
+    pipeline: FederatedPipeline     # host index-plan assembly (legacy logic)
+    plane: DevicePlane
+    rr_backend: str = "host"
+
+    @classmethod
+    def build(cls, task: Any, population: Population, fl: FLConfig, *,
+              rr_backend: str | None = None,
+              interpret: bool | None = None) -> "CohortEngine":
+        backend = rr_backend or fl.rr_backend
+        if backend not in _BACKENDS:
+            raise ValueError(f"unknown rr_backend {backend!r}; have {_BACKENDS}")
+        pipeline = FederatedPipeline(task, population, fl)
+        plane = build_plane(task, population, fl, rr_backend=backend,
+                            interpret=interpret)
+        return cls(pipeline=pipeline, plane=plane, rr_backend=backend)
+
+    @classmethod
+    def from_pipeline(cls, pipeline: FederatedPipeline, *,
+                      rr_backend: str | None = None,
+                      interpret: bool | None = None) -> "CohortEngine":
+        backend = rr_backend or pipeline.fl.rr_backend
+        if backend not in _BACKENDS:
+            raise ValueError(f"unknown rr_backend {backend!r}; have {_BACKENDS}")
+        plane = build_plane(pipeline.task, pipeline.population, pipeline.fl,
+                            rr_backend=backend, interpret=interpret)
+        return cls(pipeline=pipeline, plane=plane, rr_backend=backend)
+
+    @property
+    def fl(self) -> FLConfig:
+        return self.pipeline.fl
+
+    @property
+    def k_max(self) -> int:
+        return self.pipeline.k_max
+
+    # -- round production ---------------------------------------------------
+
+    def index_plan(self, rnd: int) -> IndexPlan:
+        """One round's host plan under the configured RR backend."""
+        if self.rr_backend == "host":
+            return self.pipeline.index_plan(rnd, with_idx=True)
+        if self.rr_backend == "host_feistel":
+            # numpy mirror of exactly what the device backends compute —
+            # including the plane's rr/wr mode choice, so the three cipher
+            # backends stay bitwise-interchangeable in every config
+            # (equalized presets and reshuffle=False included)
+            import numpy as np
+
+            from ...kernels.rr_perm.ref import rr_indices, stream_key
+
+            plan = self.pipeline.index_plan(rnd, with_idx=False)
+            prekey = stream_key(self.fl.seed,
+                                plan.meta.client_id.astype(np.uint32),
+                                np.uint32(rnd & 0xFFFFFFFF), np)
+            idx = rr_indices(prekey, plan.sizes, plan.spe,
+                             self.fl.local_batch, self.k_max,
+                             rounds=self.fl.rr_rounds, mode=self.plane.mode,
+                             xp=np)
+            return plan._replace(idx=idx)
+        # device backends: the jitted step regenerates the index streams
+        return self.pipeline.index_plan(rnd, with_idx=False)
+
+    def device_plan(self, rnd: int) -> IndexPlan:
+        return as_device_plan(self.index_plan(rnd))
+
+    @contextmanager
+    def round_plans(self, rounds: int, *, prefetch: int | None = None, start: int = 0):
+        """Iterate ``(rnd, device_plan)`` with async prefetch (depth from
+        ``fl.prefetch``; 0 disables the thread)."""
+        depth = self.fl.prefetch if prefetch is None else prefetch
+        if depth <= 0:
+            yield ((r, self.device_plan(r)) for r in range(start, start + rounds))
+            return
+        pf = RoundPrefetcher(self.device_plan, rounds, depth=depth, start=start)
+        try:
+            yield iter(pf)
+        finally:
+            pf.close()

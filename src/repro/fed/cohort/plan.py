@@ -1,0 +1,29 @@
+"""Host IndexPlan -> device IndexPlan conversion (the meta-transfer path).
+
+Shares ``fed.rounds.as_device_meta`` (meta floats -> float32, int64 ->
+int32) so a round step fed a materialized plan is bitwise-identical to one
+fed a host-assembled RoundBatch.  ``device_put`` (rather
+than ``jnp.asarray``) lets the prefetch thread *start* the host->device
+transfer ahead of the round that consumes it — that is the double-buffering
+half of the async scheduler.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from ...data.federated import IndexPlan
+from ..rounds import as_device_meta
+
+
+def as_device_plan(plan: IndexPlan, *, device=None) -> IndexPlan:
+    """Commit a host plan's arrays to the device (transfer starts now)."""
+    put = (lambda x: jax.device_put(x, device)) if device is not None else jax.device_put
+    return IndexPlan(
+        idx=None if plan.idx is None else put(np.asarray(plan.idx, np.int32)),
+        step_mask=put(np.asarray(plan.step_mask, np.float32)),
+        meta=as_device_meta(plan.meta),
+        sizes=put(np.asarray(plan.sizes, np.int32)),
+        spe=put(np.asarray(plan.spe, np.int32)),
+        rnd=put(np.asarray(plan.rnd, np.int32)),
+    )

@@ -1,0 +1,84 @@
+"""Async round prefetch: host plan assembly off the critical path.
+
+A daemon thread assembles index plans for rounds ``r .. r+depth`` ahead of
+the consumer and pushes *device-committed* plans through a bounded queue —
+while the accelerator executes round r, the host is sampling cohort r+1 and
+its transfer is already in flight (double buffering).  Round order is
+preserved exactly, so prefetching never changes results, only wall-clock.
+
+Producer exceptions are captured and re-raised at the consumer's ``next()``;
+``close()`` (or the context manager) tears the thread down promptly even if
+the consumer stops early.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Iterator
+
+_DONE = object()
+
+
+class RoundPrefetcher:
+    """Iterate ``(rnd, make_plan(rnd))`` for ``rounds`` rounds, ``depth`` ahead."""
+
+    def __init__(self, make_plan: Callable[[int], Any], rounds: int, depth: int = 2,
+                 start: int = 0):
+        if depth < 1:
+            raise ValueError("prefetch depth must be >= 1")
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._exc: BaseException | None = None
+        self._rounds = rounds
+        self._start = start
+        self._make_plan = make_plan
+        self._thread = threading.Thread(target=self._produce, daemon=True,
+                                        name="cohort-prefetch")
+        self._thread.start()
+
+    def _produce(self) -> None:
+        try:
+            for r in range(self._start, self._start + self._rounds):
+                plan = self._make_plan(r)
+                while not self._stop.is_set():
+                    try:
+                        self._q.put((r, plan), timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+                if self._stop.is_set():
+                    return
+        except BaseException as e:  # noqa: BLE001 — surfaced to the consumer
+            self._exc = e
+        finally:
+            while not self._stop.is_set():
+                try:
+                    self._q.put(_DONE, timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+
+    def __iter__(self) -> Iterator[tuple[int, Any]]:
+        while True:
+            item = self._q.get()
+            if item is _DONE:
+                if self._exc is not None:
+                    raise self._exc
+                return
+            yield item
+
+    def close(self) -> None:
+        self._stop.set()
+        # drain so a blocked producer can observe the stop flag
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=5.0)
+
+    def __enter__(self) -> "RoundPrefetcher":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

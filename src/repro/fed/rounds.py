@@ -21,6 +21,13 @@ Both modes compute *identical* math:
     x    <- x + eta_g * Delta            (+ server optimizer state)
 with per-client local steps  y <- y - (eta_l / c_i) * g  (masked RR scan).
 
+The step consumes either a materialized ``RoundBatch`` (legacy host
+assembly) or, when built with ``plane=`` (a cohort-engine
+:class:`~repro.fed.cohort.plane.DevicePlane`), an ``IndexPlan`` — indices
+and scalars only — which the plane materializes *inside* the jit by
+gathering the device-resident bank (and, for device RR backends,
+regenerating the reshuffling streams statelessly on device).
+
 Legacy call style ``build_round_step(loss_fn, fl, num_clients=...)`` still
 works: the FLConfig's ``algorithm``/``server_opt`` strings resolve through
 the strategy registry (see :func:`repro.fed.strategy.strategy_for`).
@@ -33,6 +40,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import FLConfig
+from ..data.federated import RoundBatch
 from ..utils.pytree import tree_zeros_like
 from .server import ServerState
 from .strategy import BoundStrategy, FedStrategy, RoundCtx, bind_strategy
@@ -40,7 +48,8 @@ from .strategy import BoundStrategy, FedStrategy, RoundCtx, bind_strategy
 
 def build_round_step(loss_fn: Callable,
                      strategy: "FedStrategy | BoundStrategy | FLConfig | None" = None,
-                     fl: FLConfig | None = None, num_clients: int | None = None) -> Callable:
+                     fl: FLConfig | None = None, num_clients: int | None = None,
+                     *, plane=None) -> Callable:
     if isinstance(strategy, FLConfig):
         # legacy signature build_round_step(loss_fn, fl[, num_clients])
         if isinstance(fl, int) and num_clients is None:
@@ -60,6 +69,15 @@ def build_round_step(loss_fn: Callable,
     one_client = strat.local_step
 
     def round_step(state: ServerState, batch, lr_mult=1.0):
+        if not isinstance(batch, RoundBatch):
+            # cohort-engine path: an IndexPlan — materialize on device (gather
+            # through the resident bank; device RR backends also regenerate
+            # the index streams here, inside the jit)
+            if plane is None:
+                raise TypeError(
+                    "round_step received an IndexPlan but build_round_step was "
+                    "called without plane=; pass the engine's DevicePlane")
+            batch = plane.materialize(batch)
         meta = batch.meta
         plan = strat.client_transform(meta, lr_mult)                   # eta [C]
         momentum = state.opt.get("m", None)
@@ -109,12 +127,20 @@ def build_round_step(loss_fn: Callable,
     return round_step
 
 
+def as_device_meta(meta):
+    """ClientMeta -> device dtypes: float32 scalars, int64 ids -> int32.
+
+    The single definition of the meta dtype policy — ``as_device_batch``
+    (legacy path) and ``cohort.plan.as_device_plan`` (engine path) both use
+    it, which is what keeps the two paths bitwise-interchangeable."""
+    return type(meta)(*[jnp.asarray(a, jnp.float32 if a.dtype != jnp.int64 else jnp.int32)
+                        for a in meta])
+
+
 def as_device_batch(rb):
     """Host RoundBatch (numpy) -> jnp pytree with float32 meta scalars."""
-    meta = type(rb.meta)(*[jnp.asarray(a, jnp.float32 if a.dtype != jnp.int64 else jnp.int32)
-                           for a in rb.meta])
     return type(rb)(
         data=jax.tree.map(jnp.asarray, rb.data),
         step_mask=jnp.asarray(rb.step_mask),
-        meta=meta,
+        meta=as_device_meta(rb.meta),
     )

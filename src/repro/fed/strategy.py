@@ -452,6 +452,23 @@ def bind_strategy(strategy: "FedStrategy | BoundStrategy | None", fl: FLConfig,
             f"strategy {strategy.name!r} pins server_opt="
             f"{strategy.server_opt!r} but FLConfig.server_opt is "
             f"{fl.server_opt!r}; make them agree.")
+    if fl.engine not in ("legacy", "cohort"):
+        raise ValueError(f"unknown engine {fl.engine!r}; have ('legacy', 'cohort')")
+    if fl.engine == "cohort":
+        # better a loud bind-time error than a first-round failure deep in the
+        # prefetch thread: the engine knobs are all validated here
+        from .cohort.engine import _BACKENDS  # deferred: cohort imports rounds
+        from .cohort.scheduler import PARTICIPATION
+
+        if fl.rr_backend not in _BACKENDS:
+            raise ValueError(
+                f"unknown rr_backend {fl.rr_backend!r}; have {_BACKENDS}")
+        if fl.participation not in PARTICIPATION:
+            raise ValueError(
+                f"unknown participation schedule {fl.participation!r}; "
+                f"have {sorted(PARTICIPATION)}")
+        if fl.prefetch < 0:
+            raise ValueError(f"fl.prefetch must be >= 0, got {fl.prefetch}")
     server_opt = strategy.server_opt or fl.server_opt
     if server_opt not in SERVER_OPTS:
         raise ValueError(f"unknown server opt {server_opt!r}; have {sorted(SERVER_OPTS)}")

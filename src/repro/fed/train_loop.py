@@ -16,6 +16,7 @@ from ..configs.base import FLConfig
 from ..data.federated import FederatedPipeline
 from ..utils.checkpoint import save_checkpoint
 from ..utils.logging import MetricLogger, log
+from .cohort import CohortEngine
 from .rounds import as_device_batch, build_round_step
 from .server import ServerState, cosine_schedule, wsd_schedule
 from .strategy import BoundStrategy, FedStrategy, bind_strategy
@@ -38,7 +39,7 @@ class TrainResult:
 def train(
     loss_fn: Callable,
     init_params: Any,
-    pipeline: FederatedPipeline,
+    pipeline: "FederatedPipeline | CohortEngine",
     fl: FLConfig,
     rounds: int,
     *,
@@ -54,11 +55,28 @@ def train(
     sched = SCHEDULES[schedule]
     strat = bind_strategy(strategy, fl, loss_fn, num_clients=fl.num_clients)
     state = strat.init(init_params)
-    step = jax.jit(build_round_step(loss_fn, strat, fl, num_clients=fl.num_clients))
+
+    # cohort engine: rounds arrive as prefetched device IndexPlans gathered
+    # through the resident data plane; legacy: host-assembled RoundBatches
+    engine = pipeline if isinstance(pipeline, CohortEngine) else None
+    if engine is not None and engine.fl != fl:
+        raise ValueError("fl differs from the config the CohortEngine was built over")
+    if engine is None and fl.engine == "cohort":
+        engine = CohortEngine.from_pipeline(pipeline)
+    step = jax.jit(build_round_step(loss_fn, strat, fl, num_clients=fl.num_clients,
+                                    plane=engine.plane if engine else None))
     ml = MetricLogger(name=name)
     t0 = time.time()
-    for r in range(rounds):
-        batch = as_device_batch(pipeline.round_batch(r))
+
+    def round_iter():
+        if engine is None:
+            for r in range(rounds):
+                yield r, as_device_batch(pipeline.round_batch(r))
+        else:
+            with engine.round_plans(rounds) as it:
+                yield from it
+
+    for r, batch in round_iter():
         state, mets = step(state, batch, jnp.asarray(sched(r, rounds), jnp.float32))
         row = {"round": r, "lr_mult": sched(r, rounds),
                **{k: float(v) for k, v in mets.items()}}

@@ -1,0 +1,28 @@
+"""Backend dispatch for on-device RR index generation.
+
+``rr_indices(...)`` hides the choice between the pure-jnp oracle (``ref``,
+always available, fuses into the surrounding jit) and the Pallas kernel
+(``pallas`` — interpret-mode on CPU so tests exercise the same code path).
+Both produce bitwise-identical [C, K_max, B] int32 index matrices, which in
+turn match the numpy mirror in ``ref.permutation_np``.
+"""
+from __future__ import annotations
+
+import jax
+
+from .kernel import rr_indices_kernel
+from .ref import rr_indices_ref
+
+
+def rr_indices(prekey, sizes, spe, *, B: int, K: int, rounds: int = 24,
+               mode: str = "rr", backend: str = "ref",
+               interpret: bool | None = None):
+    """Device index matrices [C, K, B]; see ``ref.rr_indices`` for semantics."""
+    if backend == "ref":
+        return rr_indices_ref(prekey, sizes, spe, B, K, rounds=rounds, mode=mode)
+    if backend == "pallas":
+        if interpret is None:
+            interpret = jax.default_backend() == "cpu"
+        return rr_indices_kernel(prekey, sizes, spe, B=B, K=K, rounds=rounds,
+                                 mode=mode, interpret=interpret)
+    raise ValueError(f"unknown rr backend {backend!r}")

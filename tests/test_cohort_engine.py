@@ -1,0 +1,274 @@
+"""Cohort-engine components: data plane, participation scheduler, prefetch
+thread, held-out split, truncation accounting, and population scale."""
+import threading
+import time
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.data.federated import FederatedPipeline, Population
+from repro.data.tasks import (
+    HELDOUT_BASE,
+    CharLMTask,
+    DuplicatedQuadraticTask,
+    PopulationQuadraticTask,
+    QuadraticTask,
+)
+from repro.fed.cohort import CohortEngine, build_plane
+from repro.fed.cohort.prefetch import RoundPrefetcher
+from repro.fed.cohort.scheduler import (
+    PARTICIPATION,
+    register_participation,
+    sample_round,
+)
+from repro.fed.losses import make_quadratic_loss
+from repro.fed.strategy import bind_strategy, strategy_for
+
+
+# ---------------------------------------------------------------------------
+# data plane
+# ---------------------------------------------------------------------------
+
+
+def _materialized_equals_host(task, fl, sizes=None):
+    pop = Population.build(fl, sizes=sizes)
+    pipe = FederatedPipeline(task, pop, fl)
+    plane = build_plane(task, pop, fl)
+    for r in range(2):
+        plan = pipe.index_plan(r, with_idx=True)
+        rb_host = pipe.round_batch(r)
+        from repro.fed.cohort import as_device_plan
+
+        rb_dev = plane.materialize(as_device_plan(plan))
+        for name in rb_host.data:
+            dev = np.asarray(rb_dev.data[name])
+            host = rb_host.data[name]
+            valid = plan.meta.valid > 0
+            np.testing.assert_array_equal(dev[valid], host[valid], err_msg=name)
+
+
+def test_procedural_plane_matches_host_batches():
+    task = DuplicatedQuadraticTask(copies=(1, 2, 3))
+    fl = FLConfig(num_clients=3, cohort_size=2, sampling="uniform", epochs=2,
+                  local_batch=1, seed=5)
+    _materialized_equals_host(task, fl, sizes=task.sizes())
+
+
+def test_table_plane_matches_host_batches():
+    """Tasks without bank hooks (CharLM) fall back to the materialized table
+    plane; the device gather must still return the exact host bytes."""
+    task = CharLMTask(vocab=32, seq_len=8, num_clients=4)
+    fl = FLConfig(num_clients=4, cohort_size=2, sampling="uniform", epochs=1,
+                  local_batch=2, mean_samples=5, seed=6)
+    _materialized_equals_host(task, fl)
+
+
+def test_population_task_bank_rows_match_batch():
+    task = PopulationQuadraticTask(dim=8, num_clients=50, samples_per_client=6)
+    idx = np.arange(12).reshape(2, 6) % task.samples_per_client
+    for cid in (0, 7, 49):
+        host = task.batch(cid, idx)["e"]
+        rows = task.bank_rows(np.array([cid], np.int32), idx[None])
+        np.testing.assert_array_equal(task.bank()["e"][np.asarray(rows)[0]], host)
+
+
+# ---------------------------------------------------------------------------
+# participation scheduler
+# ---------------------------------------------------------------------------
+
+
+def _fl(n=10, b=3, **kw):
+    return FLConfig(num_clients=n, cohort_size=b, **kw)
+
+
+def test_floyd_uniform_is_valid_and_unbiased():
+    fl = _fl(20, 5, participation="uniform_floyd")
+    pop = Population.build(fl)
+    counts = np.zeros(20)
+    for r in range(600):
+        s = sample_round(fl, pop, r, slots=5)
+        assert len(np.unique(s.ids)) == 5 and s.ids.max() < 20
+        assert np.allclose(s.probs, 5 / 20)
+        counts[s.ids] += 1
+    emp = counts / 600
+    assert np.all(np.abs(emp - 0.25) < 5 * np.sqrt(0.25 * 0.75 / 600) + 0.02)
+
+
+@pytest.mark.parametrize("schedule", ["cyclic", "cyclic_shuffled"])
+def test_cyclic_covers_population_each_period(schedule):
+    """Regularized participation: every client trains exactly once/period."""
+    fl = _fl(10, 3, participation=schedule, seed=4)
+    pop = Population.build(fl)
+    period = -(-10 // 3)
+    seen = np.concatenate([sample_round(fl, pop, r, slots=3).ids
+                           for r in range(period)])
+    assert sorted(seen.tolist()) == list(range(10))
+    # next period re-covers (shuffled or not)
+    seen2 = np.concatenate([sample_round(fl, pop, r, slots=3).ids
+                            for r in range(period, 2 * period)])
+    assert sorted(seen2.tolist()) == list(range(10))
+
+
+def test_cyclic_shuffled_reshuffles_between_periods():
+    fl = _fl(64, 8, participation="cyclic_shuffled", seed=4)
+    pop = Population.build(fl)
+    period = 8
+    g0 = [tuple(sample_round(fl, pop, r, slots=8).ids) for r in range(period)]
+    g1 = [tuple(sample_round(fl, pop, r + period, slots=8).ids) for r in range(period)]
+    assert g0 != g1
+
+
+def test_independent_truncation_warns_and_drops_uniformly():
+    fl = _fl(12, 4, sampling="independent", seed=9)
+    pop = Population.build(fl, sizes=np.full(12, 8))
+    probs = np.full(12, 0.9)  # force many realized clients
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        s = sample_round(fl, pop, 0, slots=5, probs=probs)
+    assert len(s.ids) == 5
+    assert any("dropping" in str(w.message) for w in caught)
+    # the kept set is NOT simply the 5 lowest ids (the old ordering bias)
+    assert s.ids.tolist() != sorted(s.ids.tolist())[:5] or s.ids.max() > 5
+
+
+def test_independent_slots_grow_with_expected_cohort():
+    """The padded slot count covers E|S| + 4 sigma, not just 2b."""
+    fl = _fl(100, 40, sampling="independent")
+    pipe = FederatedPipeline(QuadraticTask(dim=4, assignment=((0,), (1,), (2,), (3,))),
+                             Population.build(fl), fl)
+    mu = pipe.inclusion_probs().sum()
+    assert pipe.cohort_slots >= min(100, int(mu + 4 * np.sqrt(mu)))
+
+
+def test_register_participation():
+    def everyone(fl, population, rnd, slots, probs):
+        from repro.fed.cohort.scheduler import CohortSample
+
+        return CohortSample(np.arange(population.num_clients),
+                            np.ones(population.num_clients))
+
+    register_participation("_test_everyone", everyone)
+    try:
+        fl = _fl(4, 2, participation="_test_everyone", sampling="full")
+        s = sample_round(fl, Population.build(fl), 0, slots=4)
+        assert s.ids.tolist() == [0, 1, 2, 3]
+        with pytest.raises(ValueError):
+            register_participation("_test_everyone", everyone)
+    finally:
+        PARTICIPATION.pop("_test_everyone", None)
+
+
+def test_unknown_participation_fails_at_bind_time():
+    fl = _fl(4, 2, engine="cohort", participation="nope")
+    with pytest.raises(ValueError, match="participation"):
+        bind_strategy(strategy_for(fl), fl, make_quadratic_loss(3), num_clients=4)
+
+
+# ---------------------------------------------------------------------------
+# prefetch
+# ---------------------------------------------------------------------------
+
+
+def test_prefetcher_preserves_round_order():
+    out = list(RoundPrefetcher(lambda r: r * r, rounds=7, depth=3))
+    assert out == [(r, r * r) for r in range(7)]
+
+
+def test_prefetcher_runs_ahead():
+    produced = []
+
+    def make(r):
+        produced.append(r)
+        return r
+
+    pf = RoundPrefetcher(make, rounds=10, depth=3)
+    it = iter(pf)
+    next(it)
+    deadline = time.time() + 2.0
+    while len(produced) < 3 and time.time() < deadline:
+        time.sleep(0.01)
+    assert len(produced) >= 3  # producer filled the queue ahead of consumption
+    pf.close()
+
+
+def test_prefetcher_propagates_producer_error():
+    def boom(r):
+        if r == 2:
+            raise RuntimeError("producer failed")
+        return r
+
+    with pytest.raises(RuntimeError, match="producer failed"):
+        list(RoundPrefetcher(boom, rounds=5, depth=2))
+
+
+def test_prefetcher_close_stops_thread():
+    pf = RoundPrefetcher(lambda r: time.sleep(0.01) or r, rounds=1000, depth=2)
+    next(iter(pf))
+    pf.close()
+    assert not pf._thread.is_alive()
+    assert threading.active_count() < 50
+
+
+# ---------------------------------------------------------------------------
+# held-out split
+# ---------------------------------------------------------------------------
+
+
+def test_eval_batch_uses_explicit_heldout_split():
+    task = CharLMTask(vocab=32, seq_len=8, num_clients=3)
+    fl = FLConfig(num_clients=3, cohort_size=2, mean_samples=4, seed=2)
+    pipe = FederatedPipeline(task, Population.build(fl), fl)
+    ev = pipe.eval_batch(per_client=2)
+    assert ev["tokens"].shape == (6, 9)
+    # held-out ids are disjoint from every possible training id
+    ids = task.heldout_ids(0, 2)
+    assert ids.min() >= HELDOUT_BASE
+    assert int(pipe.population.sizes.max()) < HELDOUT_BASE
+
+
+def test_eval_batch_works_for_finite_tasks():
+    """The old +10_000 'unseen ids' hack crashed on finite tasks (quadratic
+    assignment lookup is a real index).  The protocol split must not."""
+    task = QuadraticTask(dim=6, assignment=((0,), (1, 2), (3, 4, 5)))
+    fl = FLConfig(num_clients=3, cohort_size=2, seed=2)
+    pipe = FederatedPipeline(task, Population.build(fl, sizes=task.sizes()), fl)
+    ev = pipe.eval_batch(per_client=2)
+    assert ev["e"].shape == (6, 6)
+
+
+# ---------------------------------------------------------------------------
+# population scale
+# ---------------------------------------------------------------------------
+
+
+def test_million_client_population_round_is_cohort_sized():
+    n = 1_000_000
+    task = PopulationQuadraticTask(dim=16, num_clients=n, samples_per_client=16)
+    fl = FLConfig(num_clients=n, cohort_size=32, sampling="uniform", epochs=1,
+                  local_batch=8, imbalance="equal", mean_samples=16, seed=3,
+                  engine="cohort", rr_backend="device_ref",
+                  participation="uniform_floyd")
+    eng = CohortEngine.build(task, Population.build(fl, sizes=task.sizes()), fl)
+    plan = eng.index_plan(0)
+    assert plan.idx is None                      # no host RR work at all
+    # per-round host arrays are O(cohort * k_max), independent of population
+    per_round = sum(np.asarray(a).nbytes
+                    for a in [plan.step_mask, plan.sizes, plan.spe, *plan.meta])
+    assert per_round < 64 * eng.k_max * 64 + 4096
+    # the device bank is O(dim), not O(population)
+    assert sum(int(x.size) for x in eng.plane.bank.values()) == 16 * 16
+    # and a round actually executes
+    from repro.fed.rounds import build_round_step
+
+    loss = make_quadratic_loss(16)
+    strat = bind_strategy(strategy_for(fl), fl, loss, num_clients=n)
+    step = build_round_step(loss, strat, fl, num_clients=n, plane=eng.plane)
+    state = strat.init({"x": jnp.zeros(16)})
+    with eng.round_plans(2) as it:
+        for r, p in it:
+            state, mets = step(state, p)
+    assert np.isfinite(float(mets["local_loss"]))
+    assert float(mets["cohort"]) == 32.0

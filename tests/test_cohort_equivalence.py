@@ -1,0 +1,140 @@
+"""Cohort-engine equivalence: frozen-seed BITWISE-identical ``ServerState``
+between the new engine (device-resident plane + index plans + prefetch
+thread) and the legacy ``FederatedPipeline`` host-assembly path.
+
+Both paths run eagerly (same primitive sequence -> bitwise floats), as in
+``test_strategy_equivalence``.  The matrix covers >= 2 presets x both cohort
+modes, an equalized-K preset, an independent-sampling config (exercising the
+padded-slot masking), an MVR server opt (whose update re-reads the batch
+data through the plane gather), and the prefetch thread at depth 2.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.data.federated import FederatedPipeline, Population
+from repro.data.tasks import DuplicatedQuadraticTask
+from repro.fed.cohort import CohortEngine
+from repro.fed.losses import make_quadratic_loss
+from repro.fed.rounds import as_device_batch, build_round_step
+from repro.fed.strategy import bind_strategy, strategy_for
+
+TASK = DuplicatedQuadraticTask(copies=(1, 2, 3))
+LOSS = make_quadratic_loss(3)
+N_ROUNDS = 3
+
+
+def _fl(preset, mode, opt="sgd", sampling="uniform", **kw):
+    return FLConfig(num_clients=3, cohort_size=2, sampling=sampling, epochs=2,
+                    local_batch=1, algorithm=preset, local_lr=0.05, server_lr=0.8,
+                    server_opt=opt, mvr_a=0.2, cohort_mode=mode,
+                    drop_last_steps=1, seed=11, engine="cohort", **kw)
+
+
+def _assert_tree_equal(a, b, what):
+    assert jax.tree.structure(a) == jax.tree.structure(b), what
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y), err_msg=what)
+
+
+def _run_legacy(fl, pipe, strat):
+    step = build_round_step(LOSS, strat, fl, num_clients=fl.num_clients)
+    state = strat.init({"x": jnp.array([0.3, -0.1, 0.2], jnp.float32)})
+    for r in range(N_ROUNDS):
+        state, mets = step(state, as_device_batch(pipe.round_batch(r)))
+    return state, mets
+
+
+def _run_engine(fl, pop, strat, *, prefetch=2, rr_backend=None):
+    eng = CohortEngine.build(TASK, pop, fl, rr_backend=rr_backend)
+    step = build_round_step(LOSS, strat, fl, num_clients=fl.num_clients,
+                            plane=eng.plane)
+    state = strat.init({"x": jnp.array([0.3, -0.1, 0.2], jnp.float32)})
+    with eng.round_plans(N_ROUNDS, prefetch=prefetch) as it:
+        for r, plan in it:
+            state, mets = step(state, plan)
+    return state, mets
+
+
+@pytest.mark.parametrize("mode", ["vmapped", "sequential"])
+@pytest.mark.parametrize("preset", ["fedshuffle", "fednova", "fedavg_min"])
+def test_engine_matches_legacy_bitwise(preset, mode):
+    fl = _fl(preset, mode)
+    pop = Population.build(fl, sizes=TASK.sizes())
+    pipe = FederatedPipeline(TASK, pop, fl)
+    strat = bind_strategy(strategy_for(fl), fl, LOSS, num_clients=fl.num_clients)
+    (ls, lm) = _run_legacy(fl, pipe, strat)
+    (es, em) = _run_engine(fl, pop, strat)          # prefetch thread ON
+    tag = f"{preset}/{mode}"
+    _assert_tree_equal(ls.params, es.params, f"{tag}: params")
+    _assert_tree_equal(ls.opt, es.opt, f"{tag}: opt state")
+    np.testing.assert_array_equal(np.asarray(ls.rnd), np.asarray(es.rnd), tag)
+    _assert_tree_equal(lm, em, f"{tag}: metrics")
+
+
+@pytest.mark.parametrize("mode", ["vmapped", "sequential"])
+def test_engine_matches_legacy_independent_sampling(mode):
+    """Independent sampling pads the cohort with invalid slots — the engine's
+    gather fills them with bank rows (not zeros), which must not leak into
+    any aggregate."""
+    fl = _fl("fedshuffle", mode, sampling="independent")
+    pop = Population.build(fl, sizes=TASK.sizes())
+    pipe = FederatedPipeline(TASK, pop, fl)
+    strat = bind_strategy(strategy_for(fl), fl, LOSS, num_clients=fl.num_clients)
+    (ls, _), (es, _) = _run_legacy(fl, pipe, strat), _run_engine(fl, pop, strat)
+    _assert_tree_equal(ls.params, es.params, f"independent/{mode}: params")
+    _assert_tree_equal(ls.opt, es.opt, f"independent/{mode}: opt state")
+
+
+def test_engine_matches_legacy_mvr_exact():
+    """mvr_exact's server update re-reads batch.data at two parameter points;
+    through the engine that data comes from the device gather."""
+    fl = _fl("fedshuffle", "vmapped", opt="mvr", mvr_exact=True)
+    pop = Population.build(fl, sizes=TASK.sizes())
+    pipe = FederatedPipeline(TASK, pop, fl)
+    strat = bind_strategy(strategy_for(fl), fl, LOSS, num_clients=fl.num_clients)
+    (ls, _), (es, _) = _run_legacy(fl, pipe, strat), _run_engine(fl, pop, strat)
+    _assert_tree_equal(ls.params, es.params, "mvr-exact: params")
+    _assert_tree_equal(ls.opt, es.opt, "mvr-exact: opt state")
+
+
+@pytest.mark.parametrize("preset,reshuffle", [
+    ("fedshuffle", True),    # rr mode
+    ("fedshuffle", False),   # wr mode (no-reshuffle baseline)
+    ("fedavg_min", True),    # wr mode (equalized-K with-replacement, Table 4)
+])
+def test_host_feistel_matches_device_backends_bitwise(preset, reshuffle):
+    """The same counter-based stream regenerated three ways (host numpy /
+    in-jit jnp / Pallas interpret) must produce one trajectory — in every
+    index mode (plain RR, with-replacement, equalized-K)."""
+    fl = _fl(preset, "vmapped", rr_backend="host_feistel", reshuffle=reshuffle)
+    pop = Population.build(fl, sizes=TASK.sizes())
+    strat = bind_strategy(strategy_for(fl), fl, LOSS, num_clients=fl.num_clients)
+    states = {}
+    for backend in ["host_feistel", "device_ref", "device"]:
+        s, _ = _run_engine(fl, pop, strat, rr_backend=backend)
+        states[backend] = s
+    _assert_tree_equal(states["host_feistel"].params, states["device_ref"].params,
+                       "host_feistel vs device_ref")
+    _assert_tree_equal(states["host_feistel"].params, states["device"].params,
+                       "host_feistel vs pallas")
+
+
+def test_train_loop_engine_matches_legacy():
+    """End-to-end ``fed.train`` with fl.engine='cohort' (jitted, prefetched)
+    equals the legacy jitted loop — same driver, both compiled."""
+    import dataclasses
+
+    from repro.fed.train_loop import train
+
+    fl_legacy = dataclasses.replace(_fl("fedshuffle", "vmapped"), engine="legacy")
+    fl_engine = _fl("fedshuffle", "vmapped")
+    params = {"x": jnp.array([0.3, -0.1, 0.2], jnp.float32)}
+    pipes = [FederatedPipeline(TASK, Population.build(f, sizes=TASK.sizes()), f)
+             for f in (fl_legacy, fl_engine)]
+    res_l = train(LOSS, params, pipes[0], fl_legacy, 4, log_every=0)
+    res_e = train(LOSS, params, pipes[1], fl_engine, 4, log_every=0)
+    _assert_tree_equal(res_l.state.params, res_e.state.params, "train(): params")
+    _assert_tree_equal(res_l.state.opt, res_e.state.opt, "train(): opt")
