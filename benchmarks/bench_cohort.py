@@ -12,6 +12,13 @@ Writes ``BENCH_cohort.json`` at the repo root (the committed perf-trajectory
 baseline) and ``benchmarks/results/bench_cohort.csv`` (CI artifact).
 ``--check`` asserts the acceptance bar: engine_prefetch >= 2x legacy
 rounds/sec on the quadratic task at every measured population size.
+
+``--imbalanced`` switches to the zipf-imbalance scenario the bucketed
+execution layout exists for: padded vs bucketed rounds/sec (both through the
+cohort engine + prefetch, so the delta is purely the batch layout), plus the
+useful-step fraction sum_i K_i / (C * K_max) that the padded layout wastes.
+Writes ``BENCH_bucketed.json`` / ``benchmarks/results/bench_bucketed.csv``;
+``--check`` then asserts bucketed >= 2x padded rounds/sec.
 """
 from __future__ import annotations
 
@@ -21,6 +28,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import FLConfig
 from repro.data.federated import FederatedPipeline, Population
@@ -33,6 +41,7 @@ from repro.fed.strategy import bind_strategy, strategy_for
 from .common import RESULTS_DIR, csv_row
 
 BASELINE_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_cohort.json")
+BUCKETED_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_bucketed.json")
 
 # The regime the engine exists for: wide cohorts of small local batches,
 # where the legacy path is bound by its per-client python assembly loop
@@ -121,6 +130,92 @@ def bench_population(pop: int, rounds: int) -> dict:
     return out
 
 
+# -- zipf-imbalanced scenario (padded vs bucketed execution layout) ---------
+#
+# Heavy-tailed |D_i| (zipf 1.2, capped so the padded arm stays runnable): the
+# population K_max is set by a handful of huge clients, while the median
+# client does a couple of local steps — the regime where the padded layout's
+# C * K_max scan is almost entirely masked no-ops.
+
+ZIPF_MEAN = 16
+ZIPF_CAP = 512          # max samples/client => K_max = epochs * cap / B
+ZIPF_BUCKETS = 8
+
+
+def zipf_sizes(pop: int) -> np.ndarray:
+    ranks = np.arange(1, pop + 1, dtype=np.float64)
+    s = np.round(ZIPF_MEAN * pop * ranks**-1.2 / (ranks**-1.2).sum()).astype(np.int64)
+    return np.clip(s, 2, ZIPF_CAP)
+
+
+def bench_imbalanced_population(pop: int, rounds: int) -> dict:
+    sizes = zipf_sizes(pop)
+    task = PopulationQuadraticTask(dim=DIM, num_clients=pop,
+                                   samples_per_client=ZIPF_CAP)
+    loss = make_quadratic_loss(DIM)
+    params = {"x": jnp.zeros(DIM)}
+    out: dict = {}
+    for exec_mode in ["padded", "bucketed"]:
+        fl = FLConfig(num_clients=pop, cohort_size=COHORT, sampling="uniform",
+                      epochs=2, local_batch=2, algorithm="fedshuffle",
+                      local_lr=0.05, imbalance="zipf", mean_samples=ZIPF_MEAN,
+                      seed=7, engine="cohort", rr_backend="device_ref",
+                      prefetch=2, exec_mode=exec_mode, buckets=ZIPF_BUCKETS)
+        eng = CohortEngine.build(task, Population.build(fl, sizes=sizes), fl)
+        strat = bind_strategy(strategy_for(fl), fl, loss, num_clients=pop)
+        step = jax.jit(build_round_step(loss, strat, fl, num_clients=pop,
+                                        plane=eng.plane))
+        st = strat.init(params)
+        st, _ = step(st, eng.device_plan(0))            # compile
+        jax.block_until_ready(st.params)
+        out[exec_mode] = _time_engine(eng, step, st, rounds, 2)
+        if exec_mode == "bucketed":
+            lay = eng.pipeline.bucket_layout
+            # static layout cost relative to the padded C * K_max scan
+            out["layout_cost_fraction"] = sum(
+                c * e for c, e in zip(lay.caps, lay.edges)
+            ) / (eng.pipeline.cohort_slots * eng.k_max)
+            out["compilations"] = step._cache_size()
+    pipe = eng.pipeline
+    out["useful_step_fraction"] = float(np.mean([
+        float(pipe.index_plan(r, with_idx=False).meta.num_steps.sum())
+        / (pipe.cohort_slots * pipe.k_max)
+        for r in range(5)
+    ]))
+    out["k_max"] = pipe.k_max
+    out["speedup_bucketed_vs_padded"] = out["bucketed"] / out["padded"]
+    return out
+
+
+def main_imbalanced(pops=(1_000, 100_000, 1_000_000), rounds: int = 60,
+                    check: bool = False, write_baseline: bool = True) -> list[str]:
+    rows = []
+    results: dict = {"dim": DIM, "cohort": COHORT, "local_batch": 2, "epochs": 2,
+                     "zipf_mean": ZIPF_MEAN, "zipf_cap": ZIPF_CAP,
+                     "buckets": ZIPF_BUCKETS, "rounds_timed": rounds,
+                     "populations": {}}
+    for pop in pops:
+        res = bench_imbalanced_population(pop, rounds)
+        results["populations"][str(pop)] = res
+        for name in ("padded", "bucketed"):
+            rows.append(csv_row(f"bucketed/{pop}/{name}", 1.0 / res[name],
+                                f"{res[name]:.1f}rps"))
+        print(f"pop={pop}: " + ", ".join(f"{k}={v:.3f}" for k, v in res.items()))
+        if check:
+            assert res["speedup_bucketed_vs_padded"] >= 2.0, (pop, res)
+            assert res["compilations"] == 1, (pop, res)
+    if write_baseline:
+        import json
+
+        with open(BUCKETED_PATH, "w") as f:
+            json.dump(results, f, indent=2, default=float)
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "bench_bucketed.csv"), "w") as f:
+        f.write("name,us_per_call,derived\n")
+        f.writelines(r + "\n" for r in rows)
+    return rows
+
+
 def main(pops=(1_000, 100_000, 1_000_000), rounds: int = 60,
          check: bool = False, write_baseline: bool = True) -> list[str]:
     rows = []
@@ -157,11 +252,14 @@ if __name__ == "__main__":
     ap.add_argument("--rounds", type=int, default=None)
     ap.add_argument("--check", action="store_true",
                     help="assert the >=2x acceptance bar")
+    ap.add_argument("--imbalanced", action="store_true",
+                    help="zipf scenario: padded vs bucketed execution layout")
     args = ap.parse_args()
     pops = (1_000, 10_000) if args.quick else (1_000, 100_000, 1_000_000)
     rounds = args.rounds or (15 if args.quick else 60)
     print("name,us_per_call,derived")
-    # --quick (CI smoke) must not clobber the committed full-size baseline
-    for row in main(pops=pops, rounds=rounds, check=args.check,
-                    write_baseline=not args.quick):
+    # --quick (CI smoke) must not clobber the committed full-size baselines
+    entry = main_imbalanced if args.imbalanced else main
+    for row in entry(pops=pops, rounds=rounds, check=args.check,
+                     write_baseline=not args.quick):
         print(row)

@@ -6,13 +6,11 @@ import json
 import os
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FLConfig
 from repro.data.federated import FederatedPipeline, Population
-from repro.fed.rounds import as_device_batch, build_round_step
+from repro.fed.rounds import as_device_batch, build_round_step, jit_round_step
 from repro.fed.strategy import BoundStrategy, bind_strategy
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
@@ -45,7 +43,9 @@ def run_fl(task, sizes, fl: FLConfig, init_params, loss_fn, rounds: int,
         fl = new_fl
     strat = bind_strategy(strategy, fl, loss_fn, num_clients=fl.num_clients)
     state = strat.init(init_params)
-    step = jax.jit(build_round_step(loss_fn, strat, fl, num_clients=fl.num_clients))
+    # donate ServerState: params/opt update in place instead of a round copy
+    step = jit_round_step(build_round_step(loss_fn, strat, fl,
+                                           num_clients=fl.num_clients))
     trace = []
     t0 = time.time()
     for r in range(rounds):

@@ -191,6 +191,12 @@ Aggregation = Literal["unbiased", "sum_one"]
 ServerOpt = Literal["sgd", "momentum", "mvr", "adam"]
 CohortMode = Literal["vmapped", "sequential"]
 Engine = Literal["legacy", "cohort"]
+# Round-batch layout the jitted step executes:
+#   padded   — one [C, K_max] masked scan for the whole cohort (reference)
+#   bucketed — slots partitioned into static step buckets; one [C_b, K_b]
+#              scan per bucket, results reassembled in slot order so every
+#              aggregate is bitwise-identical to the padded layout
+ExecMode = Literal["padded", "bucketed"]
 # Where the RR index matrices [C, K_max, B] come from:
 #   host        — numpy PCG permutations per cohort client (the seed semantics;
 #                 bitwise-identical to the legacy FederatedPipeline path)
@@ -227,6 +233,9 @@ class FLConfig:
     # distribution
     cohort_mode: CohortMode = "vmapped"
     accum_dtype: str = "float32"   # sequential-mode delta accumulator dtype
+    # execution layout (padding-free bucketed scans for imbalanced local work)
+    exec_mode: ExecMode = "padded"
+    buckets: int = 4               # max step buckets when exec_mode="bucketed"
     # cohort engine (population-scale data plane; repro.fed.cohort)
     engine: Engine = "legacy"      # "cohort" => device-resident data plane
     rr_backend: RRBackend = "host"

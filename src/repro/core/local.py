@@ -48,14 +48,17 @@ def local_mvr(loss_fn: Callable, params, momentum, data, step_mask, lr, a):
     d_{i,e,j} = a*g(y) + (1-a)*m + (1-a)*(g(y) - g(x))
               = g(y) + (1-a)*(m - g(x))
     where g(.) is the gradient of the *same* RR sample at the local iterate y
-    and at the round-start point x.
+    and at the round-start point x.  Two gradient passes per step; the
+    reported loss rides along with the g(y) pass (pre-update, same convention
+    as :func:`local_sgd`) instead of costing a third forward pass.
     """
-    grad_fn = jax.grad(lambda p, mb: loss_fn(p, mb)[0])
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    gx_fn = jax.grad(lambda p, mb: loss_fn(p, mb)[0])
 
     def step(y, xs):
         mb, m = xs
-        gy = grad_fn(y, mb)
-        gx = grad_fn(params, mb)
+        (l, _), gy = grad_fn(y, mb)
+        gx = gx_fn(params, mb)
         d = jax.tree.map(
             lambda gyl, gxl, ml: gyl.astype(jnp.float32) + (1.0 - a)
             * (ml.astype(jnp.float32) - gxl.astype(jnp.float32)),
@@ -64,7 +67,7 @@ def local_mvr(loss_fn: Callable, params, momentum, data, step_mask, lr, a):
         y = jax.tree.map(
             lambda p, dl: (p.astype(jnp.float32) - (lr * m) * dl).astype(p.dtype), y, d
         )
-        return y, loss_fn(y, mb)[0] * m
+        return y, l * m
 
     y, losses = jax.lax.scan(step, params, (data, step_mask))
     denom = jnp.maximum(step_mask.sum(), 1.0)

@@ -1,4 +1,4 @@
-from .rounds import as_device_batch, build_round_step
+from .rounds import as_device_batch, build_round_step, jit_round_step
 from .server import ServerState, apply_server, init_server, wsd_schedule, cosine_schedule
 from .strategy import (
     SERVER_OPTS,
@@ -25,7 +25,8 @@ from .cohort import (
 )
 from .train_loop import train
 
-__all__ = ["as_device_batch", "build_round_step", "ServerState", "apply_server",
+__all__ = ["as_device_batch", "build_round_step", "jit_round_step",
+           "ServerState", "apply_server",
            "init_server", "wsd_schedule", "cosine_schedule", "train",
            "FedStrategy", "BoundStrategy", "ServerOpt", "ServerTransform",
            "STRATEGIES", "SERVER_OPTS", "strategy_for", "bind_strategy",

@@ -1,0 +1,66 @@
+"""jit-side helpers for the bucketed execution layout.
+
+The bucketed round runs one local scan per bucket — ``[C_b, K_b, B]`` instead
+of the padded ``[C, K_max, B]`` — and then *reassembles* the per-client
+results into full ``[C]`` slot-order arrays before anything cross-client
+happens.  That reassembly is the bitwise contract: every aggregation,
+normalization and metric reduction sees exactly the array the padded layout
+would have produced (per-client outputs are bitwise-equal because the
+bucketed index streams and masks are prefixes of the padded ones, and masked
+steps are exact no-ops), so the two layouts cannot drift.
+
+``unbucket`` appends one zeros row to the bucket concatenation; unassigned
+slots (invalid cohort padding) point at it via ``pos``, matching the exact
+zeros the padded layout computes for fully-masked slots.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..data.federated import BucketedBatch
+
+
+def unbucket(parts, pos):
+    """Concat per-bucket stacked pytrees ([C_b, ...] each) + a zeros row,
+    then gather back to original [C, ...] slot order via ``pos``."""
+    full = jax.tree.map(
+        lambda *xs: jnp.concatenate(
+            list(xs) + [jnp.zeros((1,) + xs[0].shape[1:], xs[0].dtype)], axis=0),
+        *parts,
+    )
+    return jax.tree.map(lambda t: jnp.take(t, pos, axis=0), full)
+
+
+def vmap_clients(fn: Callable, batch: BucketedBatch, *per_slot):
+    """vmap ``fn(data_i, mask_i, *extras_i)`` over each bucket, reassemble.
+
+    ``per_slot`` are full-[C] arrays (e.g. the per-client step sizes); each
+    bucket sees its own view through ``Bucket.slots``.  Returns fn's output
+    pytree stacked in original [C, ...] slot order.
+    """
+    parts = [
+        jax.vmap(fn)(b.data, b.step_mask, *[jnp.take(a, b.slots, axis=0) for a in per_slot])
+        for b in batch.buckets
+    ]
+    return unbucket(parts, batch.pos)
+
+
+def scan_clients(fn: Callable, batch: BucketedBatch, *per_slot):
+    """Like :func:`vmap_clients` but one ``lax.scan`` per bucket (sequential
+    cohort mode: each client still uses the whole mesh).  The per-bucket scan
+    stacks its outputs, so — unlike the padded sequential driver, which folds
+    the aggregation into its scan — this stages an O(sum_b C_b)-stacked
+    result tree before the (cheap) slot-order reduction replay.
+    """
+    def one_bucket(b):
+        def body(_, xs):
+            return None, fn(*xs)
+        _, ys = jax.lax.scan(
+            body, None,
+            (b.data, b.step_mask, *[jnp.take(a, b.slots, axis=0) for a in per_slot]))
+        return ys
+
+    return unbucket([one_bucket(b) for b in batch.buckets], batch.pos)

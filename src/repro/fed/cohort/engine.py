@@ -77,8 +77,16 @@ class CohortEngine:
 
     # -- round production ---------------------------------------------------
 
-    def index_plan(self, rnd: int) -> IndexPlan:
-        """One round's host plan under the configured RR backend."""
+    def index_plan(self, rnd: int):
+        """One round's host plan under the configured RR backend (bucketized
+        when ``fl.exec_mode == "bucketed"``; a bucket-overflow round falls
+        back to the padded IndexPlan with a warning, results unchanged)."""
+        plan = self._padded_index_plan(rnd)
+        if self.fl.exec_mode == "bucketed":
+            return self.pipeline.bucketize(plan)
+        return plan
+
+    def _padded_index_plan(self, rnd: int) -> IndexPlan:
         if self.rr_backend == "host":
             return self.pipeline.index_plan(rnd, with_idx=True)
         if self.rr_backend == "host_feistel":

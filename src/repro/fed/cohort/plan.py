@@ -12,13 +12,29 @@ from __future__ import annotations
 import jax
 import numpy as np
 
-from ...data.federated import IndexPlan
+from ...data.federated import Bucket, BucketedPlan, IndexPlan
 from ..rounds import as_device_meta
 
 
-def as_device_plan(plan: IndexPlan, *, device=None) -> IndexPlan:
+def as_device_plan(plan: "IndexPlan | BucketedPlan", *, device=None) -> "IndexPlan | BucketedPlan":
     """Commit a host plan's arrays to the device (transfer starts now)."""
     put = (lambda x: jax.device_put(x, device)) if device is not None else jax.device_put
+    if isinstance(plan, BucketedPlan):
+        return BucketedPlan(
+            buckets=tuple(
+                Bucket(
+                    data=None,
+                    idx=None if b.idx is None else put(np.asarray(b.idx, np.int32)),
+                    step_mask=put(np.asarray(b.step_mask, np.float32)),
+                    slots=put(np.asarray(b.slots, np.int32)),
+                )
+                for b in plan.buckets),
+            meta=as_device_meta(plan.meta),
+            pos=put(np.asarray(plan.pos, np.int32)),
+            sizes=put(np.asarray(plan.sizes, np.int32)),
+            spe=put(np.asarray(plan.spe, np.int32)),
+            rnd=put(np.asarray(plan.rnd, np.int32)),
+        )
     return IndexPlan(
         idx=None if plan.idx is None else put(np.asarray(plan.idx, np.int32)),
         step_mask=put(np.asarray(plan.step_mask, np.float32)),

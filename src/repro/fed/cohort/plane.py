@@ -33,7 +33,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ...configs.base import FLConfig
-from ...data.federated import IndexPlan, Population, RoundBatch
+from ...data.federated import (Bucket, BucketedBatch, BucketedPlan, IndexPlan,
+                               Population, RoundBatch)
 from ...kernels.rr_perm.ops import rr_indices
 from ...kernels.rr_perm.ref import stream_key
 
@@ -54,19 +55,41 @@ class DevicePlane:
         rows = self.rows_fn(client_ids, idx)
         return jax.tree.map(lambda leaf: jnp.take(leaf, rows, axis=0), self.bank)
 
-    def device_indices(self, plan: IndexPlan):
-        """Regenerate the round's RR streams in-jit (stateless, O(cohort))."""
-        prekey = stream_key(self.fl.seed,
-                            plan.meta.client_id.astype(jnp.uint32),
-                            plan.rnd.astype(jnp.uint32), jnp)
+    def _indices(self, client_id, sizes, spe, rnd, K: int):
+        """Regenerate RR streams in-jit (stateless, O(slots)).  The streams
+        are counter-based per (epoch, position), so a K < K_max generation is
+        exactly the K-step prefix of the full stream — which is what keeps
+        bucketed rounds bitwise-identical to padded ones."""
+        prekey = stream_key(self.fl.seed, client_id.astype(jnp.uint32),
+                            rnd.astype(jnp.uint32), jnp)
         backend = "pallas" if self.rr_backend == "device" else "ref"
-        return rr_indices(prekey, plan.sizes, plan.spe,
-                          B=self.fl.local_batch, K=int(plan.step_mask.shape[1]),
+        return rr_indices(prekey, sizes, spe,
+                          B=self.fl.local_batch, K=K,
                           rounds=self.fl.rr_rounds, mode=self.mode,
                           backend=backend, interpret=self.interpret)
 
-    def materialize(self, plan: IndexPlan) -> RoundBatch:
-        """IndexPlan -> RoundBatch, inside the jitted round step."""
+    def device_indices(self, plan: IndexPlan):
+        """Regenerate the round's RR streams in-jit (stateless, O(cohort))."""
+        return self._indices(plan.meta.client_id, plan.sizes, plan.spe,
+                             plan.rnd, int(plan.step_mask.shape[1]))
+
+    def materialize(self, plan: "IndexPlan | BucketedPlan") -> "RoundBatch | BucketedBatch":
+        """Index plan -> round batch, inside the jitted round step."""
+        if isinstance(plan, BucketedPlan):
+            buckets = []
+            for b in plan.buckets:
+                cids = jnp.take(plan.meta.client_id, b.slots, axis=0)
+                idx = b.idx
+                if idx is None:
+                    idx = self._indices(cids,
+                                        jnp.take(plan.sizes, b.slots, axis=0),
+                                        jnp.take(plan.spe, b.slots, axis=0),
+                                        plan.rnd, int(b.step_mask.shape[1]))
+                data = self.gather(cids.astype(jnp.int32), idx)
+                buckets.append(Bucket(data=data, idx=None,
+                                      step_mask=b.step_mask, slots=b.slots))
+            return BucketedBatch(buckets=tuple(buckets), meta=plan.meta,
+                                 pos=plan.pos)
         idx = plan.idx if plan.idx is not None else self.device_indices(plan)
         data = self.gather(plan.meta.client_id.astype(jnp.int32), idx)
         return RoundBatch(data=data, step_mask=plan.step_mask, meta=plan.meta)

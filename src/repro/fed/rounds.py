@@ -40,8 +40,9 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import FLConfig
-from ..data.federated import RoundBatch
+from ..data.federated import Bucket, BucketedBatch, RoundBatch
 from ..utils.pytree import tree_zeros_like
+from .bucketing import scan_clients, vmap_clients
 from .server import ServerState
 from .strategy import BoundStrategy, FedStrategy, RoundCtx, bind_strategy
 
@@ -69,45 +70,68 @@ def build_round_step(loss_fn: Callable,
     one_client = strat.local_step
 
     def round_step(state: ServerState, batch, lr_mult=1.0):
-        if not isinstance(batch, RoundBatch):
-            # cohort-engine path: an IndexPlan — materialize on device (gather
-            # through the resident bank; device RR backends also regenerate
-            # the index streams here, inside the jit)
+        if not isinstance(batch, (RoundBatch, BucketedBatch)):
+            # cohort-engine path: an IndexPlan / BucketedPlan — materialize on
+            # device (gather through the resident bank; device RR backends
+            # also regenerate the index streams here, inside the jit)
             if plane is None:
                 raise TypeError(
-                    "round_step received an IndexPlan but build_round_step was "
+                    "round_step received an index plan but build_round_step was "
                     "called without plane=; pass the engine's DevicePlane")
             batch = plane.materialize(batch)
+        bucketed = isinstance(batch, BucketedBatch)
         meta = batch.meta
         plan = strat.client_transform(meta, lr_mult)                   # eta [C]
         momentum = state.opt.get("m", None)
         if momentum is None:
             momentum = tree_zeros_like(state.params)
 
+        def client(data_i, mask_i, eta_i):
+            return one_client(state.params, momentum, data_i, mask_i, eta_i)
+
         if fl.cohort_mode == "vmapped":
-            deltas, losses = jax.vmap(
-                lambda d, m, e: one_client(state.params, momentum, d, m, e)
-            )(batch.data, batch.step_mask, plan.eta)
+            if bucketed:
+                # per-bucket [C_b, K_b] scans, reassembled to [C] slot order
+                # before any cross-client math — bitwise-identical aggregate
+                deltas, losses = vmap_clients(client, batch, plan.eta)
+            else:
+                deltas, losses = jax.vmap(client)(batch.data, batch.step_mask,
+                                                  plan.eta)
             delta_agg = strat.aggregate(deltas, meta)
         else:  # sequential: the scan accumulates coeff_i * Delta_i as it goes,
             # so the strategy contributes through agg_coeffs rather than the
             # whole-cohort aggregate hook
             coeff = strat.agg_coeffs(meta)                             # [C]
-
-            def body(acc, xs):
-                data_i, mask_i, eta_i, coeff_i = xs
-                delta, loss = one_client(state.params, momentum, data_i, mask_i, eta_i)
-                acc = jax.tree.map(
-                    lambda A, D: (A + coeff_i * D.astype(jnp.float32)).astype(A.dtype),
-                    acc, delta,
-                )
-                return acc, loss
-
             acc_dt = jnp.dtype(fl.accum_dtype)
             acc0 = jax.tree.map(lambda x: jnp.zeros_like(x, acc_dt), state.params)
-            delta_agg, losses = jax.lax.scan(
-                body, acc0, (batch.data, batch.step_mask, plan.eta, coeff)
-            )
+
+            if bucketed:
+                # per-bucket client scans stage stacked deltas, then the same
+                # coeff_i-weighted accumulation replays in slot order
+                deltas, losses = scan_clients(client, batch, plan.eta)
+
+                def accum(acc, xs):
+                    delta, coeff_i = xs
+                    acc = jax.tree.map(
+                        lambda A, D: (A + coeff_i * D.astype(jnp.float32)).astype(A.dtype),
+                        acc, delta,
+                    )
+                    return acc, None
+
+                delta_agg, _ = jax.lax.scan(accum, acc0, (deltas, coeff))
+            else:
+                def body(acc, xs):
+                    data_i, mask_i, eta_i, coeff_i = xs
+                    delta, loss = client(data_i, mask_i, eta_i)
+                    acc = jax.tree.map(
+                        lambda A, D: (A + coeff_i * D.astype(jnp.float32)).astype(A.dtype),
+                        acc, delta,
+                    )
+                    return acc, loss
+
+                delta_agg, losses = jax.lax.scan(
+                    body, acc0, (batch.data, batch.step_mask, plan.eta, coeff)
+                )
             delta_agg = jax.tree.map(lambda a, p: a.astype(p.dtype), delta_agg, state.params)
 
         ctx = RoundCtx(batch=batch, lr_mult=lr_mult, momentum=momentum)
@@ -138,9 +162,33 @@ def as_device_meta(meta):
 
 
 def as_device_batch(rb):
-    """Host RoundBatch (numpy) -> jnp pytree with float32 meta scalars."""
+    """Host RoundBatch / BucketedBatch (numpy) -> jnp pytree, float32 meta."""
+    if isinstance(rb, BucketedBatch):
+        return BucketedBatch(
+            buckets=tuple(
+                Bucket(data=jax.tree.map(jnp.asarray, b.data), idx=None,
+                       step_mask=jnp.asarray(b.step_mask),
+                       slots=jnp.asarray(b.slots))
+                for b in rb.buckets),
+            meta=as_device_meta(rb.meta),
+            pos=jnp.asarray(rb.pos),
+        )
     return type(rb)(
         data=jax.tree.map(jnp.asarray, rb.data),
         step_mask=jnp.asarray(rb.step_mask),
         meta=as_device_meta(rb.meta),
     )
+
+
+def jit_round_step(step: Callable, *, donate: bool | None = None) -> Callable:
+    """jit a round step, donating the ``ServerState`` argument's buffers.
+
+    Donation lets XLA update params/opt-state in place instead of copying the
+    whole model every round — the caller must not reuse a state object after
+    passing it (the train loop rebinds, so that holds).  ``donate=None``
+    auto-disables on CPU, where XLA does not implement buffer donation and
+    would warn every compile.
+    """
+    if donate is None:
+        donate = jax.default_backend() != "cpu"
+    return jax.jit(step, donate_argnums=(0,) if donate else ())

@@ -48,7 +48,9 @@ from ..configs.base import FLConfig
 from ..core import algorithms as _alg
 from ..core.algorithms import GenSpec, PRESETS, agg_coeff, lr_scale
 from ..core.local import full_local_gradient, local_mvr, local_sgd
-from ..utils.pytree import tree_zeros_like
+from ..data.federated import BucketedBatch
+from ..utils.pytree import tree_copy, tree_zeros_like
+from .bucketing import scan_clients, vmap_clients
 from .server import ServerState
 
 StrategyState = dict  # the server-side optimizer state (the ``opt`` dict)
@@ -187,7 +189,9 @@ def _mvr_opt() -> ServerOpt:
     def init(fl: FLConfig, params) -> dict:
         opt = {"m": tree_zeros_like(params)}    # gradient estimate (eq. 14)
         if fl.mvr_exact:
-            opt["x_prev"] = params
+            # own buffers: params is also ServerState.params, and a donated
+            # round-0 state must not reference one buffer through two leaves
+            opt["x_prev"] = tree_copy(params)
         return opt
 
     def make_update(fl: FLConfig, gen: GenSpec, loss_fn, cohort_mode):
@@ -199,6 +203,29 @@ def _mvr_opt() -> ServerOpt:
                 wp = meta.valid * meta.weight / meta.prob              # [C]
                 if fl.mvr_exact:
                     def grads_at(p):
+                        if isinstance(batch, BucketedBatch):
+                            # per-bucket local gradients, reassembled to [C]
+                            # slot order so the wp-weighted reduction below is
+                            # bitwise-identical to the padded layout
+                            def g(d, m):
+                                return full_local_gradient(loss_fn, p, d, m)
+
+                            if cohort_mode == "vmapped":
+                                gs = vmap_clients(g, batch)
+                                return jax.tree.map(
+                                    lambda t: jnp.einsum(
+                                        "c,c...->...", wp.astype(jnp.float32), t), gs)
+                            gs = scan_clients(g, batch)
+
+                            def accum(acc, xs):
+                                G, c = xs
+                                return jax.tree.map(
+                                    lambda A, Gl: A + c * Gl, acc, G), None
+
+                            acc0 = jax.tree.map(
+                                lambda x: jnp.zeros_like(x, jnp.float32), p)
+                            out, _ = jax.lax.scan(accum, acc0, (gs, wp))
+                            return out
                         if cohort_mode == "vmapped":
                             gs = jax.vmap(
                                 lambda d, m: full_local_gradient(loss_fn, p, d, m)
@@ -454,6 +481,11 @@ def bind_strategy(strategy: "FedStrategy | BoundStrategy | None", fl: FLConfig,
             f"{fl.server_opt!r}; make them agree.")
     if fl.engine not in ("legacy", "cohort"):
         raise ValueError(f"unknown engine {fl.engine!r}; have ('legacy', 'cohort')")
+    if fl.exec_mode not in ("padded", "bucketed"):
+        raise ValueError(
+            f"unknown exec_mode {fl.exec_mode!r}; have ('padded', 'bucketed')")
+    if fl.exec_mode == "bucketed" and fl.buckets < 1:
+        raise ValueError(f"fl.buckets must be >= 1, got {fl.buckets}")
     if fl.engine == "cohort":
         # better a loud bind-time error than a first-round failure deep in the
         # prefetch thread: the engine knobs are all validated here
@@ -478,6 +510,9 @@ def bind_strategy(strategy: "FedStrategy | BoundStrategy | None", fl: FLConfig,
     gen = strategy.gen
 
     def init(params) -> ServerState:
+        # copy: round 0 may donate this state's buffers (jit_round_step), and
+        # the caller keeps ownership of the pytree it passed in
+        params = tree_copy(params)
         return ServerState(params=params, opt=sdef.init(fl, params),
                            rnd=jnp.zeros((), jnp.int32))
 

@@ -9,7 +9,6 @@ import time
 from dataclasses import dataclass
 from typing import Any, Callable
 
-import jax
 import jax.numpy as jnp
 
 from ..configs.base import FLConfig
@@ -17,7 +16,7 @@ from ..data.federated import FederatedPipeline
 from ..utils.checkpoint import save_checkpoint
 from ..utils.logging import MetricLogger, log
 from .cohort import CohortEngine
-from .rounds import as_device_batch, build_round_step
+from .rounds import as_device_batch, build_round_step, jit_round_step
 from .server import ServerState, cosine_schedule, wsd_schedule
 from .strategy import BoundStrategy, FedStrategy, bind_strategy
 
@@ -63,8 +62,12 @@ def train(
         raise ValueError("fl differs from the config the CohortEngine was built over")
     if engine is None and fl.engine == "cohort":
         engine = CohortEngine.from_pipeline(pipeline)
-    step = jax.jit(build_round_step(loss_fn, strat, fl, num_clients=fl.num_clients,
-                                    plane=engine.plane if engine else None))
+    # the ServerState argument is donated (in-place params/opt update; no
+    # per-round copy of the model) — safe because the loop rebinds ``state``
+    # and never touches a previous round's state again
+    step = jit_round_step(build_round_step(loss_fn, strat, fl,
+                                           num_clients=fl.num_clients,
+                                           plane=engine.plane if engine else None))
     ml = MetricLogger(name=name)
     t0 = time.time()
 

@@ -14,6 +14,17 @@ def tree_zeros_like(tree):
     return jax.tree.map(jnp.zeros_like, tree)
 
 
+def tree_copy(tree):
+    """Fresh device buffers for every leaf (values unchanged).
+
+    Needed wherever one pytree would otherwise hold the same buffer through
+    two leaves (or share it with a caller-owned array): buffer donation
+    (``jit_round_step``) invalidates donated inputs, and a doubly-referenced
+    donated buffer is an error on backends that implement donation.
+    """
+    return jax.tree.map(lambda x: jnp.array(x, copy=True), tree)
+
+
 def tree_add(a, b):
     return jax.tree.map(jnp.add, a, b)
 

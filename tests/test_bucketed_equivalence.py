@@ -1,0 +1,194 @@
+"""Bucketed-execution equivalence: frozen-seed BITWISE-identical
+``ServerState`` between ``fl.exec_mode="bucketed"`` (one scan per static step
+bucket) and the padded reference layout, across presets x cohort modes x
+{legacy host assembly, cohort engine, engine + prefetch thread}.
+
+The bucketed layout only changes *where* each client's (identical) index
+stream and mask prefix execute; all cross-client math runs on slot-order
+reassembled arrays, so the trajectories cannot drift.  Also covered: the
+bucket-overflow fallback to the padded plan (warns, results unchanged) and a
+recompile guard (one compilation across rounds with rotating cohorts).
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.data.federated import (BucketedBatch, BucketedPlan, BucketLayout,
+                                  FederatedPipeline, IndexPlan, Population)
+from repro.data.tasks import DuplicatedQuadraticTask, PopulationQuadraticTask
+from repro.fed.cohort import CohortEngine
+from repro.fed.losses import make_quadratic_loss
+from repro.fed.rounds import as_device_batch, build_round_step
+from repro.fed.strategy import bind_strategy, strategy_for
+
+# 8 clients with 1..9 copies => realized K_i spread over several buckets
+TASK = DuplicatedQuadraticTask(copies=(1, 4, 9, 2, 6, 3, 1, 8))
+DIM = len(TASK.copies)
+LOSS = make_quadratic_loss(DIM)
+P0 = {"x": jnp.array([0.3, -0.1, 0.2, 0.05, -0.3, 0.1, 0.0, 0.4], jnp.float32)}
+N_ROUNDS = 3
+
+
+def _fl(preset, mode, opt="sgd", sampling="uniform", **kw):
+    return FLConfig(num_clients=DIM, cohort_size=4, sampling=sampling, epochs=2,
+                    local_batch=2, algorithm=preset, local_lr=0.05, server_lr=0.8,
+                    server_opt=opt, mvr_a=0.2, cohort_mode=mode,
+                    drop_last_steps=1, seed=11, buckets=3, **kw)
+
+
+def _assert_tree_equal(a, b, what):
+    assert jax.tree.structure(a) == jax.tree.structure(b), what
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y), err_msg=what)
+
+
+def _run(fl, path):
+    """One frozen-seed trajectory; ``path`` picks the data/transport plane."""
+    pop = Population.build(fl, sizes=TASK.sizes())
+    strat = bind_strategy(strategy_for(fl), fl, LOSS, num_clients=fl.num_clients)
+    state = strat.init(P0)
+    if path == "legacy":
+        pipe = FederatedPipeline(TASK, pop, fl)
+        step = build_round_step(LOSS, strat, fl, num_clients=fl.num_clients)
+        for r in range(N_ROUNDS):
+            state, mets = step(state, as_device_batch(pipe.round_batch(r)))
+        return state, mets
+    prefetch = 2 if path == "engine_prefetch" else 0
+    fl_e = dataclasses.replace(fl, engine="cohort", prefetch=prefetch)
+    eng = CohortEngine.build(TASK, pop, fl_e)
+    step = build_round_step(LOSS, strat, fl, num_clients=fl.num_clients,
+                            plane=eng.plane)
+    with eng.round_plans(N_ROUNDS, prefetch=prefetch) as it:
+        for r, plan in it:
+            state, mets = step(state, plan)
+    return state, mets
+
+
+@pytest.mark.parametrize("path", ["legacy", "engine", "engine_prefetch"])
+@pytest.mark.parametrize("mode", ["vmapped", "sequential"])
+@pytest.mark.parametrize("preset", ["fedshuffle", "fednova", "fedavg_min"])
+def test_bucketed_matches_padded_bitwise(preset, mode, path):
+    fl = _fl(preset, mode)
+    ps, pm = _run(dataclasses.replace(fl, exec_mode="padded"), path)
+    bs, bm = _run(dataclasses.replace(fl, exec_mode="bucketed"), path)
+    tag = f"{preset}/{mode}/{path}"
+    _assert_tree_equal(ps.params, bs.params, f"{tag}: params")
+    _assert_tree_equal(ps.opt, bs.opt, f"{tag}: opt state")
+    np.testing.assert_array_equal(np.asarray(ps.rnd), np.asarray(bs.rnd), tag)
+    _assert_tree_equal(pm, bm, f"{tag}: metrics")
+
+
+@pytest.mark.parametrize("mode", ["vmapped", "sequential"])
+def test_bucketed_matches_padded_independent_sampling(mode):
+    """Independent sampling leaves invalid padding slots unassigned — the
+    reassembly's zeros row must reproduce the padded layout's exact-zero
+    deltas for them."""
+    fl = _fl("fedshuffle", mode, sampling="independent")
+    ps, _ = _run(dataclasses.replace(fl, exec_mode="padded"), "engine")
+    bs, _ = _run(dataclasses.replace(fl, exec_mode="bucketed"), "engine")
+    _assert_tree_equal(ps.params, bs.params, f"independent/{mode}: params")
+    _assert_tree_equal(ps.opt, bs.opt, f"independent/{mode}: opt state")
+
+
+@pytest.mark.parametrize("mode", ["vmapped", "sequential"])
+def test_bucketed_matches_padded_mvr_exact(mode):
+    """mvr_exact's server update re-reads batch data at two parameter points;
+    with buckets that means per-bucket local gradients reassembled before the
+    wp-weighted reduction."""
+    fl = _fl("fedshuffle", mode, opt="mvr", mvr_exact=True)
+    ps, _ = _run(dataclasses.replace(fl, exec_mode="padded"), "engine")
+    bs, _ = _run(dataclasses.replace(fl, exec_mode="bucketed"), "engine")
+    _assert_tree_equal(ps.params, bs.params, f"mvr-exact/{mode}: params")
+    _assert_tree_equal(ps.opt, bs.opt, f"mvr-exact/{mode}: opt state")
+
+
+def test_bucketed_device_rr_matches_host():
+    """Device-regenerated RR streams are counter-based per position, so a
+    [C_b, K_b] generation is the exact prefix of the [C, K_max] one — the
+    three cipher backends stay interchangeable under bucketing."""
+    fl = dataclasses.replace(_fl("fedshuffle", "vmapped"), engine="cohort",
+                             rr_backend="host_feistel", exec_mode="bucketed")
+    pop = Population.build(fl, sizes=TASK.sizes())
+    strat = bind_strategy(strategy_for(fl), fl, LOSS, num_clients=fl.num_clients)
+    states = {}
+    for backend in ["host_feistel", "device_ref"]:
+        eng = CohortEngine.build(TASK, pop, fl, rr_backend=backend)
+        step = build_round_step(LOSS, strat, fl, num_clients=fl.num_clients,
+                                plane=eng.plane)
+        state = strat.init(P0)
+        with eng.round_plans(N_ROUNDS, prefetch=0) as it:
+            for r, plan in it:
+                state, _ = step(state, plan)
+        states[backend] = state
+    _assert_tree_equal(states["host_feistel"].params, states["device_ref"].params,
+                       "host_feistel vs device_ref under buckets")
+
+
+def test_overflow_falls_back_to_padded_plan():
+    """A round whose slot demand exceeds every eligible bucket's capacity
+    must warn and run as the padded plan — same results, no crash."""
+    fl = dataclasses.replace(_fl("fedshuffle", "vmapped"), exec_mode="bucketed")
+    pop = Population.build(fl, sizes=TASK.sizes())
+    pipe = FederatedPipeline(TASK, pop, fl)
+    pipe._bucket_layout = BucketLayout(edges=(pipe.k_max,), caps=(1,))  # starve
+    with pytest.warns(RuntimeWarning, match="bucketed layout overflow"):
+        plan = pipe.bucketed_plan(0)
+    assert isinstance(plan, IndexPlan) and not isinstance(plan, BucketedPlan)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        batch = pipe.round_batch(0)
+    assert not isinstance(batch, BucketedBatch)
+    ref = FederatedPipeline(TASK, pop, dataclasses.replace(fl, exec_mode="padded"))
+    want = ref.round_batch(0)
+    _assert_tree_equal(batch.data, want.data, "fallback batch data")
+    np.testing.assert_array_equal(batch.step_mask, want.step_mask)
+
+
+def test_train_loop_bucketed_matches_padded():
+    """End-to-end ``fed.train`` (jitted, engine + prefetch): bucketed equals
+    padded bit-for-bit."""
+    from repro.fed.train_loop import train
+
+    states = {}
+    for exec_mode in ["padded", "bucketed"]:
+        fl = dataclasses.replace(_fl("fedshuffle", "vmapped"), engine="cohort",
+                                 exec_mode=exec_mode)
+        pipe = FederatedPipeline(TASK, Population.build(fl, sizes=TASK.sizes()), fl)
+        states[exec_mode] = train(LOSS, P0, pipe, fl, 4, log_every=0).state
+    _assert_tree_equal(states["padded"].params, states["bucketed"].params,
+                       "train(): params")
+    _assert_tree_equal(states["padded"].opt, states["bucketed"].opt, "train(): opt")
+
+
+def test_single_compilation_across_rotating_cohorts():
+    """The bucket layout is static (population-derived edges and caps), so a
+    jitted bucketed step must compile exactly once over rounds whose cohorts
+    — and hence per-bucket occupancies — rotate."""
+    n = 200
+    rng = np.random.default_rng(0)
+    sizes = np.maximum(2, np.round(np.exp(rng.normal(np.log(8), 0.9, n)))).astype(np.int64)
+    task = PopulationQuadraticTask(dim=4, num_clients=n, samples_per_client=8)
+    fl = FLConfig(num_clients=n, cohort_size=16, sampling="uniform", epochs=2,
+                  local_batch=2, algorithm="fedshuffle", local_lr=0.05,
+                  engine="cohort", exec_mode="bucketed", buckets=4,
+                  rr_backend="device_ref", seed=7)
+    eng = CohortEngine.build(task, Population.build(fl, sizes=sizes), fl)
+    assert len(eng.pipeline.bucket_layout.edges) > 1    # actually bucketed
+    loss = make_quadratic_loss(4)
+    strat = bind_strategy(strategy_for(fl), fl, loss, num_clients=n)
+    step = jax.jit(build_round_step(loss, strat, fl, num_clients=n,
+                                    plane=eng.plane))
+    state = strat.init({"x": jnp.zeros(4)})
+    cohorts = set()
+    for r in range(10):
+        plan = eng.device_plan(r)
+        assert isinstance(plan, BucketedPlan)           # no overflow fallback
+        cohorts.add(tuple(int(c) for c in np.asarray(plan.meta.client_id)))
+        state, _ = step(state, plan)
+    assert len(cohorts) > 1                             # cohorts really rotate
+    assert step._cache_size() == 1
