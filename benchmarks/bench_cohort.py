@@ -19,6 +19,14 @@ cohort engine + prefetch, so the delta is purely the batch layout), plus the
 useful-step fraction sum_i K_i / (C * K_max) that the padded layout wastes.
 Writes ``BENCH_bucketed.json`` / ``benchmarks/results/bench_bucketed.csv``;
 ``--check`` then asserts bucketed >= 2x padded rounds/sec.
+
+``--stateful`` measures the per-client state bank of stateful local chains:
+scaffold (control variates, [N+1, dim] bank + O(cohort) gather/scatter per
+round) vs plain sgd rounds/sec at 1e3/1e5/1e6 clients, plus the per-round
+state bytes actually moved (2 * C * row) vs the resident bank bytes.  Writes
+``BENCH_stateful.json`` / ``benchmarks/results/bench_stateful.csv``;
+``--check`` asserts the O(cohort) bar — scaffold keeps >= 40% of sgd
+throughput at EVERY population size (an O(N) scatter would collapse at 1e6).
 """
 from __future__ import annotations
 
@@ -35,13 +43,14 @@ from repro.data.federated import FederatedPipeline, Population
 from repro.data.tasks import PopulationQuadraticTask
 from repro.fed.cohort import CohortEngine
 from repro.fed.losses import make_quadratic_loss
-from repro.fed.rounds import as_device_batch, build_round_step
+from repro.fed.rounds import as_device_batch, build_round_step, jit_round_step
 from repro.fed.strategy import bind_strategy, strategy_for
 
 from .common import RESULTS_DIR, csv_row
 
 BASELINE_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_cohort.json")
 BUCKETED_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_bucketed.json")
+STATEFUL_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_stateful.json")
 
 # The regime the engine exists for: wide cohorts of small local batches,
 # where the legacy path is bound by its per-client python assembly loop
@@ -187,6 +196,79 @@ def bench_imbalanced_population(pop: int, rounds: int) -> dict:
     return out
 
 
+def _write_scenario(results: dict, rows: list, baseline_path: str,
+                    csv_name: str, write_baseline: bool) -> list[str]:
+    """Shared tail of every scenario driver: the committed full-size baseline
+    JSON (skipped for --quick, which must not clobber it) + the CI CSV."""
+    if write_baseline:
+        import json
+
+        with open(baseline_path, "w") as f:
+            json.dump(results, f, indent=2, default=float)
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, csv_name), "w") as f:
+        f.write("name,us_per_call,derived\n")
+        f.writelines(r + "\n" for r in rows)
+    return rows
+
+
+# -- stateful scenario (per-client state bank gather/scatter overhead) ------
+
+
+def bench_stateful_population(pop: int, rounds: int) -> dict:
+    task = PopulationQuadraticTask(dim=DIM, num_clients=pop, samples_per_client=SAMPLES)
+    sizes = task.sizes()
+    loss = make_quadratic_loss(DIM)
+    params = {"x": jnp.zeros(DIM)}
+    out: dict = {}
+    for name, opt in [("sgd", "sgd"), ("scaffold", "scaffold")]:
+        fl = _fl(pop, engine="cohort", rr_backend="device_ref", prefetch=2,
+                 server_opt=opt)
+        eng = CohortEngine.build(task, Population.build(fl, sizes=sizes), fl)
+        strat = bind_strategy(strategy_for(fl), fl, loss, num_clients=pop)
+        # ServerState donation is what keeps the [N+1, dim] bank update
+        # in-place — without it XLA copies the whole bank every round and the
+        # scatter is O(N) no matter how few rows change (both arms donate so
+        # the comparison isolates the gather/scatter itself)
+        step = jit_round_step(build_round_step(loss, strat, fl, num_clients=pop,
+                                               plane=eng.plane), donate=True)
+        st = strat.init(params)
+        st, _ = step(st, eng.device_plan(0))            # compile
+        jax.block_until_ready(st.params)
+        out[name] = _time_engine(eng, step, st, rounds, 2)
+        if name == "scaffold":
+            row_bytes = DIM * 4                          # one client's f32 row
+            out["state_bank_bytes"] = (pop + 1) * row_bytes
+            # gather [C, dim] in + scatter [C, dim] out, per round
+            out["per_round_state_bytes"] = 2 * COHORT * row_bytes
+            out["compilations"] = step._cache_size()
+    out["scaffold_vs_sgd"] = out["scaffold"] / out["sgd"]
+    return out
+
+
+def main_stateful(pops=(1_000, 100_000, 1_000_000), rounds: int = 60,
+                  check: bool = False, write_baseline: bool = True) -> list[str]:
+    rows = []
+    results: dict = {"dim": DIM, "cohort": COHORT, "local_batch": 2, "epochs": 2,
+                     "samples_per_client": SAMPLES, "rounds_timed": rounds,
+                     "populations": {}}
+    for pop in pops:
+        res = bench_stateful_population(pop, rounds)
+        results["populations"][str(pop)] = res
+        for name in ("sgd", "scaffold"):
+            rows.append(csv_row(f"stateful/{pop}/{name}", 1.0 / res[name],
+                                f"{res[name]:.1f}rps"))
+        print(f"pop={pop}: " + ", ".join(f"{k}={v:.3f}" if isinstance(v, float)
+                                         else f"{k}={v}" for k, v in res.items()))
+        if check:
+            # O(cohort) state traffic: the bank row scatter must not scale
+            # with N — an O(N) implementation craters scaffold rps at 1e6
+            assert res["scaffold_vs_sgd"] >= 0.4, (pop, res)
+            assert res["compilations"] == 1, (pop, res)
+    return _write_scenario(results, rows, STATEFUL_PATH, "bench_stateful.csv",
+                           write_baseline)
+
+
 def main_imbalanced(pops=(1_000, 100_000, 1_000_000), rounds: int = 60,
                     check: bool = False, write_baseline: bool = True) -> list[str]:
     rows = []
@@ -204,16 +286,8 @@ def main_imbalanced(pops=(1_000, 100_000, 1_000_000), rounds: int = 60,
         if check:
             assert res["speedup_bucketed_vs_padded"] >= 2.0, (pop, res)
             assert res["compilations"] == 1, (pop, res)
-    if write_baseline:
-        import json
-
-        with open(BUCKETED_PATH, "w") as f:
-            json.dump(results, f, indent=2, default=float)
-    os.makedirs(RESULTS_DIR, exist_ok=True)
-    with open(os.path.join(RESULTS_DIR, "bench_bucketed.csv"), "w") as f:
-        f.write("name,us_per_call,derived\n")
-        f.writelines(r + "\n" for r in rows)
-    return rows
+    return _write_scenario(results, rows, BUCKETED_PATH, "bench_bucketed.csv",
+                           write_baseline)
 
 
 def main(pops=(1_000, 100_000, 1_000_000), rounds: int = 60,
@@ -233,16 +307,8 @@ def main(pops=(1_000, 100_000, 1_000_000), rounds: int = 60,
         print(f"pop={pop}: " + ", ".join(f"{k}={v:.1f}" for k, v in res.items()))
         if check:
             assert res["speedup_prefetch_vs_legacy"] >= 2.0, (pop, res)
-    if write_baseline:
-        import json
-
-        with open(BASELINE_PATH, "w") as f:
-            json.dump(results, f, indent=2, default=float)
-    os.makedirs(RESULTS_DIR, exist_ok=True)
-    with open(os.path.join(RESULTS_DIR, "bench_cohort.csv"), "w") as f:
-        f.write("name,us_per_call,derived\n")
-        f.writelines(r + "\n" for r in rows)
-    return rows
+    return _write_scenario(results, rows, BASELINE_PATH, "bench_cohort.csv",
+                           write_baseline)
 
 
 if __name__ == "__main__":
@@ -254,12 +320,15 @@ if __name__ == "__main__":
                     help="assert the >=2x acceptance bar")
     ap.add_argument("--imbalanced", action="store_true",
                     help="zipf scenario: padded vs bucketed execution layout")
+    ap.add_argument("--stateful", action="store_true",
+                    help="stateful-chain scenario: scaffold state bank vs sgd")
     args = ap.parse_args()
     pops = (1_000, 10_000) if args.quick else (1_000, 100_000, 1_000_000)
     rounds = args.rounds or (15 if args.quick else 60)
     print("name,us_per_call,derived")
     # --quick (CI smoke) must not clobber the committed full-size baselines
-    entry = main_imbalanced if args.imbalanced else main
+    entry = (main_stateful if args.stateful
+             else main_imbalanced if args.imbalanced else main)
     for row in entry(pops=pops, rounds=rounds, check=args.check,
                      write_baseline=not args.quick):
         print(row)

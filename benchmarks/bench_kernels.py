@@ -10,7 +10,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels.flash_attention.ops import flash_attend, reference_attend
 from repro.kernels.ssd.ops import ssd_scan

@@ -14,8 +14,6 @@ paper's orderings and records everything under benchmarks/results/.
 """
 from __future__ import annotations
 
-import dataclasses
-
 import jax.numpy as jnp
 import numpy as np
 

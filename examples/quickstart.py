@@ -1,7 +1,10 @@
-"""Quickstart: federated-train a tiny char-LM with FedShuffle, then serve it.
+"""Quickstart: federated-train a tiny char-LM with FedShuffle, then serve it
+— and register a custom client transform (per-step update clipping) to show
+the composable local-work API.
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import dataclasses
 import os
 import sys
 
@@ -14,6 +17,8 @@ from repro.configs.base import FLConfig
 from repro.configs.paper_tasks import CHARLM_TINY
 from repro.data.federated import FederatedPipeline, Population
 from repro.data.tasks import CharLMTask
+from repro.fed import (ClientChain, ClientTransform, register_client_transform,
+                       register_local_update)
 from repro.fed.losses import make_loss
 from repro.fed.train_loop import train
 from repro.launch.serve import generate
@@ -45,6 +50,34 @@ def main():
     out = generate(model, result.state.params, prompts, steps=12, cache_len=24,
                    temperature=0.8)
     print("generated:", out.tolist())
+
+    # 4. custom client transform: clip each local step's fp32 descent
+    #    direction to a global-norm bound, then register the chain as a new
+    #    local-update rule selectable via FLConfig.local_update.  (The
+    #    built-in "local_clip" rule does the same via fl.clip_norm; this
+    #    shows the extension API the built-ins are made of.)
+    def make_demo_clip(loss_fn, fl_cfg):
+        limit = 0.5
+
+        def update(step, d, carry, cstate):
+            nrm = jnp.sqrt(sum(jnp.sum(x * x) for x in jax.tree.leaves(d)))
+            scale = jnp.minimum(1.0, limit / jnp.maximum(nrm, 1e-12))
+            return jax.tree.map(lambda x: x * scale, d), carry
+
+        return ClientTransform(name="demo_clip", init=lambda p: {},
+                               update=update)
+
+    register_client_transform("demo_clip", make_demo_clip)
+    register_local_update("sgd_demo_clip",
+                          ClientChain("sgd_demo_clip", ("demo_clip",)))
+
+    fl_clip = dataclasses.replace(fl, server_opt="sgd",
+                                  local_update="sgd_demo_clip")
+    clipped = train(make_loss(model), params,
+                    FederatedPipeline(task, Population.build(fl_clip), fl_clip),
+                    fl_clip, rounds=5, name="quickstart-clip", log_every=1)
+    print("clipped-chain final local loss:",
+          clipped.metrics.rows[-1]["local_loss"])
 
 
 if __name__ == "__main__":

@@ -10,7 +10,6 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.registry import get_arch
 from repro.launch.serve import generate

@@ -188,7 +188,16 @@ Algorithm = Literal[
 ]
 Sampling = Literal["full", "uniform", "independent"]
 Aggregation = Literal["unbiased", "sum_one"]
-ServerOpt = Literal["sgd", "momentum", "mvr", "adam"]
+ServerOpt = Literal["sgd", "momentum", "mvr", "adam", "scaffold"]
+# Local update chain (repro.fed.strategy.LOCAL_UPDATES; extensible via
+# register_local_update, hence plain str):
+#   ""           — defer to the server optimizer's paired default
+#   "sgd"        — plain RR-SGD (the empty transform chain)
+#   "mvr"        — MVR-corrected steps (needs server opt providing "m")
+#   "scaffold"   — SCAFFOLD control variates (needs server_opt="scaffold";
+#                  keeps a persistent [N, params] state bank)
+#   "fedprox"    — proximal term mu*(y - x) (knob: prox_mu)
+#   "local_clip" — per-step direction-norm clip (knob: clip_norm)
 CohortMode = Literal["vmapped", "sequential"]
 Engine = Literal["legacy", "cohort"]
 # Round-batch layout the jitted step executes:
@@ -230,6 +239,10 @@ class FLConfig:
     momentum: float = 0.9          # used by "momentum"
     mvr_a: float = 0.1             # MVR a parameter
     mvr_exact: bool = False        # exact eq.(13-14) vs practical approx (App. F)
+    # local client work (composable transform chains; see Literal note above)
+    local_update: str = ""         # "" => server opt's paired default
+    prox_mu: float = 0.1           # fedprox proximal coefficient
+    clip_norm: float = 1.0         # local_clip per-step direction-norm bound
     # distribution
     cohort_mode: CohortMode = "vmapped"
     accum_dtype: str = "float32"   # sequential-mode delta accumulator dtype

@@ -1,9 +1,19 @@
+from ..core.local import (
+    CLIENT_TRANSFORMS,
+    ClientChain,
+    ClientTransform,
+    RoundEnd,
+    StepCtx,
+    register_client_transform,
+)
 from .rounds import as_device_batch, build_round_step, jit_round_step
 from .server import ServerState, apply_server, init_server, wsd_schedule, cosine_schedule
 from .strategy import (
+    LOCAL_UPDATES,
     SERVER_OPTS,
     STRATEGIES,
     BoundStrategy,
+    CohortState,
     FedStrategy,
     ServerOpt,
     ServerTransform,
@@ -13,6 +23,7 @@ from .strategy import (
     register_local_update,
     register_server_opt,
     register_strategy,
+    scaffold_ctl,
     strategy_for,
 )
 from .cohort import (
@@ -29,8 +40,11 @@ __all__ = ["as_device_batch", "build_round_step", "jit_round_step",
            "ServerState", "apply_server",
            "init_server", "wsd_schedule", "cosine_schedule", "train",
            "FedStrategy", "BoundStrategy", "ServerOpt", "ServerTransform",
-           "STRATEGIES", "SERVER_OPTS", "strategy_for", "bind_strategy",
+           "STRATEGIES", "SERVER_OPTS", "LOCAL_UPDATES", "CLIENT_TRANSFORMS",
+           "strategy_for", "bind_strategy",
            "register_strategy", "register_server_opt", "register_local_update",
-           "chain", "heavy_ball",
+           "register_client_transform", "chain", "heavy_ball", "scaffold_ctl",
+           "ClientChain", "ClientTransform", "StepCtx", "RoundEnd",
+           "CohortState",
            "CohortEngine", "DevicePlane", "RoundPrefetcher", "as_device_plan",
            "build_plane", "register_participation"]

@@ -34,15 +34,22 @@ def unbucket(parts, pos):
     return jax.tree.map(lambda t: jnp.take(t, pos, axis=0), full)
 
 
+def _take_slots(extra, slots):
+    """A bucket's view of a full-[C] per-slot extra (array or pytree — e.g.
+    the gathered per-client state, whose leaves are [C, ...])."""
+    return jax.tree.map(lambda t: jnp.take(t, slots, axis=0), extra)
+
+
 def vmap_clients(fn: Callable, batch: BucketedBatch, *per_slot):
     """vmap ``fn(data_i, mask_i, *extras_i)`` over each bucket, reassemble.
 
-    ``per_slot`` are full-[C] arrays (e.g. the per-client step sizes); each
-    bucket sees its own view through ``Bucket.slots``.  Returns fn's output
-    pytree stacked in original [C, ...] slot order.
+    ``per_slot`` are full-[C] arrays or pytrees with [C, ...] leaves (e.g.
+    the per-client step sizes, the gathered client-state rows); each bucket
+    sees its own view through ``Bucket.slots``.  Returns fn's output pytree
+    stacked in original [C, ...] slot order.
     """
     parts = [
-        jax.vmap(fn)(b.data, b.step_mask, *[jnp.take(a, b.slots, axis=0) for a in per_slot])
+        jax.vmap(fn)(b.data, b.step_mask, *[_take_slots(a, b.slots) for a in per_slot])
         for b in batch.buckets
     ]
     return unbucket(parts, batch.pos)
@@ -60,7 +67,7 @@ def scan_clients(fn: Callable, batch: BucketedBatch, *per_slot):
             return None, fn(*xs)
         _, ys = jax.lax.scan(
             body, None,
-            (b.data, b.step_mask, *[jnp.take(a, b.slots, axis=0) for a in per_slot]))
+            (b.data, b.step_mask, *[_take_slots(a, b.slots) for a in per_slot]))
         return ys
 
     return unbucket([one_bucket(b) for b in batch.buckets], batch.pos)

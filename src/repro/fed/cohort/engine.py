@@ -11,7 +11,10 @@ Owns everything between "population" and "jitted round step":
 
 Per-round host work is O(cohort) scalars + the [C, K_max] mask (plus the
 [C, K_max, B] int32 indices for host backends); per-round device memory is
-O(cohort * K_max * B), independent of population size.
+O(cohort * K_max * B), independent of population size.  Stateful local
+chains add one device-resident ``[N+1, ...]`` state bank on
+``ServerState.clients`` whose per-round gather/scatter is O(cohort) — plans
+prefetch ahead, state stays round-ordered (see ``cohort.prefetch``).
 
 Typical use::
 

@@ -22,6 +22,14 @@ RR indices on device (``kernels.rr_perm``) when the plan carries none.
 Bitwise contract: a gather returns exactly the floats ``task.batch`` would
 have produced, so with host-generated indices the materialized batch equals
 the legacy path bit-for-bit.
+
+The *data* bank here is immutable and round-independent.  Its mutable
+sibling — the per-client **state bank** of stateful local chains (SCAFFOLD
+control variates etc.) — is also device-resident but rides
+``ServerState.clients`` instead, because it must evolve with the round
+sequence: the round step gathers the cohort's ``[C, ...]`` rows in-jit and
+slot-order scatters the finalized rows back (``repro.fed.rounds``), keeping
+per-round state traffic O(cohort) while plans prefetch ahead.
 """
 from __future__ import annotations
 

@@ -9,6 +9,13 @@ preserved exactly, so prefetching never changes results, only wall-clock.
 Producer exceptions are captured and re-raised at the consumer's ``next()``;
 ``close()`` (or the context manager) tears the thread down promptly even if
 the consumer stops early.
+
+**State-ordering contract.**  Only *plans* (indices, masks, scalars) are
+prefetched.  Persistent per-client state (the ``ServerState.clients`` bank
+of stateful local chains) is never part of a plan: the jitted round step
+gathers the bank rows named by the plan's client ids at execution time, so
+state reads/writes stay strictly round-ordered no matter how far ahead the
+producer runs.
 """
 from __future__ import annotations
 

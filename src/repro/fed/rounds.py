@@ -44,7 +44,8 @@ from ..data.federated import Bucket, BucketedBatch, RoundBatch
 from ..utils.pytree import tree_zeros_like
 from .bucketing import scan_clients, vmap_clients
 from .server import ServerState
-from .strategy import BoundStrategy, FedStrategy, RoundCtx, bind_strategy
+from .strategy import (BoundStrategy, CohortState, FedStrategy, RoundCtx,
+                       bind_strategy)
 
 
 def build_round_step(loss_fn: Callable,
@@ -68,6 +69,7 @@ def build_round_step(loss_fn: Callable,
     strat = bind_strategy(strategy, fl, loss_fn, num_clients=num_clients)
     fl, num_clients = strat.fl, strat.num_clients
     one_client = strat.local_step
+    stateful = strat.client_state is not None
 
     def round_step(state: ServerState, batch, lr_mult=1.0):
         if not isinstance(batch, (RoundBatch, BucketedBatch)):
@@ -85,18 +87,37 @@ def build_round_step(loss_fn: Callable,
         momentum = state.opt.get("m", None)
         if momentum is None:
             momentum = tree_zeros_like(state.params)
+        if stateful:
+            if state.clients is None:
+                raise TypeError(
+                    f"round_step for the stateful local update "
+                    f"{strat.local_update!r} got a ServerState without a "
+                    f"client state bank; build the state with the bound "
+                    f"strategy's init() (legacy init_server predates "
+                    f"stateful chains and keeps none).")
+            # gather the cohort's rows of the per-client state bank (invalid
+            # padding slots read — and later write — the scratch row, so a
+            # round's state traffic is O(cohort) regardless of population)
+            ids = jnp.where(meta.valid > 0, meta.client_id,
+                            num_clients).astype(jnp.int32)
+            cstate0 = jax.tree.map(lambda b: jnp.take(b, ids, axis=0),
+                                   state.clients)
+        else:
+            cstate0 = {}
 
-        def client(data_i, mask_i, eta_i):
-            return one_client(state.params, momentum, data_i, mask_i, eta_i)
+        def client(data_i, mask_i, eta_i, cs_i):
+            return one_client(state.params, momentum, state.opt,
+                              data_i, mask_i, eta_i, cs_i)
 
         if fl.cohort_mode == "vmapped":
             if bucketed:
                 # per-bucket [C_b, K_b] scans, reassembled to [C] slot order
                 # before any cross-client math — bitwise-identical aggregate
-                deltas, losses = vmap_clients(client, batch, plan.eta)
+                deltas, losses, new_cs = vmap_clients(client, batch, plan.eta,
+                                                      cstate0)
             else:
-                deltas, losses = jax.vmap(client)(batch.data, batch.step_mask,
-                                                  plan.eta)
+                deltas, losses, new_cs = jax.vmap(client)(
+                    batch.data, batch.step_mask, plan.eta, cstate0)
             delta_agg = strat.aggregate(deltas, meta)
         else:  # sequential: the scan accumulates coeff_i * Delta_i as it goes,
             # so the strategy contributes through agg_coeffs rather than the
@@ -108,7 +129,8 @@ def build_round_step(loss_fn: Callable,
             if bucketed:
                 # per-bucket client scans stage stacked deltas, then the same
                 # coeff_i-weighted accumulation replays in slot order
-                deltas, losses = scan_clients(client, batch, plan.eta)
+                deltas, losses, new_cs = scan_clients(client, batch, plan.eta,
+                                                      cstate0)
 
                 def accum(acc, xs):
                     delta, coeff_i = xs
@@ -121,22 +143,44 @@ def build_round_step(loss_fn: Callable,
                 delta_agg, _ = jax.lax.scan(accum, acc0, (deltas, coeff))
             else:
                 def body(acc, xs):
-                    data_i, mask_i, eta_i, coeff_i = xs
-                    delta, loss = client(data_i, mask_i, eta_i)
+                    data_i, mask_i, eta_i, coeff_i, cs_i = xs
+                    delta, loss, cs_new = client(data_i, mask_i, eta_i, cs_i)
                     acc = jax.tree.map(
                         lambda A, D: (A + coeff_i * D.astype(jnp.float32)).astype(A.dtype),
                         acc, delta,
                     )
-                    return acc, loss
+                    return acc, (loss, cs_new)
 
-                delta_agg, losses = jax.lax.scan(
-                    body, acc0, (batch.data, batch.step_mask, plan.eta, coeff)
+                delta_agg, (losses, new_cs) = jax.lax.scan(
+                    body, acc0,
+                    (batch.data, batch.step_mask, plan.eta, coeff, cstate0)
                 )
             delta_agg = jax.tree.map(lambda a, p: a.astype(p.dtype), delta_agg, state.params)
 
-        ctx = RoundCtx(batch=batch, lr_mult=lr_mult, momentum=momentum)
+        cstate = None
+        new_clients = None
+        if stateful:
+            # invalid slots commit exactly what they read (layout-independent
+            # — the bucketed reassembly's zeros row never reaches the bank),
+            # then every slot scatters back to its own bank row in slot order
+            valid = meta.valid
+            upd = jax.tree.map(
+                lambda n, o: jnp.where(
+                    (valid > 0).reshape((-1,) + (1,) * (n.ndim - 1)), n, o),
+                new_cs, cstate0)
+            cstate = CohortState(old=cstate0, new=upd)
+            new_clients = jax.tree.map(
+                lambda b, u: b.at[ids].set(u.astype(b.dtype)),
+                state.clients, upd)
+
+        ctx = RoundCtx(batch=batch, lr_mult=lr_mult, momentum=momentum,
+                       cstate=cstate)
         state = strat.server_update(state, delta_agg,
                                     jnp.asarray(fl.server_lr, jnp.float32), ctx)
+        if new_clients is not None:
+            # server opts construct ServerState(params=, opt=, rnd=) — the
+            # driver owns the bank and re-attaches the scattered update
+            state = state._replace(clients=new_clients)
 
         valid_sum = jnp.maximum(meta.valid.sum(), 1.0)
         metrics = {
@@ -180,15 +224,40 @@ def as_device_batch(rb):
     )
 
 
+_DONATION_SUPPORTED: bool | None = None
+
+
+def _donation_supported() -> bool:
+    """Probe (once) whether the default backend honors buffer donation.
+
+    Older CPU jaxlibs ignore donation with a warning per compile; current
+    ones alias in place silently — and in-place matters beyond politeness:
+    a stateful local chain's ``[N+1, ...]`` client state bank is copied
+    wholesale every round when the ``ServerState`` argument is not donated,
+    turning the O(cohort) scatter into an O(N) memcpy.
+    """
+    global _DONATION_SUPPORTED
+    if _DONATION_SUPPORTED is None:
+        import warnings
+
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            jax.jit(lambda x: x + 1, donate_argnums=(0,))(
+                jnp.zeros((), jnp.float32))
+        _DONATION_SUPPORTED = not any(
+            "donat" in str(w.message).lower() for w in caught)
+    return _DONATION_SUPPORTED
+
+
 def jit_round_step(step: Callable, *, donate: bool | None = None) -> Callable:
     """jit a round step, donating the ``ServerState`` argument's buffers.
 
-    Donation lets XLA update params/opt-state in place instead of copying the
-    whole model every round — the caller must not reuse a state object after
-    passing it (the train loop rebinds, so that holds).  ``donate=None``
-    auto-disables on CPU, where XLA does not implement buffer donation and
-    would warn every compile.
+    Donation lets XLA update params/opt-state/client-state-bank in place
+    instead of copying them every round — the caller must not reuse a state
+    object after passing it (the train loop rebinds, so that holds).
+    ``donate=None`` auto-disables only on backends that do not implement
+    donation (probed once; those would warn every compile and copy anyway).
     """
     if donate is None:
-        donate = jax.default_backend() != "cpu"
+        donate = _donation_supported()
     return jax.jit(step, donate_argnums=(0,) if donate else ())

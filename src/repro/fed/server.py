@@ -19,9 +19,22 @@ from ..configs.base import FLConfig
 
 
 class ServerState(NamedTuple):
+    """Everything the server owns between rounds.
+
+    ``clients`` is the persistent per-client state bank of the bound local
+    chain's stateful transforms ({name: pytree with [num_clients + 1, ...]
+    leaves}; row ``num_clients`` is scratch for invalid cohort padding), or
+    ``None`` for stateless chains — in which case the tree has exactly the
+    legacy leaves.  The round driver gathers/scatters O(cohort) rows of it
+    inside the jitted step; server optimizers never construct it (they build
+    ``ServerState(params=, opt=, rnd=)`` and the driver re-attaches the
+    updated bank).
+    """
+
     params: Any
     opt: dict
     rnd: jnp.ndarray     # int32 round counter
+    clients: Any = None  # per-client state bank | None
 
 
 def init_server(fl: FLConfig, params) -> ServerState:

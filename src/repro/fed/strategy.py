@@ -9,8 +9,15 @@ orthogonal pieces instead of string branches scattered through the engine:
 * a **server optimizer** from :data:`SERVER_OPTS` (``sgd`` / ``momentum`` /
   ``mvr`` exact + App. F approx / ``adam``) — declared via :func:`chain` of
   pseudo-update transforms or as a bespoke whole-state update;
-* a **local update rule** from :data:`LOCAL_UPDATES` (plain RR-SGD or the
-  MVR-corrected steps of eq. 12-13);
+* a **local update rule** from :data:`LOCAL_UPDATES` — a declared
+  :class:`~repro.core.local.ClientChain` of per-step client transforms
+  (plain RR-SGD is the empty chain; the MVR-corrected steps of eq. 12-13,
+  SCAFFOLD control variates, FedProx, per-step clipping are links).
+  Transforms may keep persistent per-client state, banked ``[N+1, ...]`` on
+  ``ServerState.clients`` and gathered/scattered O(cohort) per round.
+  Resolution order: strategy pin, then ``FLConfig.local_update``, then the
+  server optimizer's paired default; binding validates that every opt-state
+  key the chain ``needs`` is ``provide``-d by the server opt;
 * optionally an **equalized-step pipeline mode** (``fedavg_min`` /
   ``fedavg_mean``), which the data pipeline must apply — binding such a
   strategy against a config that would not equalize raises instead of
@@ -47,7 +54,8 @@ import jax.numpy as jnp
 from ..configs.base import FLConfig
 from ..core import algorithms as _alg
 from ..core.algorithms import GenSpec, PRESETS, agg_coeff, lr_scale
-from ..core.local import full_local_gradient, local_mvr, local_sgd
+from ..core.local import (ClientChain, build_local_step, chain_client_template,
+                          full_local_gradient, resolve_chain)
 from ..data.federated import BucketedBatch
 from ..utils.pytree import tree_copy, tree_zeros_like
 from .bucketing import scan_clients, vmap_clients
@@ -56,49 +64,89 @@ from .server import ServerState
 StrategyState = dict  # the server-side optimizer state (the ``opt`` dict)
 
 
+class CohortState(NamedTuple):
+    """The cohort's slice of the per-client state bank, in [C] slot order.
+
+    ``old`` are the rows gathered at round start, ``new`` the finalized rows
+    about to be scattered back (invalid padding slots carry ``old`` — i.e.
+    ``new - old`` is exactly zero there), keyed like ``ServerState.clients``
+    ({transform name: pytree with [C, ...] leaves}).  Server transforms use
+    it to fold cohort state deltas into server state (e.g. SCAFFOLD's c).
+    """
+
+    old: Any
+    new: Any
+
+
 class RoundCtx(NamedTuple):
     """Traced round inputs a server update may need beyond the delta.
 
     ``batch`` is the device RoundBatch (data / step_mask / meta), ``lr_mult``
     the schedule multiplier, and ``momentum`` the momentum tree the clients
-    used this round (zeros when the optimizer keeps none).  A ``None`` ctx
-    (legacy :func:`repro.fed.server.apply_server` path) applies only the
-    parameter step of the optimizer.
+    used this round (zeros when the optimizer keeps none).  ``cstate`` is the
+    cohort's :class:`CohortState` when the local chain keeps persistent
+    per-client state (None otherwise).  A ``None`` ctx (legacy
+    :func:`repro.fed.server.apply_server` path) applies only the parameter
+    step of the optimizer.
     """
 
     batch: Any
     lr_mult: Any
     momentum: Any
+    cstate: Any = None
 
 
 class ClientPlan(NamedTuple):
     """Per-client local-work plan: the step sizes eta_l * lr_mult / c_i ([C]).
-    (Which local-update *function* runs is a static choice — see
+    (Which local-update *chain* runs is a static choice — see
     ``BoundStrategy.local_update`` / ``local_step``.)"""
 
     eta: jnp.ndarray
 
 
 # ---------------------------------------------------------------------------
-# Local update registry — fn(loss_fn, fl) -> one_client(params, momentum,
-# data_i, mask_i, eta_i) -> (delta, loss)
+# Local update registry — name -> ClientChain (a declared composition of
+# client transforms; see ``repro.core.local``) or, legacy, a raw factory
+# make(loss_fn, fl) -> one_client(params, momentum, data, mask, eta).
 # ---------------------------------------------------------------------------
 
-LOCAL_UPDATES: dict[str, Callable] = {
-    "sgd": lambda loss_fn, fl: (
-        lambda params, momentum, data_i, mask_i, eta_i:
-            local_sgd(loss_fn, params, data_i, mask_i, eta_i)),
-    "mvr": lambda loss_fn, fl: (
-        lambda params, momentum, data_i, mask_i, eta_i:
-            local_mvr(loss_fn, params, momentum, data_i, mask_i, eta_i, fl.mvr_a)),
+LOCAL_UPDATES: dict[str, "ClientChain | Callable"] = {
+    "sgd": ClientChain("sgd", ()),
+    "mvr": ClientChain("mvr", ("mvr",)),
+    # the new stateful / composed recipes
+    "scaffold": ClientChain("scaffold", ("scaffold",)),
+    "fedprox": ClientChain("fedprox", ("prox",)),
+    "local_clip": ClientChain("local_clip", ("clip",)),
 }
 
 
-def register_local_update(name: str, make: Callable) -> None:
-    """make(loss_fn, fl) -> one_client(params, momentum, data, mask, eta)."""
+def register_local_update(name: str, make: "ClientChain | Callable") -> None:
+    """Register a local-update rule: a :class:`~repro.core.local.ClientChain`
+    (preferred — composable, may declare per-client state) or the legacy raw
+    factory ``make(loss_fn, fl) -> one_client(params, momentum, data, mask,
+    eta) -> (delta, loss)``."""
     if name in LOCAL_UPDATES:
         raise ValueError(f"local update {name!r} already registered")
     LOCAL_UPDATES[name] = make
+
+
+def _compile_local(entry: "ClientChain | Callable", loss_fn: Callable, fl: FLConfig):
+    """LOCAL_UPDATES entry ->
+    (one_client, client_template | None, needs, stateful transform names)."""
+    if isinstance(entry, ClientChain):
+        transforms = resolve_chain(entry, loss_fn, fl)
+        needs = tuple(dict.fromkeys(k for t in transforms for k in t.needs))
+        state_names = tuple(t.name for t in transforms
+                            if t.client_init is not None)
+        return (build_local_step(transforms, loss_fn),
+                chain_client_template(transforms), needs, state_names)
+    inner = entry(loss_fn, fl)  # legacy raw rule: stateless, opt-blind
+
+    def one_client(params, momentum, opt, data, mask, eta, cstate):
+        delta, loss = inner(params, momentum, data, mask, eta)
+        return delta, loss, cstate
+
+    return one_client, None, (), ()
 
 
 # ---------------------------------------------------------------------------
@@ -115,10 +163,20 @@ class ServerTransform(NamedTuple):
 
     ``init(fl, params) -> opt-state slice`` and
     ``update(fl, delta, opt, state, ctx) -> (delta', opt-state updates)``.
+    ``provides`` names the opt-state keys ``init`` creates plus any semantic
+    capability tags (e.g. the mvr opt's ``grad_estimate``) — client
+    transforms declare what they ``need`` against these, and binding
+    validates the pairing.  Use a distinct tag when a key name alone would be
+    ambiguous across opts.  ``consumes`` names the stateful *client*
+    transforms whose cohort state rows (``ctx.cstate``) the update folds in —
+    the symmetric check: binding refuses a local chain that keeps none of
+    them (the update would silently run without its input).
     """
 
     init: Callable
     update: Callable
+    provides: tuple = ()
+    consumes: tuple = ()
 
 
 def heavy_ball() -> ServerTransform:
@@ -131,7 +189,35 @@ def heavy_ball() -> ServerTransform:
         m = jax.tree.map(lambda m0, d: fl.momentum * m0 + d, opt["m"], delta)
         return m, {"m": m}
 
-    return ServerTransform(init, update)
+    return ServerTransform(init, update, provides=("m",))
+
+
+def scaffold_ctl() -> ServerTransform:
+    """SCAFFOLD server control variate: ``c <- c + sum_{i in S} (w_i/p_i) *
+    (c_i+ - c_i)`` — the w/p-debiased estimate of the population drift of the
+    per-client variates the cohort just committed (the paired ``scaffold``
+    client transform; O(cohort) per round).  The pseudo-update passes through
+    unchanged."""
+
+    def init(fl: FLConfig, params):
+        return {"c": tree_zeros_like(params)}
+
+    def update(fl: FLConfig, delta, opt, state, ctx):
+        if ctx is None or ctx.cstate is None:
+            return delta, {}
+        meta = ctx.batch.meta
+        wp = meta.valid * meta.weight / meta.prob                    # [C]
+        old, new = ctx.cstate.old["scaffold"]["c"], ctx.cstate.new["scaffold"]["c"]
+        c = jax.tree.map(
+            lambda c0, o, n: (c0.astype(jnp.float32) + jnp.einsum(
+                "c,c...->...", wp.astype(jnp.float32),
+                n.astype(jnp.float32) - o.astype(jnp.float32))).astype(c0.dtype),
+            opt["c"], old, new,
+        )
+        return delta, {"c": c}
+
+    return ServerTransform(init, update, provides=("c",),
+                           consumes=("scaffold",))
 
 
 class ServerOpt(NamedTuple):
@@ -139,14 +225,21 @@ class ServerOpt(NamedTuple):
 
     ``make_update(fl, gen, loss_fn, cohort_mode)`` returns the jit-able
     ``update(state, delta_agg, lr, ctx) -> ServerState``; ``local_update``
-    names the client-side rule this optimizer pairs with (MVR's corrected
-    local steps need the server's gradient estimate).
+    names the client-side rule this optimizer pairs with by default (MVR's
+    corrected local steps need the server's gradient estimate) —
+    ``FLConfig.local_update`` / ``FedStrategy.local_update`` override it.
+    ``provides`` lists the opt-state keys / capability tags client transforms
+    may declare a ``need`` on; ``consumes`` lists the stateful client
+    transforms whose cohort state the update reads (binding refuses chains
+    missing them).
     """
 
     name: str
     init: Callable                 # (fl, params) -> opt dict
     make_update: Callable
     local_update: str = "sgd"
+    provides: tuple = ()
+    consumes: tuple = ()
 
 
 def chain(name: str, *transforms: ServerTransform, local_update: str = "sgd") -> ServerOpt:
@@ -178,7 +271,11 @@ def chain(name: str, *transforms: ServerTransform, local_update: str = "sgd") ->
 
         return update
 
-    return ServerOpt(name, init, make_update, local_update)
+    provides = tuple(dict.fromkeys(k for t in transforms
+                                   for k in getattr(t, "provides", ())))
+    consumes = tuple(dict.fromkeys(k for t in transforms
+                                   for k in getattr(t, "consumes", ())))
+    return ServerOpt(name, init, make_update, local_update, provides, consumes)
 
 
 def _mvr_opt() -> ServerOpt:
@@ -283,7 +380,8 @@ def _mvr_opt() -> ServerOpt:
 
         return update
 
-    return ServerOpt("mvr", init, make_update, local_update="mvr")
+    return ServerOpt("mvr", init, make_update, local_update="mvr",
+                     provides=("m", "grad_estimate"))
 
 
 def _adam_opt() -> ServerOpt:
@@ -312,7 +410,7 @@ def _adam_opt() -> ServerOpt:
 
         return update
 
-    return ServerOpt("adam", init, make_update)
+    return ServerOpt("adam", init, make_update, provides=("mu", "nu"))
 
 
 SERVER_OPTS: dict[str, ServerOpt] = {
@@ -320,6 +418,9 @@ SERVER_OPTS: dict[str, ServerOpt] = {
     "momentum": chain("momentum", heavy_ball()),
     "mvr": _mvr_opt(),
     "adam": _adam_opt(),
+    # SCAFFOLD: sgd-style descent + server control variate, paired with the
+    # stateful "scaffold" client chain (per-client variates in the state bank)
+    "scaffold": chain("scaffold", scaffold_ctl(), local_update="scaffold"),
 }
 
 
@@ -342,19 +443,23 @@ def server_opt_init(fl: FLConfig, params) -> dict:
 
 @dataclass(frozen=True)
 class FedStrategy:
-    """A declared (c, w~, q) x server-opt composition.
+    """A declared (c, w~, q) x server-opt x local-chain composition.
 
     ``server_opt=None`` defers to ``FLConfig.server_opt`` at bind time, so one
-    registered preset covers every server optimizer.  ``equalize`` marks the
-    strategies that only make sense with the equalized-K pipeline mode
-    (Table 4's FedAvgMin / FedAvgMean): the data pipeline applies it and
-    :func:`bind_strategy` refuses configurations that would not.
+    registered preset covers every server optimizer; ``local_update=None``
+    likewise defers to ``FLConfig.local_update`` and then to the server opt's
+    paired default — a non-None value *pins* the local chain (binding against
+    a disagreeing config raises).  ``equalize`` marks the strategies that
+    only make sense with the equalized-K pipeline mode (Table 4's FedAvgMin /
+    FedAvgMean): the data pipeline applies it and :func:`bind_strategy`
+    refuses configurations that would not.
     """
 
     name: str
     gen: GenSpec
     server_opt: str | None = None
     equalize: str | None = None       # None | "min" | "mean"
+    local_update: str | None = None   # None => FLConfig / server-opt default
 
     def with_server_opt(self, server_opt: str) -> "FedStrategy":
         return replace(self, server_opt=server_opt)
@@ -420,7 +525,7 @@ def equalized_mode(algorithm: str) -> str | None:
 class BoundStrategy(NamedTuple):
     name: str
     gen: GenSpec
-    local_update: str                  # static local-rule selection
+    local_update: str                  # static local-chain selection
     equalize: str | None
     fl: FLConfig                       # the config the hooks closed over
     num_clients: int
@@ -430,7 +535,10 @@ class BoundStrategy(NamedTuple):
     agg_coeffs: Callable               # (meta) -> [C]
     aggregate: Callable                # (deltas, meta) -> delta_agg
     server_update: Callable            # (state, delta_agg, lr, ctx) -> ServerState
-    local_step: Callable               # one_client(params, momentum, data, mask, eta)
+    local_step: Callable               # one_client(params, momentum, opt, data,
+    #                                      mask, eta, cstate) -> (delta, loss, cstate')
+    client_state: Callable | None = None  # (params) -> one client's state template
+    #                                      (None => stateless chain, no bank)
 
 
 def weighted_sum(deltas, coeff: jnp.ndarray):
@@ -505,16 +613,62 @@ def bind_strategy(strategy: "FedStrategy | BoundStrategy | None", fl: FLConfig,
     if server_opt not in SERVER_OPTS:
         raise ValueError(f"unknown server opt {server_opt!r}; have {sorted(SERVER_OPTS)}")
     sdef = SERVER_OPTS[server_opt]
-    if sdef.local_update not in LOCAL_UPDATES:
-        raise ValueError(f"unknown local update {sdef.local_update!r}")
+    # local chain resolution: strategy pin > FLConfig.local_update > the
+    # server opt's paired default — with pin/config disagreement an error
+    if (strategy.local_update is not None and fl.local_update
+            and strategy.local_update != fl.local_update):
+        raise ValueError(
+            f"strategy {strategy.name!r} pins local_update="
+            f"{strategy.local_update!r} but FLConfig.local_update is "
+            f"{fl.local_update!r}; make them agree.")
+    local_update = strategy.local_update or fl.local_update or sdef.local_update
+    if local_update not in LOCAL_UPDATES:
+        raise ValueError(
+            f"unknown local update {local_update!r}; have {sorted(LOCAL_UPDATES)}")
+    local_step, client_state, needs, state_names = _compile_local(
+        LOCAL_UPDATES[local_update], loss_fn, fl)
+    missing_state = [k for k in sdef.consumes if k not in state_names]
+    if missing_state:
+        # the mirror of the needs/provides check below: a server update that
+        # folds in cohort state (e.g. scaffold's control-variate drift) would
+        # silently no-op under a chain that keeps none of that state
+        raise ValueError(
+            f"server opt {server_opt!r} consumes per-client state of client "
+            f"transform(s) {missing_state} but local update {local_update!r} "
+            f"keeps no such state — the server update would silently run "
+            f"without its input.  Pair it with a local update carrying "
+            f"{missing_state} (e.g. local_update={missing_state[0]!r}) or "
+            f"pick another server opt.")
+    missing = [k for k in needs if k not in sdef.provides]
+    if missing:
+        # the old failure mode was silent: rounds.py zero-fills a missing
+        # opt["m"], so e.g. mvr local steps under server_opt="sgd" would
+        # quietly degenerate to a (1-a)-biased SGD.  Refuse at bind time.
+        raise ValueError(
+            f"local update {local_update!r} reads server opt-state key(s) "
+            f"{missing} that server opt {server_opt!r} does not maintain "
+            f"(provides {list(sdef.provides)}) — the transforms would "
+            f"silently consume zeros.  Pick a server opt providing "
+            f"{missing} (e.g. "
+            + ", ".join(sorted(n for n, o in SERVER_OPTS.items()
+                               if all(k in o.provides for k in missing)))
+            + ") or a local update that does not need them.")
     gen = strategy.gen
 
     def init(params) -> ServerState:
         # copy: round 0 may donate this state's buffers (jit_round_step), and
         # the caller keeps ownership of the pytree it passed in
         params = tree_copy(params)
+        clients = None
+        if client_state is not None:
+            # one bank row per client + a scratch row (index num_clients) the
+            # round driver aims invalid cohort padding at
+            tmpl = client_state(params)
+            clients = jax.tree.map(
+                lambda t: jnp.tile(t[None], (num_clients + 1,) + (1,) * t.ndim),
+                tmpl)
         return ServerState(params=params, opt=sdef.init(fl, params),
-                           rnd=jnp.zeros((), jnp.int32))
+                           rnd=jnp.zeros((), jnp.int32), clients=clients)
 
     def client_transform(meta, lr_mult=1.0) -> ClientPlan:
         inv_c = lr_scale(gen, meta)
@@ -530,7 +684,7 @@ def bind_strategy(strategy: "FedStrategy | BoundStrategy | None", fl: FLConfig,
     return BoundStrategy(
         name=strategy.name,
         gen=gen,
-        local_update=sdef.local_update,
+        local_update=local_update,
         equalize=strategy.equalize,
         fl=fl,
         num_clients=num_clients,
@@ -540,7 +694,8 @@ def bind_strategy(strategy: "FedStrategy | BoundStrategy | None", fl: FLConfig,
         agg_coeffs=agg_coeffs,
         aggregate=aggregate,
         server_update=sdef.make_update(fl, gen, loss_fn, fl.cohort_mode),
-        local_step=LOCAL_UPDATES[sdef.local_update](loss_fn, fl),
+        local_step=local_step,
+        client_state=client_state,
     )
 
 

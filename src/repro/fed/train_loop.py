@@ -50,10 +50,25 @@ def train(
     checkpoint_every: int = 0,
     log_every: int = 50,
     name: str = "run",
+    state: ServerState | None = None,
+    start_round: int = 0,
 ) -> TrainResult:
+    """Run rounds ``start_round..rounds`` (checkpoint/resume: pass the
+    ``ServerState`` restored by ``utils.checkpoint.load_server_state`` as
+    ``state`` plus the round to resume from — schedules and round seeds key
+    off the absolute round index, so a resumed run replays the unbroken one
+    bitwise.  The passed state's buffers are donated to the jitted step; do
+    not reuse the object afterwards)."""
     sched = SCHEDULES[schedule]
     strat = bind_strategy(strategy, fl, loss_fn, num_clients=fl.num_clients)
-    state = strat.init(init_params)
+    if state is None:
+        state = strat.init(init_params)
+    elif int(state.rnd) != start_round:
+        # rnd counts completed rounds; a mismatched resume would silently
+        # replay or skip rounds and break the bitwise-resume guarantee
+        raise ValueError(
+            f"state.rnd = {int(state.rnd)} but start_round = {start_round}; "
+            f"resume from the round the checkpointed state had completed.")
 
     # cohort engine: rounds arrive as prefetched device IndexPlans gathered
     # through the resident data plane; legacy: host-assembled RoundBatches
@@ -73,10 +88,10 @@ def train(
 
     def round_iter():
         if engine is None:
-            for r in range(rounds):
+            for r in range(start_round, rounds):
                 yield r, as_device_batch(pipeline.round_batch(r))
         else:
-            with engine.round_plans(rounds) as it:
+            with engine.round_plans(rounds - start_round, start=start_round) as it:
                 yield from it
 
     for r, batch in round_iter():

@@ -5,8 +5,6 @@ On CPU (tests) pass interpret=True; on TPU the kernel compiles natively.
 """
 from __future__ import annotations
 
-import jax
-
 from .kernel import flash_attention
 from .ref import attention_ref
 

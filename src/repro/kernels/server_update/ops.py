@@ -2,7 +2,6 @@
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from .kernel import fused_server_update
 from .ref import server_update_ref

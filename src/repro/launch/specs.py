@@ -24,7 +24,6 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs.base import ArchConfig, FLConfig, ShapeConfig

@@ -160,7 +160,6 @@ def gqa_forward(params, cfg: ArchConfig, x, positions, *, window=0, causal=True,
     kv_override: (k, v, kv_pos) for cross-attention (encoder memory).
     """
     B, T, _ = x.shape
-    hd = cfg.hd()
     q, k, v = _qkv(params, cfg, x)
     if kv_override is None:
         q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_kind)
@@ -181,7 +180,6 @@ def gqa_decode(params, cfg: ArchConfig, x, pos, cache, *, window=0, ring=False,
     cross_kv: (k, v, valid_len) bypasses the cache (encoder memory).
     """
     B = x.shape[0]
-    hd = cfg.hd()
     q, k_new, v_new = _qkv(params, cfg, x)
     if cross_kv is not None:
         k, v = cross_kv
@@ -252,7 +250,6 @@ def _mla_q(params, cfg, x):
 
 
 def _mla_ckv(params, cfg, x, positions):
-    m = cfg.mla
     c_kv = rmsnorm(params["kv_norm"], x @ params["wdkv"], cfg.norm_eps)     # [B,T,kv_lora]
     k_rope = (x @ params["wkr"])[:, :, None, :]                              # [B,T,1,rope]
     k_rope = apply_rope(k_rope, positions, cfg.rope_theta, "full")[:, :, 0]  # [B,T,rope]

@@ -15,7 +15,6 @@ configs); ``cfg.remat == "full"`` wraps the per-layer body in jax.checkpoint.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -128,7 +127,6 @@ class Model:
 
     def _decode_backbone(self, params, h, pos, cache_layers, *, ring=False, window=0):
         cfg = self.cfg
-        fam = cfg.family if cfg.family != "audio" else "audio"
 
         def body(h, xs):
             layer_params, layer_cache = xs
@@ -275,11 +273,9 @@ class Model:
         toks = batch["tokens"]
         Bsz, T = toks.shape
         h = params["embed"][toks]
-        offset = 0
         if cfg.family == "vlm":
             patches = batch["patches"].astype(h.dtype) @ params["patch_proj"]
             h = jnp.concatenate([patches, h], axis=1)
-            offset = patches.shape[1]
         positions = jnp.arange(h.shape[1])
         if cfg.rope_kind == "none" and cfg.family != "ssm":
             h = h + sinusoid(positions, cfg.d_model)[None].astype(h.dtype)

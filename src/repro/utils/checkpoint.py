@@ -59,3 +59,79 @@ def load_metadata(path: str) -> dict[str, Any]:
     meta_path = (path[:-4] if path.endswith(".npz") else path) + ".json"
     with open(meta_path) as f:
         return json.load(f)
+
+
+# ---------------------------------------------------------------------------
+# Whole-ServerState checkpoints (params + opt + round counter + the
+# per-client state bank of stateful local chains), with versioned metadata.
+# ---------------------------------------------------------------------------
+
+SERVER_STATE_FORMAT = "fedshuffle/server-state"
+SERVER_STATE_VERSION = 1
+
+
+def save_server_state(path: str, state, metadata: dict[str, Any] | None = None) -> None:
+    """Save a full ``repro.fed.ServerState`` (resumable, bitwise).
+
+    The client state bank (``state.clients``, stateful local chains) rides
+    along when present; the JSON sidecar records the format/version and
+    whether a bank was saved, so a mismatched load fails loudly instead of
+    silently resuming without client state.
+    """
+    clients = getattr(state, "clients", None)
+    tree = {"params": state.params, "opt": state.opt, "rnd": state.rnd}
+    if clients is not None:
+        tree["clients"] = clients
+    meta = dict(metadata or {})
+    meta["state_format"] = SERVER_STATE_FORMAT
+    meta["state_version"] = SERVER_STATE_VERSION
+    meta["has_client_state"] = clients is not None
+    save_checkpoint(path, tree, meta)
+
+
+def load_server_state(path: str, template):
+    """Restore a ServerState saved by :func:`save_server_state`.
+
+    ``template`` is a ServerState with the target structure — typically
+    ``bound_strategy.init(params)`` of the SAME strategy/config, so the
+    client state bank's structure (and its absence) is validated against
+    what the checkpoint carries.
+    """
+    meta = load_metadata(path)
+    if meta.get("state_format") != SERVER_STATE_FORMAT:
+        raise ValueError(
+            f"{path!r} is not a server-state checkpoint (state_format="
+            f"{meta.get('state_format')!r}); use load_checkpoint for plain "
+            f"parameter trees.")
+    version = int(meta.get("state_version", 0))
+    if not 1 <= version <= SERVER_STATE_VERSION:
+        raise ValueError(
+            f"server-state checkpoint {path!r} has version {version}; this "
+            f"build reads versions 1..{SERVER_STATE_VERSION}.")
+    clients = getattr(template, "clients", None)
+    tree_t = {"params": template.params, "opt": template.opt, "rnd": template.rnd}
+    if meta.get("has_client_state", False):
+        if clients is None:
+            raise ValueError(
+                f"checkpoint {path!r} carries a per-client state bank but the "
+                f"template has none — bind the same strategy (same "
+                f"local_update) before loading.")
+        tree_t["clients"] = clients
+    elif clients is not None:
+        raise ValueError(
+            f"template expects a per-client state bank but checkpoint "
+            f"{path!r} has none — it was saved by a stateless local chain.")
+    restored = load_checkpoint(path, tree_t)
+    for (key, t), (_, r) in zip(tree_paths(tree_t), tree_paths(restored)):
+        want = tuple(getattr(t, "shape", ()) or ())
+        got = tuple(np.shape(r))
+        if want != got:
+            # e.g. a client state bank saved under a different num_clients:
+            # the round step would silently clamp/drop out-of-range rows
+            raise ValueError(
+                f"server-state checkpoint {path!r}: leaf {key!r} has shape "
+                f"{got} but the template expects {want} — it was saved under "
+                f"a different population/model configuration.")
+    return type(template)(params=restored["params"], opt=restored["opt"],
+                          rnd=restored["rnd"],
+                          clients=restored.get("clients"))

@@ -107,6 +107,23 @@ def test_bucketed_matches_padded_mvr_exact(mode):
     _assert_tree_equal(ps.opt, bs.opt, f"mvr-exact/{mode}: opt state")
 
 
+@pytest.mark.parametrize("path", ["legacy", "engine", "engine_prefetch"])
+@pytest.mark.parametrize("mode", ["vmapped", "sequential"])
+def test_bucketed_matches_padded_scaffold_state(mode, path):
+    """Stateful local chains under bucketing: per-client state rows are
+    finalized inside the per-bucket scans, slot-order reassembled, and
+    scattered to the bank — the bank (and everything else) must equal the
+    padded layout bit-for-bit, including the untouched scratch row."""
+    fl = _fl("fedavg", mode, opt="scaffold")
+    ps, pm = _run(dataclasses.replace(fl, exec_mode="padded"), path)
+    bs, bm = _run(dataclasses.replace(fl, exec_mode="bucketed"), path)
+    tag = f"scaffold/{mode}/{path}"
+    _assert_tree_equal(ps.params, bs.params, f"{tag}: params")
+    _assert_tree_equal(ps.opt, bs.opt, f"{tag}: opt state")
+    _assert_tree_equal(ps.clients, bs.clients, f"{tag}: state bank")
+    _assert_tree_equal(pm, bm, f"{tag}: metrics")
+
+
 def test_bucketed_device_rr_matches_host():
     """Device-regenerated RR streams are counter-based per position, so a
     [C_b, K_b] generation is the exact prefix of the [C, K_max] one — the

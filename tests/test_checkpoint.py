@@ -1,11 +1,16 @@
-"""Checkpoint round-trip."""
+"""Checkpoint round-trip, including whole-ServerState checkpoints with the
+per-client state bank (stateful local chains) and bitwise mid-training
+resume."""
 import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.utils.checkpoint import load_checkpoint, load_metadata, save_checkpoint
+from repro.utils.checkpoint import (load_checkpoint, load_metadata,
+                                    load_server_state, save_checkpoint,
+                                    save_server_state)
 
 
 def test_roundtrip(tmp_path):
@@ -45,3 +50,121 @@ def test_train_loop_checkpointing(tmp_path):
                 checkpoint_path=path, log_every=0)
     restored = load_checkpoint(path, {"x": jnp.zeros(2)})
     np.testing.assert_allclose(np.asarray(res.state.params["x"]), restored["x"], atol=1e-6)
+
+
+# -- whole-ServerState checkpoints (client state bank included) --------------
+
+
+def _scaffold_setup():
+    from repro.configs.base import FLConfig
+    from repro.data.federated import FederatedPipeline, Population
+    from repro.data.tasks import DuplicatedQuadraticTask
+    from repro.fed.losses import make_quadratic_loss
+    from repro.fed.strategy import bind_strategy, strategy_for
+
+    task = DuplicatedQuadraticTask(copies=(1, 2, 3))
+    loss = make_quadratic_loss(3)
+    fl = FLConfig(num_clients=3, cohort_size=2, sampling="uniform", epochs=2,
+                  local_batch=1, algorithm="fedavg", local_lr=0.05,
+                  server_opt="scaffold", seed=5)
+    pipe = FederatedPipeline(task, Population.build(fl, sizes=task.sizes()), fl)
+    strat = bind_strategy(strategy_for(fl), fl, loss, num_clients=3)
+    return fl, pipe, strat, loss
+
+
+def _assert_state_equal(a, b, what):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y), err_msg=what)
+
+
+def test_server_state_roundtrip_with_bank(tmp_path):
+    fl, pipe, strat, loss = _scaffold_setup()
+    from repro.fed.rounds import as_device_batch, build_round_step
+
+    step = build_round_step(loss, strat, fl, num_clients=3)
+    state = strat.init({"x": jnp.zeros(3)})
+    for r in range(3):
+        state, _ = step(state, as_device_batch(pipe.round_batch(r)))
+    path = os.path.join(tmp_path, "state.npz")
+    save_server_state(path, state, {"round": 2})
+    meta = load_metadata(path)
+    assert meta["state_version"] == 1 and meta["has_client_state"] is True
+    assert meta["round"] == 2
+    restored = load_server_state(path, strat.init({"x": jnp.zeros(3)}))
+    _assert_state_equal(state.params, restored.params, "params")
+    _assert_state_equal(state.opt, restored.opt, "opt (server c included)")
+    _assert_state_equal(state.clients, restored.clients, "client state bank")
+    assert int(restored.rnd) == int(state.rnd)
+
+
+def test_server_state_template_mismatch_raises(tmp_path):
+    fl, pipe, strat, loss = _scaffold_setup()
+    state = strat.init({"x": jnp.zeros(3)})
+    path = os.path.join(tmp_path, "state.npz")
+    save_server_state(path, state)
+    # a stateless template must refuse a bank-carrying checkpoint (and not
+    # silently resume without the control variates)
+    from repro.configs.base import FLConfig
+    from repro.fed.strategy import bind_strategy, strategy_for
+    fl_plain = FLConfig(num_clients=3, cohort_size=2, sampling="uniform",
+                        epochs=2, local_batch=1, algorithm="fedavg",
+                        local_lr=0.05, seed=5)
+    plain = bind_strategy(strategy_for(fl_plain), fl_plain, loss, num_clients=3)
+    with pytest.raises(ValueError, match="state bank"):
+        load_server_state(path, plain.init({"x": jnp.zeros(3)}))
+    # and a non-server-state npz is refused by format
+    other = os.path.join(tmp_path, "plain.npz")
+    save_checkpoint(other, {"x": jnp.zeros(3)})
+    with pytest.raises(ValueError, match="not a server-state"):
+        load_server_state(other, state)
+
+
+def test_server_state_shape_mismatch_raises(tmp_path):
+    """A bank saved under a different population must not load — the round
+    step would silently clamp/drop the out-of-range rows."""
+    fl, pipe, strat, loss = _scaffold_setup()
+    state = strat.init({"x": jnp.zeros(3)})
+    path = os.path.join(tmp_path, "state.npz")
+    save_server_state(path, state)
+    import dataclasses
+
+    from repro.fed.strategy import bind_strategy, strategy_for
+    fl6 = dataclasses.replace(fl, num_clients=6, cohort_size=3)
+    strat6 = bind_strategy(strategy_for(fl6), fl6, loss, num_clients=6)
+    with pytest.raises(ValueError, match="shape"):
+        load_server_state(path, strat6.init({"x": jnp.zeros(3)}))
+
+
+def test_resume_round_mismatch_raises():
+    """train(state=, start_round=) must refuse a start_round that disagrees
+    with the rounds the state already completed (silent replay/skip)."""
+    from repro.fed.train_loop import train
+
+    fl, pipe, strat, loss = _scaffold_setup()
+    mid = train(loss, {"x": jnp.zeros(3)}, pipe, fl, 3, strategy=strat,
+                log_every=0).state
+    with pytest.raises(ValueError, match="start_round"):
+        train(loss, {"x": jnp.zeros(3)}, pipe, fl, 6, strategy=strat,
+              log_every=0, state=mid, start_round=2)
+
+
+def test_resume_mid_training_is_bitwise(tmp_path):
+    """Checkpoint at round 3 of 6, reload, finish — the stitched run must
+    equal the unbroken 6-round run bit-for-bit (params, opt, bank, rnd)."""
+    from repro.fed.train_loop import train
+
+    fl, pipe, strat, loss = _scaffold_setup()
+    params = {"x": jnp.zeros(3)}
+    full = train(loss, params, pipe, fl, 6, strategy=strat, log_every=0).state
+
+    half = train(loss, params, pipe, fl, 3, strategy=strat, log_every=0).state
+    path = os.path.join(tmp_path, "mid.npz")
+    save_server_state(path, half, {"round": 2})
+    restored = load_server_state(path, strat.init(params))
+    resumed = train(loss, params, pipe, fl, 6, strategy=strat, log_every=0,
+                    state=restored, start_round=3).state
+
+    _assert_state_equal(full.params, resumed.params, "resume params")
+    _assert_state_equal(full.opt, resumed.opt, "resume opt")
+    _assert_state_equal(full.clients, resumed.clients, "resume state bank")
+    assert int(full.rnd) == int(resumed.rnd) == 6

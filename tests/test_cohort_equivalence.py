@@ -122,6 +122,24 @@ def test_host_feistel_matches_device_backends_bitwise(preset, reshuffle):
                        "host_feistel vs pallas")
 
 
+@pytest.mark.parametrize("mode", ["vmapped", "sequential"])
+def test_engine_matches_legacy_scaffold_state_bank(mode):
+    """Stateful local chains: the per-client state bank rides ServerState
+    (never the prefetched plans), so the engine path — prefetch thread
+    included — must commit bitwise-identical bank rows to the legacy
+    host-assembly path, round for round."""
+    fl = _fl("fedavg", mode, opt="scaffold")
+    pop = Population.build(fl, sizes=TASK.sizes())
+    pipe = FederatedPipeline(TASK, pop, fl)
+    strat = bind_strategy(strategy_for(fl), fl, LOSS, num_clients=fl.num_clients)
+    (ls, lm) = _run_legacy(fl, pipe, strat)
+    (es, em) = _run_engine(fl, pop, strat)          # prefetch thread ON
+    _assert_tree_equal(ls.params, es.params, f"scaffold/{mode}: params")
+    _assert_tree_equal(ls.opt, es.opt, f"scaffold/{mode}: opt state")
+    _assert_tree_equal(ls.clients, es.clients, f"scaffold/{mode}: state bank")
+    _assert_tree_equal(lm, em, f"scaffold/{mode}: metrics")
+
+
 def test_train_loop_engine_matches_legacy():
     """End-to-end ``fed.train`` with fl.engine='cohort' (jitted, prefetched)
     equals the legacy jitted loop — same driver, both compiled."""

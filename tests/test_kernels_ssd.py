@@ -1,7 +1,6 @@
 """SSD Pallas kernel sweep vs the sequential-recurrence oracle, and agreement
 with the model's XLA ssd_chunked path."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

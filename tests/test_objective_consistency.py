@@ -8,11 +8,10 @@ On the duplicated-quadratic (clients hold 1/2/3 copies of e_i):
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import FLConfig
 from repro.data.federated import FederatedPipeline, Population
-from repro.data.tasks import DuplicatedQuadraticTask, QuadraticTask
+from repro.data.tasks import DuplicatedQuadraticTask
 from repro.fed.losses import make_quadratic_loss
 from repro.fed.rounds import as_device_batch, build_round_step
 from repro.fed.strategy import bind_strategy, strategy_for
