@@ -27,6 +27,20 @@ state bytes actually moved (2 * C * row) vs the resident bank bytes.  Writes
 ``BENCH_stateful.json`` / ``benchmarks/results/bench_stateful.csv``;
 ``--check`` asserts the O(cohort) bar — scaffold keeps >= 40% of sgd
 throughput at EVERY population size (an O(N) scatter would collapse at 1e6).
+
+``--compressed`` measures the uplink communication plane: identity vs qsgd
+(4-bit stochastic quantization) vs topk (error feedback, [N+1, dim] residual
+bank) vs randk rounds/sec through the cohort engine + prefetch, plus the
+static bytes-on-wire compression ratio of each codec.  Writes
+``BENCH_comm.json`` / ``benchmarks/results/bench_comm.csv``; ``--check``
+asserts >= 4x bytes-on-wire reduction for every compressed codec, a single
+compilation, and a generous throughput floor vs identity.
+
+``--quick`` (CI smoke) shrinks populations/rounds and writes
+``benchmarks/results/*_quick.csv`` + ``*_quick.json`` — it never touches the
+committed ``BENCH_*.json`` baselines NOR the full-run CSVs, so a quick run
+after a full run no longer clobbers the artifacts.  The quick JSONs feed
+``benchmarks/check_regression.py`` (the CI bench-regression gate).
 """
 from __future__ import annotations
 
@@ -43,6 +57,7 @@ from repro.data.federated import FederatedPipeline, Population
 from repro.data.tasks import PopulationQuadraticTask
 from repro.fed.cohort import CohortEngine
 from repro.fed.losses import make_quadratic_loss
+from repro.fed.comm import dense_bits, uplink_wire_bits
 from repro.fed.rounds import as_device_batch, build_round_step, jit_round_step
 from repro.fed.strategy import bind_strategy, strategy_for
 
@@ -51,6 +66,7 @@ from .common import RESULTS_DIR, csv_row
 BASELINE_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_cohort.json")
 BUCKETED_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_bucketed.json")
 STATEFUL_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_stateful.json")
+COMM_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_comm.json")
 
 # The regime the engine exists for: wide cohorts of small local batches,
 # where the legacy path is bound by its per-client python assembly loop
@@ -197,19 +213,102 @@ def bench_imbalanced_population(pop: int, rounds: int) -> dict:
 
 
 def _write_scenario(results: dict, rows: list, baseline_path: str,
-                    csv_name: str, write_baseline: bool) -> list[str]:
-    """Shared tail of every scenario driver: the committed full-size baseline
-    JSON (skipped for --quick, which must not clobber it) + the CI CSV."""
-    if write_baseline:
-        import json
+                    stem: str, quick: bool) -> list[str]:
+    """Shared tail of every scenario driver.
 
+    Full runs write the committed baseline JSON + ``results/<stem>.csv``.
+    Quick runs (CI smoke) write ``results/<stem>_quick.{csv,json}`` instead —
+    they must clobber NEITHER the committed baseline NOR a full-run CSV
+    sitting in results/.  The quick JSON mirrors the baseline structure so
+    ``benchmarks.check_regression`` can gate ratios against the baseline."""
+    import json
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    if quick:
+        with open(os.path.join(RESULTS_DIR, f"{stem}_quick.json"), "w") as f:
+            json.dump(results, f, indent=2, default=float)
+        csv_path = os.path.join(RESULTS_DIR, f"{stem}_quick.csv")
+    else:
         with open(baseline_path, "w") as f:
             json.dump(results, f, indent=2, default=float)
-    os.makedirs(RESULTS_DIR, exist_ok=True)
-    with open(os.path.join(RESULTS_DIR, csv_name), "w") as f:
+        csv_path = os.path.join(RESULTS_DIR, f"{stem}.csv")
+    with open(csv_path, "w") as f:
         f.write("name,us_per_call,derived\n")
         f.writelines(r + "\n" for r in rows)
     return rows
+
+
+# -- compressed-uplink scenario (communication plane) ------------------------
+#
+# A wider model (dim 64) than the throughput scenarios so the compression
+# ratios are honest: qsgd's per-chunk scale overhead and topk/randk's index /
+# value bytes amortize over a realistically-sized update.  All arms run the
+# same engine + prefetch configuration; the delta is purely the codec work
+# in the jitted round (identity = the dense no-comm reference).
+
+DIM_COMM = 64
+COMM_CODECS = ("identity", "qsgd", "topk", "randk")
+
+
+def bench_comm_population(pop: int, rounds: int) -> dict:
+    task = PopulationQuadraticTask(dim=DIM_COMM, num_clients=pop,
+                                   samples_per_client=SAMPLES)
+    sizes = task.sizes()
+    loss = make_quadratic_loss(DIM_COMM)
+    params = {"x": jnp.zeros(DIM_COMM)}
+    out: dict = {}
+    for name in COMM_CODECS:
+        fl = _fl(pop, engine="cohort", rr_backend="device_ref", prefetch=2,
+                 uplink=name, uplink_bits=4, uplink_chunk=DIM_COMM,
+                 uplink_frac=0.1)
+        eng = CohortEngine.build(task, Population.build(fl, sizes=sizes), fl)
+        strat = bind_strategy(strategy_for(fl), fl, loss, num_clients=pop)
+        # donation keeps the topk error-feedback [N+1, dim] residual bank
+        # in-place — without it the scatter is an O(N) memcpy per round
+        step = jit_round_step(build_round_step(loss, strat, fl, num_clients=pop,
+                                               plane=eng.plane), donate=True)
+        st = strat.init(params)
+        st, _ = step(st, eng.device_plan(0))            # compile
+        jax.block_until_ready(st.params)
+        out[name] = _time_engine(eng, step, st, rounds, 2)
+        if name != "identity":
+            out[f"ratio_{name}"] = (dense_bits(params)
+                                    / uplink_wire_bits(strat.codec, params))
+            out[f"{name}_vs_identity"] = out[name] / out["identity"]
+        if name == "topk":
+            out["ef_bank_bytes"] = (pop + 1) * DIM_COMM * 4
+        # every arm must hold the single-compilation guard — a recompile in
+        # any codec's encode path (shape/dtype leak) shows up here
+        out["compilations"] = max(out.get("compilations", 0),
+                                  step._cache_size())
+    return out
+
+
+def main_comm(pops=(1_000, 100_000, 1_000_000), rounds: int = 60,
+              check: bool = False, quick: bool = False) -> list[str]:
+    rows = []
+    results: dict = {"dim": DIM_COMM, "cohort": COHORT, "local_batch": 2,
+                     "epochs": 2, "samples_per_client": SAMPLES,
+                     "uplink_bits": 4, "uplink_chunk": DIM_COMM,
+                     "uplink_frac": 0.1, "rounds_timed": rounds,
+                     "populations": {}}
+    for pop in pops:
+        res = bench_comm_population(pop, rounds)
+        results["populations"][str(pop)] = res
+        for name in COMM_CODECS:
+            rows.append(csv_row(f"comm/{pop}/{name}", 1.0 / res[name],
+                                f"{res[name]:.1f}rps"))
+        print(f"pop={pop}: " + ", ".join(f"{k}={v:.3f}" if isinstance(v, float)
+                                         else f"{k}={v}" for k, v in res.items()))
+        if check:
+            # the acceptance bar: every compressed codec cuts bytes-on-wire
+            # >= 4x, compiles once, and keeps a usable fraction of identity
+            # throughput (the codec runs in the jitted round's critical path)
+            for name in COMM_CODECS[1:]:
+                assert res[f"ratio_{name}"] >= 4.0, (pop, name, res)
+                assert res[f"{name}_vs_identity"] >= 0.2, (pop, name, res)
+            assert res["compilations"] == 1, (pop, res)
+    return _write_scenario(results, rows, COMM_PATH, "bench_comm", quick)
 
 
 # -- stateful scenario (per-client state bank gather/scatter overhead) ------
@@ -247,7 +346,7 @@ def bench_stateful_population(pop: int, rounds: int) -> dict:
 
 
 def main_stateful(pops=(1_000, 100_000, 1_000_000), rounds: int = 60,
-                  check: bool = False, write_baseline: bool = True) -> list[str]:
+                  check: bool = False, quick: bool = False) -> list[str]:
     rows = []
     results: dict = {"dim": DIM, "cohort": COHORT, "local_batch": 2, "epochs": 2,
                      "samples_per_client": SAMPLES, "rounds_timed": rounds,
@@ -265,12 +364,12 @@ def main_stateful(pops=(1_000, 100_000, 1_000_000), rounds: int = 60,
             # with N — an O(N) implementation craters scaffold rps at 1e6
             assert res["scaffold_vs_sgd"] >= 0.4, (pop, res)
             assert res["compilations"] == 1, (pop, res)
-    return _write_scenario(results, rows, STATEFUL_PATH, "bench_stateful.csv",
-                           write_baseline)
+    return _write_scenario(results, rows, STATEFUL_PATH, "bench_stateful",
+                           quick)
 
 
 def main_imbalanced(pops=(1_000, 100_000, 1_000_000), rounds: int = 60,
-                    check: bool = False, write_baseline: bool = True) -> list[str]:
+                    check: bool = False, quick: bool = False) -> list[str]:
     rows = []
     results: dict = {"dim": DIM, "cohort": COHORT, "local_batch": 2, "epochs": 2,
                      "zipf_mean": ZIPF_MEAN, "zipf_cap": ZIPF_CAP,
@@ -286,12 +385,12 @@ def main_imbalanced(pops=(1_000, 100_000, 1_000_000), rounds: int = 60,
         if check:
             assert res["speedup_bucketed_vs_padded"] >= 2.0, (pop, res)
             assert res["compilations"] == 1, (pop, res)
-    return _write_scenario(results, rows, BUCKETED_PATH, "bench_bucketed.csv",
-                           write_baseline)
+    return _write_scenario(results, rows, BUCKETED_PATH, "bench_bucketed",
+                           quick)
 
 
 def main(pops=(1_000, 100_000, 1_000_000), rounds: int = 60,
-         check: bool = False, write_baseline: bool = True) -> list[str]:
+         check: bool = False, quick: bool = False) -> list[str]:
     rows = []
     results: dict = {"dim": DIM, "cohort": COHORT, "local_batch": 2, "epochs": 2,
                      "samples_per_client": SAMPLES, "rounds_timed": rounds,
@@ -307,8 +406,8 @@ def main(pops=(1_000, 100_000, 1_000_000), rounds: int = 60,
         print(f"pop={pop}: " + ", ".join(f"{k}={v:.1f}" for k, v in res.items()))
         if check:
             assert res["speedup_prefetch_vs_legacy"] >= 2.0, (pop, res)
-    return _write_scenario(results, rows, BASELINE_PATH, "bench_cohort.csv",
-                           write_baseline)
+    return _write_scenario(results, rows, BASELINE_PATH, "bench_cohort",
+                           quick)
 
 
 if __name__ == "__main__":
@@ -322,13 +421,17 @@ if __name__ == "__main__":
                     help="zipf scenario: padded vs bucketed execution layout")
     ap.add_argument("--stateful", action="store_true",
                     help="stateful-chain scenario: scaffold state bank vs sgd")
+    ap.add_argument("--compressed", action="store_true",
+                    help="uplink codec scenario: identity vs qsgd/topk/randk")
     args = ap.parse_args()
     pops = (1_000, 10_000) if args.quick else (1_000, 100_000, 1_000_000)
     rounds = args.rounds or (15 if args.quick else 60)
     print("name,us_per_call,derived")
-    # --quick (CI smoke) must not clobber the committed full-size baselines
+    # --quick (CI smoke) writes *_quick.{csv,json} and must clobber neither
+    # the committed baselines nor the full-run CSVs
     entry = (main_stateful if args.stateful
-             else main_imbalanced if args.imbalanced else main)
+             else main_imbalanced if args.imbalanced
+             else main_comm if args.compressed else main)
     for row in entry(pops=pops, rounds=rounds, check=args.check,
-                     write_baseline=not args.quick):
+                     quick=args.quick):
         print(row)

@@ -1,0 +1,122 @@
+"""CI bench-regression gate.
+
+Compares the quick-run scenario JSONs (``benchmarks/results/*_quick.json``,
+written by ``bench_cohort.py --quick``) against the committed full-run
+baselines (``BENCH_*.json`` at the repo root) and FAILS on engine-path
+regressions — instead of CI only uploading artifacts nobody reads.
+
+Absolute rounds/sec are machine-dependent (a CI runner is not the baseline
+box), so the gate checks the *ratio* metrics each scenario was built around:
+
+* cohort     — engine_prefetch / legacy speedup per population
+* bucketed   — bucketed / padded speedup
+* stateful   — scaffold / sgd throughput retention (O(cohort) state traffic)
+* comm       — bytes-on-wire compression ratios (static — also held to the
+               hard >= 4x acceptance floor) and codec / identity throughput
+
+A quick-run ratio below ``tolerance * baseline`` (default 0.5 — generous,
+sized for runner jitter, not for architectural regressions: an O(N) scatter
+or a dead prefetch thread craters these ratios far below half) fails the
+gate.  Every quick-run population is gated: against the same baseline
+population when the baseline measured it, else against the nearest measured
+one (log-scale) — quick runs use 1e3 / 1e4 while baselines commit
+1e3 / 1e5 / 1e6, and the larger quick arm is exactly where O(N) regressions
+first show.
+
+Usage: ``python -m benchmarks.check_regression [--tolerance 0.5]
+[--scenarios cohort,bucketed,stateful,comm]``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from .common import RESULTS_DIR
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+# scenario -> (baseline json, ratio keys gated when present in both runs)
+SCENARIOS: dict[str, tuple[str, tuple[str, ...]]] = {
+    "cohort": ("BENCH_cohort.json",
+               ("speedup_prefetch_vs_legacy", "speedup_prefetch_vs_noprefetch")),
+    "bucketed": ("BENCH_bucketed.json", ("speedup_bucketed_vs_padded",)),
+    "stateful": ("BENCH_stateful.json", ("scaffold_vs_sgd",)),
+    "comm": ("BENCH_comm.json",
+             ("ratio_qsgd", "ratio_topk", "ratio_randk",
+              "qsgd_vs_identity", "topk_vs_identity", "randk_vs_identity")),
+}
+
+# acceptance floors that hold regardless of the baseline (the committed bar)
+HARD_FLOORS = {"ratio_qsgd": 4.0, "ratio_topk": 4.0, "ratio_randk": 4.0}
+
+
+def check_scenario(name: str, tolerance: float) -> list[str]:
+    """Returns failure messages (empty = pass); prints one line per check."""
+    baseline_name, keys = SCENARIOS[name]
+    baseline_path = os.path.join(ROOT, baseline_name)
+    quick_path = os.path.join(RESULTS_DIR, f"bench_{name}_quick.json")
+    for path, what in ((baseline_path, "committed baseline"),
+                       (quick_path, "quick-run result")):
+        if not os.path.exists(path):
+            return [f"{name}: missing {what} {path!r}"]
+    with open(baseline_path) as f:
+        base = json.load(f)
+    with open(quick_path) as f:
+        quick = json.load(f)
+    failures = []
+    import math
+
+    base_pops = sorted(base["populations"], key=int)
+    if not base_pops or not quick["populations"]:
+        return [f"{name}: empty populations in baseline or quick run"]
+    for pop in sorted(quick["populations"], key=int):
+        # gate EVERY quick population: same-size baseline when measured,
+        # else the log-scale nearest one (the ratios are scale-stable)
+        ref_pop = (pop if pop in base["populations"] else
+                   min(base_pops, key=lambda p: abs(math.log(int(p))
+                                                    - math.log(int(pop)))))
+        b, q = base["populations"][ref_pop], quick["populations"][pop]
+        for key in keys:
+            if key not in b or key not in q:
+                continue
+            floor = max(HARD_FLOORS.get(key, 0.0), tolerance * float(b[key]))
+            ok = float(q[key]) >= floor
+            print(f"  {name}/{pop}/{key}: quick={float(q[key]):.3f} "
+                  f"baseline[{ref_pop}]={float(b[key]):.3f} "
+                  f"floor={floor:.3f} {'OK' if ok else 'FAIL'}")
+            if not ok:
+                failures.append(
+                    f"{name}/pop={pop}: {key} = {float(q[key]):.3f} fell "
+                    f"below {floor:.3f} (baseline pop {ref_pop}: "
+                    f"{float(b[key]):.3f}, tolerance {tolerance})")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tolerance", type=float, default=0.5,
+                    help="quick ratio must reach tolerance * baseline ratio")
+    ap.add_argument("--scenarios", default=",".join(SCENARIOS),
+                    help="comma-separated subset to gate")
+    args = ap.parse_args(argv)
+    failures = []
+    for name in args.scenarios.split(","):
+        name = name.strip()
+        if name not in SCENARIOS:
+            failures.append(f"unknown scenario {name!r}; have {sorted(SCENARIOS)}")
+            continue
+        print(f"[{name}]")
+        failures += check_scenario(name, args.tolerance)
+    if failures:
+        print("\nBENCH REGRESSION GATE FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("\nbench regression gate: all checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

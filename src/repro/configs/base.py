@@ -214,6 +214,17 @@ ExecMode = Literal["padded", "bucketed"]
 #   device_ref  — stateless swap-or-not generated inside the jitted round (jnp)
 #   device      — same math as a Pallas kernel (interpret-mode on CPU)
 RRBackend = Literal["host", "host_feistel", "device_ref", "device"]
+# Uplink codec (repro.fed.comm.CODECS; extensible via register_codec, hence
+# plain str).  Clients encode their update inside the jitted round and the
+# server decodes-then-combines; non-identity codecs surface bytes-on-wire in
+# the round metrics:
+#   "identity" — dense uplink (the default; bitwise-frozen no-comm contract)
+#   "qsgd"     — stochastic int quantization (uplink_bits levels, one fp32
+#                scale per uplink_chunk values; kernels/quantize pack path)
+#   "topk"     — magnitude top-k + per-client error feedback (uplink_frac)
+#   "randk"    — seeded random-k, unbiased n/k scaling (values-only wire)
+#   "ef_qsgd" / "ef_randk" — error-feedback variants
+UplinkBackend = Literal["ref", "pallas"]
 
 
 @dataclass(frozen=True)
@@ -255,6 +266,13 @@ class FLConfig:
     rr_rounds: int = 24            # swap-or-not cipher rounds (device/feistel RR)
     prefetch: int = 2              # rounds sampled ahead by the async scheduler
     participation: str = "iid"     # key into cohort.scheduler.PARTICIPATION
+    # uplink communication plane (compressed client->server updates; see the
+    # Uplink codec note above and repro.fed.comm)
+    uplink: str = "identity"       # codec name (key into fed.comm.CODECS)
+    uplink_bits: int = 4           # qsgd: bits per value (2 | 4 | 8)
+    uplink_chunk: int = 256        # qsgd: values per fp32 scale
+    uplink_frac: float = 0.1       # topk/randk: fraction of coords shipped
+    uplink_backend: UplinkBackend = "ref"  # quantize pack path (ref | pallas)
     # system heterogeneity (Fig. 4): every client is cut short by this many
     # local steps (planned vs actual); the "gen" hybrid algorithm corrects it
     drop_last_steps: int = 0

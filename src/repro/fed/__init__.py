@@ -34,6 +34,13 @@ from .cohort import (
     build_plane,
     register_participation,
 )
+from .comm import (
+    CODECS,
+    Codec,
+    build_codec,
+    register_codec,
+    with_error_feedback,
+)
 from .train_loop import train
 
 __all__ = ["as_device_batch", "build_round_step", "jit_round_step",
@@ -47,4 +54,6 @@ __all__ = ["as_device_batch", "build_round_step", "jit_round_step",
            "ClientChain", "ClientTransform", "StepCtx", "RoundEnd",
            "CohortState",
            "CohortEngine", "DevicePlane", "RoundPrefetcher", "as_device_plan",
-           "build_plane", "register_participation"]
+           "build_plane", "register_participation",
+           "CODECS", "Codec", "build_codec", "register_codec",
+           "with_error_feedback"]

@@ -1,0 +1,307 @@
+"""Uplink codecs — the compressed communication plane's algorithm layer.
+
+FedShuffle targets the cross-device regime where the uplink is the
+bottleneck: every round each sampled client ships its model update
+``Delta_i = y_i - x`` back to the server.  Sadiev et al. 2022 (Q-RR /
+Q-NASTYA) show random reshuffling composes with quantized / sparsified
+uplinks, which is exactly what this module implements: a :class:`Codec` is
+the per-client ``encode -> wire -> decode`` rule the round driver applies to
+every update *inside the jitted round*, on slot-order ``[C]`` arrays —
+aggregation always combines the **decoded** updates, so the math is
+identical between the padded and bucketed execution layouts.
+
+Protocol (mirrors the ClientTransform design in ``repro.core.local``):
+
+* ``encode(leaf, key) -> payload`` / ``decode(payload, key, like) -> leaf``
+  run per *leaf* of one client's update (a tree-level harness,
+  :func:`uplink_apply`, walks the pytree and derives per-leaf subkeys).  The
+  payload pytree IS the wire format — ``wire_bits(like)`` charges exactly
+  its bytes.
+* optional **per-client error-feedback state**: ``client_init(params)``
+  declares one client's residual template; the round driver banks it
+  ``[N+1, ...]`` on ``ServerState.clients`` under the reserved key
+  ``"uplink"`` — gathered O(cohort) per round, slot-order scattered back,
+  checkpointed/resumed bitwise by ``save_server_state`` like any other
+  client state.  ``finalize(src, dhat, state) -> state'`` commits the
+  round's residual (default: ``e' = (Delta + e) - decode(encode(Delta + e))``,
+  the classic EF-SGD recipe).
+* ``seeded`` marks codecs whose randomness (stochastic rounding, random
+  coordinate choice) must be keyed: the driver derives one uint32 key per
+  (seed, client, round) via :func:`round_keys`, so every stream is
+  stateless, reproducible, and identical across the legacy / engine /
+  prefetch paths and across checkpoint resume.
+
+Built-ins (:data:`CODECS`, selected via ``FLConfig.uplink``):
+
+=========== ============================================================
+identity    exact pass-through (the default; bitwise-frozen contract)
+qsgd        stochastic int quantization, per-chunk fp32 scales
+            (``uplink_bits``/``uplink_chunk``; ``kernels.quantize`` packs)
+topk        magnitude top-k sparsification + error feedback
+            (``uplink_frac``; values + int32 indices on the wire)
+randk       seeded random-k sparsification, unbiased n/k scaling
+            (indices regenerated from the round key — values-only wire)
+ef_qsgd     qsgd + error feedback
+ef_randk    randk + error feedback
+=========== ============================================================
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ...configs.base import FLConfig
+from ...kernels.quantize.ops import quantize_pack, unpack_dequantize
+from ...kernels.quantize.ref import BITS_CHOICES, packed_width
+from ...kernels.rr_perm.ref import key_combine, stream_key, swap_or_not
+from ...utils.pytree import tree_zeros_like
+
+# ServerState.clients key the error-feedback residual bank lives under —
+# reserved: bind_strategy refuses local chains with a stateful transform of
+# the same name.
+UPLINK_STATE_KEY = "uplink"
+
+_TAG_COMM = 0x0C0DEC     # domain-separates uplink streams from RR streams
+
+
+def round_keys(seed: int, client_id, rnd, xp=jnp):
+    """Per-client uplink stream keys for one round ([C] uint32).
+
+    Same (seed, client, round) chain as the RR index streams
+    (``kernels.rr_perm.ref.stream_key``) with a comm tag folded in, so the
+    codec randomness is domain-separated from the reshuffling randomness but
+    shares its reproducibility story: stateless, identical wherever the
+    round is produced (legacy host path, cohort engine, prefetch thread,
+    checkpoint resume)."""
+    dt = xp.uint32
+    base = stream_key(seed, xp.asarray(client_id).astype(dt),
+                      xp.asarray(rnd).astype(dt), xp)
+    return key_combine(base, dt(_TAG_COMM), xp)
+
+
+class Codec(NamedTuple):
+    """One uplink compression rule (all hooks pure pytree functions).
+
+    ``encode``/``decode``/``wire_bits`` are leaf-level (the harness maps
+    them over the update tree with per-leaf subkeys); ``client_init``/
+    ``finalize`` are tree-level (the EF residual mirrors the params tree).
+    ``decode(payload, key, like)`` must return ``like.shape``/``like.dtype``;
+    ``wire_bits(like)`` is static accounting — a python number of bits one
+    client pays to ship this leaf.
+    """
+
+    name: str
+    encode: Callable                       # (leaf, key) -> payload dict
+    decode: Callable                       # (payload, key, like) -> leaf
+    wire_bits: Callable                    # (like) -> bits (python number)
+    client_init: Callable | None = None    # (params) -> EF state pytree
+    finalize: Callable | None = None       # (src, dhat, state) -> state'
+    seeded: bool = False
+
+
+def with_error_feedback(inner: Codec, *, name: str | None = None) -> Codec:
+    """Wrap a codec with the EF-SGD residual loop: the client compresses
+    ``Delta + e`` and keeps ``e' = (Delta + e) - decoded`` in its bank row,
+    so whatever the compressor drops this round is retransmitted later —
+    the standard fix for biased compressors (top-k) and a variance help for
+    unbiased ones.  Wire format and accounting are the inner codec's."""
+    if inner.client_init is not None:
+        raise ValueError(f"codec {inner.name!r} already keeps per-client state")
+    return inner._replace(
+        name=name or f"ef_{inner.name}",
+        client_init=lambda params: {"e": tree_zeros_like(params)},
+    )
+
+
+def uplink_apply(codec: Codec) -> Callable:
+    """Compile a codec into the per-client round hook
+
+        one(delta, ef_state, key) -> (delta_hat, ef_state')
+
+    vmapped over the cohort (or called per client inside the sequential
+    scan) by the round driver.  ``ef_state`` is ``{}`` for stateless codecs.
+    """
+
+    def roundtrip(src, key):
+        leaves, treedef = jax.tree.flatten(src)
+        out = []
+        for i, v in enumerate(leaves):
+            ki = key_combine(key, jnp.uint32(i), jnp)
+            out.append(codec.decode(codec.encode(v, ki), ki, v))
+        return jax.tree.unflatten(treedef, out)
+
+    def one(delta, ef, key):
+        if codec.client_init is None:
+            return roundtrip(delta, key), ef
+        # error feedback: compress Delta + e (fp32), bank the new residual
+        src = jax.tree.map(
+            lambda d, e: d.astype(jnp.float32) + e.astype(jnp.float32),
+            delta, ef["e"])
+        dhat = roundtrip(src, key)
+        if codec.finalize is not None:
+            ef2 = codec.finalize(src, dhat, ef)
+        else:
+            ef2 = {"e": jax.tree.map(lambda s, h: s - h, src, dhat)}
+        return jax.tree.map(lambda h, d: h.astype(d.dtype), dhat, delta), ef2
+
+    return one
+
+
+def uplink_wire_bits(codec: Codec, params) -> float:
+    """Bits one client pays to ship a whole params-shaped update."""
+    return float(sum(codec.wire_bits(leaf) for leaf in jax.tree.leaves(params)))
+
+
+def dense_bits(params) -> float:
+    """The uncompressed uplink cost of a params-shaped update."""
+    return float(sum(leaf.size * leaf.dtype.itemsize * 8
+                     for leaf in jax.tree.leaves(params)))
+
+
+# ---------------------------------------------------------------------------
+# Built-in codec factories: make(fl) -> Codec
+# ---------------------------------------------------------------------------
+
+
+def make_identity(fl: FLConfig) -> Codec:
+    """Exact pass-through — the frozen bitwise contract: with
+    ``uplink='identity'`` the round's float op sequence is byte-for-byte the
+    no-comm path's (the payload wraps the same arrays, no casts, no math)."""
+    return Codec(
+        name="identity",
+        encode=lambda v, key: {"v": v},
+        decode=lambda p, key, like: p["v"],
+        wire_bits=lambda like: like.size * like.dtype.itemsize * 8,
+    )
+
+
+def _frac_k(frac: float, n: int) -> int:
+    return max(1, min(n, int(round(frac * n))))
+
+
+def make_qsgd(fl: FLConfig) -> Codec:
+    """QSGD-style stochastic quantization to ``uplink_bits`` signed levels
+    with one fp32 scale per ``uplink_chunk`` values; the bit-packed stream
+    comes from ``kernels.quantize`` (``uplink_backend`` selects the in-jit
+    jnp oracle or the Pallas kernel — bitwise-identical)."""
+    bits, chunk = fl.uplink_bits, fl.uplink_chunk
+    backend = fl.uplink_backend
+    if bits not in BITS_CHOICES:
+        raise ValueError(
+            f"fl.uplink_bits must be one of {BITS_CHOICES}, got {bits!r}")
+    if chunk < 1:
+        raise ValueError(f"fl.uplink_chunk must be >= 1, got {chunk!r}")
+    pb = packed_width(chunk, bits)           # validates chunk % (8//bits)
+    if backend not in ("ref", "pallas"):
+        raise ValueError(
+            f"unknown uplink_backend {backend!r}; have ('ref', 'pallas')")
+
+    def _nc(n: int) -> int:
+        return -(-n // chunk)
+
+    def encode(v, key):
+        flat = v.astype(jnp.float32).reshape(-1)
+        nc = _nc(flat.size)
+        flat = jnp.pad(flat, (0, nc * chunk - flat.size))
+        keys = key_combine(key, jnp.arange(nc, dtype=jnp.uint32), jnp)
+        packed, scale = quantize_pack(flat.reshape(nc, chunk), keys,
+                                      bits=bits, backend=backend)
+        return {"q": packed, "s": scale}
+
+    def decode(p, key, like):
+        v2 = unpack_dequantize(p["q"], p["s"], chunk=chunk, bits=bits,
+                               backend=backend)
+        return (v2.reshape(-1)[: like.size].reshape(like.shape)
+                .astype(like.dtype))
+
+    def wire_bits(like):
+        nc = _nc(like.size)
+        return nc * pb * 8 + nc * 32         # packed levels + fp32 scales
+
+    return Codec("qsgd", encode, decode, wire_bits, seeded=True)
+
+
+def make_topk_raw(fl: FLConfig) -> Codec:
+    """Magnitude top-k per leaf: the k largest-|.| values plus their int32
+    positions.  Biased — register through :func:`with_error_feedback` (the
+    built-in ``topk`` entry) unless you know why you want it raw."""
+    frac = fl.uplink_frac
+    if not 0.0 < frac <= 1.0:
+        raise ValueError(f"fl.uplink_frac must be in (0, 1], got {frac!r}")
+
+    def encode(v, key):
+        flat = v.astype(jnp.float32).reshape(-1)
+        _, idx = jax.lax.top_k(jnp.abs(flat), _frac_k(frac, flat.size))
+        idx = idx.astype(jnp.int32)
+        return {"v": jnp.take(flat, idx), "i": idx}
+
+    def decode(p, key, like):
+        flat = jnp.zeros((like.size,), jnp.float32).at[p["i"]].set(p["v"])
+        return flat.reshape(like.shape).astype(like.dtype)
+
+    def wire_bits(like):
+        return _frac_k(frac, like.size) * (32 + 32)   # fp32 value + int32 pos
+
+    return Codec("topk_raw", encode, decode, wire_bits)
+
+
+def make_randk(fl: FLConfig) -> Codec:
+    """Random-k sparsification with the unbiased ``n/k`` scaling.  The k
+    coordinates are the first k outputs of the swap-or-not permutation of
+    ``[0, n)`` under the round key (``kernels.rr_perm``) — a uniformly
+    random k-subset the DECODER regenerates from the same key, so only the
+    k values travel (no index bytes)."""
+    frac = fl.uplink_frac
+    rounds = fl.rr_rounds
+    if not 0.0 < frac <= 1.0:
+        raise ValueError(f"fl.uplink_frac must be in (0, 1], got {frac!r}")
+
+    def _idx(key, n: int):
+        k = _frac_k(frac, n)
+        return swap_or_not(jnp.arange(k, dtype=jnp.uint32), jnp.uint32(n),
+                           key, rounds, jnp).astype(jnp.int32)
+
+    def encode(v, key):
+        flat = v.astype(jnp.float32).reshape(-1)
+        return {"v": jnp.take(flat, _idx(key, flat.size))}
+
+    def decode(p, key, like):
+        n = like.size
+        scale = jnp.float32(n / _frac_k(frac, n))
+        flat = jnp.zeros((n,), jnp.float32).at[_idx(key, n)].set(p["v"] * scale)
+        return flat.reshape(like.shape).astype(like.dtype)
+
+    def wire_bits(like):
+        return _frac_k(frac, like.size) * 32          # values only
+
+    return Codec("randk", encode, decode, wire_bits, seeded=True)
+
+
+CODECS: dict[str, Callable[[FLConfig], Codec]] = {
+    "identity": make_identity,
+    "qsgd": make_qsgd,
+    # top-k without error feedback is simply a worse algorithm (the bias
+    # never washes out) — the registered entry is the EF-SGD composition
+    "topk": lambda fl: with_error_feedback(make_topk_raw(fl), name="topk"),
+    "randk": make_randk,
+    "ef_qsgd": lambda fl: with_error_feedback(make_qsgd(fl)),
+    "ef_randk": lambda fl: with_error_feedback(make_randk(fl)),
+}
+
+
+def register_codec(name: str, make: Callable[[FLConfig], Codec]) -> None:
+    """Register ``make(fl) -> Codec`` under ``name`` (FLConfig.uplink key)."""
+    if name in CODECS:
+        raise ValueError(f"uplink codec {name!r} already registered")
+    CODECS[name] = make
+
+
+def build_codec(fl: FLConfig) -> Codec:
+    """Resolve ``fl.uplink`` to a bound Codec (bind-time validation: unknown
+    names and bad knob values raise here, not at the first round)."""
+    if fl.uplink not in CODECS:
+        raise ValueError(
+            f"unknown uplink codec {fl.uplink!r}; have {sorted(CODECS)}")
+    return CODECS[fl.uplink](fl)

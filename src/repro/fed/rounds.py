@@ -21,6 +21,16 @@ Both modes compute *identical* math:
     x    <- x + eta_g * Delta            (+ server optimizer state)
 with per-client local steps  y <- y - (eta_l / c_i) * g  (masked RR scan).
 
+When the bound strategy carries a non-identity uplink codec
+(``FLConfig.uplink``; ``repro.fed.comm``), each client's Delta_i passes
+through ``decode(encode(.))`` before aggregation — always vmapped over
+stacked slot-order [C] arrays (the compressed sequential-padded round stages
+its delta stack like the bucketed one), so codec float ops cannot be fused
+differently across layouts and padded == bucketed stays bitwise, error-
+feedback residuals (banked on ``ServerState.clients`` under "uplink")
+included.  ``identity`` is an exact pass-through: the default path's op
+sequence is byte-for-byte the pre-uplink one.
+
 The step consumes either a materialized ``RoundBatch`` (legacy host
 assembly) or, when built with ``plane=`` (a cohort-engine
 :class:`~repro.fed.cohort.plane.DevicePlane`), an ``IndexPlan`` — indices
@@ -43,6 +53,8 @@ from ..configs.base import FLConfig
 from ..data.federated import Bucket, BucketedBatch, RoundBatch
 from ..utils.pytree import tree_zeros_like
 from .bucketing import scan_clients, vmap_clients
+from .comm import (UPLINK_STATE_KEY, dense_bits, round_keys, uplink_apply,
+                   uplink_wire_bits)
 from .server import ServerState
 from .strategy import (BoundStrategy, CohortState, FedStrategy, RoundCtx,
                        bind_strategy)
@@ -69,7 +81,16 @@ def build_round_step(loss_fn: Callable,
     strat = bind_strategy(strategy, fl, loss_fn, num_clients=num_clients)
     fl, num_clients = strat.fl, strat.num_clients
     one_client = strat.local_step
-    stateful = strat.client_state is not None
+    # the [N+1, ...] client state bank carries stateful local-chain state
+    # AND the uplink codec's error-feedback residual (key "uplink")
+    banked = strat.client_state is not None
+    # uplink codec: clients encode their update in-jit, aggregation combines
+    # the DECODED updates on slot-order [C] arrays (identical padded /
+    # bucketed math); "identity" is an exact pass-through, so the default
+    # config's float op sequence is unchanged
+    codec = strat.codec
+    apply_up = uplink_apply(codec) if codec is not None else None
+    has_ef = codec is not None and codec.client_init is not None
 
     def round_step(state: ServerState, batch, lr_mult=1.0):
         if not isinstance(batch, (RoundBatch, BucketedBatch)):
@@ -87,14 +108,15 @@ def build_round_step(loss_fn: Callable,
         momentum = state.opt.get("m", None)
         if momentum is None:
             momentum = tree_zeros_like(state.params)
-        if stateful:
+        if banked:
             if state.clients is None:
                 raise TypeError(
-                    f"round_step for the stateful local update "
-                    f"{strat.local_update!r} got a ServerState without a "
-                    f"client state bank; build the state with the bound "
-                    f"strategy's init() (legacy init_server predates "
-                    f"stateful chains and keeps none).")
+                    f"round_step for local update {strat.local_update!r} / "
+                    f"uplink codec {codec.name if codec else None!r} got a "
+                    f"ServerState without a client state bank; build the "
+                    f"state with the bound strategy's init() (legacy "
+                    f"init_server predates stateful chains / error-feedback "
+                    f"codecs and keeps none).")
             # gather the cohort's rows of the per-client state bank (invalid
             # padding slots read — and later write — the scratch row, so a
             # round's state traffic is O(cohort) regardless of population)
@@ -109,6 +131,25 @@ def build_round_step(loss_fn: Callable,
             return one_client(state.params, momentum, state.opt,
                               data_i, mask_i, eta_i, cs_i)
 
+        # per-client uplink stream keys (seed, client, round) — only codecs
+        # with sampling randomness consume them; keyed off the absolute round
+        # counter so a checkpoint resume replays identical streams
+        if apply_up is not None and codec.seeded:
+            keys = round_keys(fl.seed, meta.client_id, state.rnd, jnp)
+        else:
+            keys = jnp.zeros(meta.valid.shape, jnp.uint32)
+
+        def uplink_cohort(deltas, new_cs):
+            """Encode+decode the cohort's stacked slot-order deltas; commit
+            new error-feedback residuals into the cohort state."""
+            if apply_up is None:
+                return deltas, new_cs
+            dhat, ef2 = jax.vmap(apply_up)(
+                deltas, new_cs.get(UPLINK_STATE_KEY, {}), keys)
+            if has_ef:
+                new_cs = {**new_cs, UPLINK_STATE_KEY: ef2}
+            return dhat, new_cs
+
         if fl.cohort_mode == "vmapped":
             if bucketed:
                 # per-bucket [C_b, K_b] scans, reassembled to [C] slot order
@@ -118,6 +159,7 @@ def build_round_step(loss_fn: Callable,
             else:
                 deltas, losses, new_cs = jax.vmap(client)(
                     batch.data, batch.step_mask, plan.eta, cstate0)
+            deltas, new_cs = uplink_cohort(deltas, new_cs)
             delta_agg = strat.aggregate(deltas, meta)
         else:  # sequential: the scan accumulates coeff_i * Delta_i as it goes,
             # so the strategy contributes through agg_coeffs rather than the
@@ -126,30 +168,48 @@ def build_round_step(loss_fn: Callable,
             acc_dt = jnp.dtype(fl.accum_dtype)
             acc0 = jax.tree.map(lambda x: jnp.zeros_like(x, acc_dt), state.params)
 
+            def add_weighted(acc, delta, coeff_i):
+                # THE accumulation rule — one definition, shared by the fused
+                # and the staged paths (the bitwise contract between them)
+                return jax.tree.map(
+                    lambda A, D: (A + coeff_i * D.astype(jnp.float32)).astype(A.dtype),
+                    acc, delta,
+                )
+
+            deltas = None
             if bucketed:
                 # per-bucket client scans stage stacked deltas, then the same
                 # coeff_i-weighted accumulation replays in slot order
                 deltas, losses, new_cs = scan_clients(client, batch, plan.eta,
                                                       cstate0)
+            elif apply_up is not None and codec.name != "identity":
+                # compressed uplink: stage the per-client deltas (scan) so
+                # the codec runs vmapped on the stacked [C] slot-order
+                # arrays, like every other layout.  Applying it inside the
+                # fused scan body instead would let XLA contract its float
+                # ops differently there (FMA fusion), silently breaking the
+                # padded == bucketed bitwise contract for error-feedback
+                # residuals.
+                def stage(_, xs):
+                    return None, client(*xs)
+
+                _, (deltas, losses, new_cs) = jax.lax.scan(
+                    stage, None,
+                    (batch.data, batch.step_mask, plan.eta, cstate0))
+
+            if deltas is not None:
+                deltas, new_cs = uplink_cohort(deltas, new_cs)
 
                 def accum(acc, xs):
                     delta, coeff_i = xs
-                    acc = jax.tree.map(
-                        lambda A, D: (A + coeff_i * D.astype(jnp.float32)).astype(A.dtype),
-                        acc, delta,
-                    )
-                    return acc, None
+                    return add_weighted(acc, delta, coeff_i), None
 
                 delta_agg, _ = jax.lax.scan(accum, acc0, (deltas, coeff))
             else:
                 def body(acc, xs):
                     data_i, mask_i, eta_i, coeff_i, cs_i = xs
                     delta, loss, cs_new = client(data_i, mask_i, eta_i, cs_i)
-                    acc = jax.tree.map(
-                        lambda A, D: (A + coeff_i * D.astype(jnp.float32)).astype(A.dtype),
-                        acc, delta,
-                    )
-                    return acc, (loss, cs_new)
+                    return add_weighted(acc, delta, coeff_i), (loss, cs_new)
 
                 delta_agg, (losses, new_cs) = jax.lax.scan(
                     body, acc0,
@@ -159,7 +219,7 @@ def build_round_step(loss_fn: Callable,
 
         cstate = None
         new_clients = None
-        if stateful:
+        if banked:
             # invalid slots commit exactly what they read (layout-independent
             # — the bucketed reassembly's zeros row never reaches the bank),
             # then every slot scatters back to its own bank row in slot order
@@ -190,6 +250,15 @@ def build_round_step(loss_fn: Callable,
             ),
             "cohort": meta.valid.sum(),
         }
+        if codec is not None and codec.name != "identity":
+            # bytes-on-wire accounting (static per client — every update is
+            # model-shaped); identity adds no keys so the default metric tree
+            # stays frozen
+            bits_pc = uplink_wire_bits(codec, state.params)
+            metrics["uplink_mbytes"] = meta.valid.sum() * jnp.float32(
+                bits_pc / 8e6)
+            metrics["uplink_compression"] = jnp.float32(
+                dense_bits(state.params) / bits_pc)
         return state, metrics
 
     return round_step

@@ -59,6 +59,7 @@ from ..core.local import (ClientChain, build_local_step, chain_client_template,
 from ..data.federated import BucketedBatch
 from ..utils.pytree import tree_copy, tree_zeros_like
 from .bucketing import scan_clients, vmap_clients
+from .comm import UPLINK_STATE_KEY, build_codec
 from .server import ServerState
 
 StrategyState = dict  # the server-side optimizer state (the ``opt`` dict)
@@ -538,7 +539,12 @@ class BoundStrategy(NamedTuple):
     local_step: Callable               # one_client(params, momentum, opt, data,
     #                                      mask, eta, cstate) -> (delta, loss, cstate')
     client_state: Callable | None = None  # (params) -> one client's state template
-    #                                      (None => stateless chain, no bank)
+    #                                      (None => stateless chain + stateless
+    #                                      codec, no bank; includes the codec's
+    #                                      "uplink" EF residual when it keeps one)
+    codec: Any = None                  # bound fed.comm.Codec (None only for
+    #                                      hand-built BoundStrategies: the round
+    #                                      driver then skips the uplink entirely)
 
 
 def weighted_sum(deltas, coeff: jnp.ndarray):
@@ -653,6 +659,24 @@ def bind_strategy(strategy: "FedStrategy | BoundStrategy | None", fl: FLConfig,
             + ", ".join(sorted(n for n, o in SERVER_OPTS.items()
                                if all(k in o.provides for k in missing)))
             + ") or a local update that does not need them.")
+    # uplink codec: resolved and validated here like the local rules (unknown
+    # fl.uplink / bad knob values fail at bind time, not at the first round)
+    codec = build_codec(fl)
+    if UPLINK_STATE_KEY in state_names:
+        raise ValueError(
+            f"local update {local_update!r} has a stateful client transform "
+            f"named {UPLINK_STATE_KEY!r} — that bank key is reserved for the "
+            f"uplink codec's error-feedback residual; rename the transform.")
+    if codec.client_init is not None:
+        chain_state = client_state
+
+        def client_state(params):
+            # the codec's EF residual shares the [N+1, ...] bank with the
+            # chain's stateful transforms under the reserved "uplink" key
+            d = dict(chain_state(params)) if chain_state is not None else {}
+            d[UPLINK_STATE_KEY] = codec.client_init(params)
+            return d
+
     gen = strategy.gen
 
     def init(params) -> ServerState:
@@ -696,6 +720,7 @@ def bind_strategy(strategy: "FedStrategy | BoundStrategy | None", fl: FLConfig,
         server_update=sdef.make_update(fl, gen, loss_fn, fl.cohort_mode),
         local_step=local_step,
         client_state=client_state,
+        codec=codec,
     )
 
 

@@ -1,0 +1,94 @@
+"""Pallas kernels: stochastic quantize-pack / unpack-dequantize hot path.
+
+One grid program per chunk: the program loads its ``[1, chunk]`` fp32 slice,
+computes the max-abs scale, draws the stochastic-rounding uniforms from the
+counter-based hash chain (``rr_perm.ref``), biases the signed levels to
+``[0, 2L]`` and bit-packs them ``8 // bits`` to the byte — no HBM traffic
+besides the packed uint8 wire bytes and one fp32 scale per chunk.  The
+unpack kernel inverts it.  Both mirror ``ref.py`` exactly (the equivalence
+suite holds the numpy / jnp / Pallas triple bitwise-identical).
+
+Per-chunk scalars ride in 1-D blocks like ``rr_perm``; ``interpret=True`` on
+CPU exercises the same code path in tests.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..rr_perm.ref import key_combine
+from .ref import pack_levels, packed_width, unpack_levels
+
+
+def _quantize_kernel(v_ref, key_ref, packed_ref, scale_ref, *, chunk, bits):
+    L = jnp.float32(2 ** (bits - 1) - 1)
+    v = v_ref[...]                                      # [1, chunk] f32
+    key = key_ref[0]
+    a = jnp.abs(v)
+    scale = jnp.max(a)                                  # max is order-exact
+    safe = jnp.where(scale > 0, scale, jnp.float32(1.0))
+    inv = jnp.where(scale > 0, L / safe, jnp.float32(0.0))
+    x = a * inv
+    pos = jax.lax.broadcasted_iota(jnp.uint32, (1, chunk), 1)
+    u = key_combine(key, pos, jnp).astype(jnp.float32) * jnp.float32(2.0**-32)
+    q = jnp.clip(jnp.floor(x + u), jnp.float32(0.0), L)
+    lv = jnp.where(v < 0, L - q, L + q).astype(jnp.uint8)
+    packed_ref[...] = pack_levels(lv, bits, jnp)
+    scale_ref[0] = scale
+
+
+def _dequantize_kernel(packed_ref, scale_ref, out_ref, *, chunk, bits):
+    L = jnp.float32(2 ** (bits - 1) - 1)
+    packed = packed_ref[...]                            # [1, chunk//per] uint8
+    scale = scale_ref[0]
+    lv = unpack_levels(packed, chunk, bits, jnp).astype(jnp.float32)
+    # multiply-only form — keeps jit bitwise-equal to ref.py (see there)
+    out_ref[...] = (lv - L) * scale * (jnp.float32(1.0) / L)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def quantize_pack_kernel(v2, keys, *, bits: int, interpret: bool = False):
+    """[nc, chunk] f32 + [nc] uint32 -> (packed [nc, chunk//per] uint8,
+    scale [nc] f32), one grid program per chunk."""
+    nc, chunk = v2.shape
+    pb = packed_width(chunk, bits)
+    packed, scale = pl.pallas_call(
+        functools.partial(_quantize_kernel, chunk=chunk, bits=bits),
+        grid=(nc,),
+        in_specs=[
+            pl.BlockSpec((1, chunk), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, pb), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((nc, pb), jnp.uint8),
+            jax.ShapeDtypeStruct((nc,), jnp.float32),
+        ),
+        interpret=interpret,
+    )(v2, keys)
+    return packed, scale
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "bits", "interpret"))
+def unpack_dequantize_kernel(packed, scale, *, chunk: int, bits: int,
+                             interpret: bool = False):
+    """(packed [nc, chunk//per] uint8, scale [nc] f32) -> [nc, chunk] f32."""
+    nc, pb = packed.shape
+    assert pb == packed_width(chunk, bits), (pb, chunk, bits)
+    return pl.pallas_call(
+        functools.partial(_dequantize_kernel, chunk=chunk, bits=bits),
+        grid=(nc,),
+        in_specs=[
+            pl.BlockSpec((1, pb), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nc, chunk), jnp.float32),
+        interpret=interpret,
+    )(packed, scale)

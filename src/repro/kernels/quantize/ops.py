@@ -1,0 +1,40 @@
+"""Backend dispatch for the uplink quantization pack/unpack hot path.
+
+``quantize_pack`` / ``unpack_dequantize`` hide the choice between the
+pure-jnp oracle (``ref`` — always available, fuses into the surrounding jit)
+and the Pallas kernels (``pallas`` — interpret-mode on CPU so tests exercise
+the same code path).  Both produce bitwise-identical packed streams, which
+in turn match the numpy mirror in ``ref.quantize_pack(..., xp=np)``.
+"""
+from __future__ import annotations
+
+import jax
+
+from .kernel import quantize_pack_kernel, unpack_dequantize_kernel
+from .ref import quantize_pack_ref, unpack_dequantize_ref
+
+
+def _interpret(interpret: bool | None) -> bool:
+    return jax.default_backend() == "cpu" if interpret is None else interpret
+
+
+def quantize_pack(v2, keys, *, bits: int, backend: str = "ref",
+                  interpret: bool | None = None):
+    """[nc, chunk] f32 -> (packed uint8, scale f32); see ``ref`` for semantics."""
+    if backend == "ref":
+        return quantize_pack_ref(v2, keys, bits)
+    if backend == "pallas":
+        return quantize_pack_kernel(v2, keys, bits=bits,
+                                    interpret=_interpret(interpret))
+    raise ValueError(f"unknown quantize backend {backend!r}")
+
+
+def unpack_dequantize(packed, scale, *, chunk: int, bits: int,
+                      backend: str = "ref", interpret: bool | None = None):
+    """(packed uint8, scale f32) -> [nc, chunk] f32 dequantized values."""
+    if backend == "ref":
+        return unpack_dequantize_ref(packed, scale, chunk, bits)
+    if backend == "pallas":
+        return unpack_dequantize_kernel(packed, scale, chunk=chunk, bits=bits,
+                                        interpret=_interpret(interpret))
+    raise ValueError(f"unknown quantize backend {backend!r}")

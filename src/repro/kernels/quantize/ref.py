@@ -1,0 +1,122 @@
+"""Stochastic uplink quantization — pack/unpack oracle (jnp + numpy).
+
+The compressed uplink's hot path: QSGD-style stochastic integer quantization
+of a client's update, chunked so every chunk of ``chunk`` consecutive values
+carries its own fp32 scale (the max-abs of the chunk) and each value is
+rounded *stochastically* to one of ``2^bits - 1`` signed levels
+
+    q = clip(floor(|v| / scale * L + u), 0, L),   L = 2^(bits-1) - 1
+
+with ``u in [0, 1)`` drawn from a counter-based hash of (stream key, element
+position) — the same murmur3-based chain as ``kernels.rr_perm``, so the
+random bits are stateless, reproducible, and identical across backends.
+Signed levels ``sign(v) * q`` are biased to ``[0, 2L]`` and bit-packed
+``8 // bits`` to the byte: the packed uint8 array plus the per-chunk scales
+IS the wire format the bytes-on-wire accounting charges for.
+
+Everything is elementwise IEEE fp32 / uint arithmetic implemented once over
+an array namespace ``xp``, so numpy (host mirror) and jax.numpy (in-jit
+reference) produce bitwise-identical streams; the Pallas kernel
+(``kernel.py``) mirrors the same math.  Dequantization is exact on zeros
+(an all-zero chunk has scale 0 and decodes to exact zeros) and bounded by
+``scale / L`` per element everywhere else.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..rr_perm.ref import key_combine
+
+BITS_CHOICES = (2, 4, 8)
+
+
+def _levels(bits: int, xp):
+    if bits not in BITS_CHOICES:
+        raise ValueError(f"uplink bits must be one of {BITS_CHOICES}, got {bits}")
+    return xp.float32(2 ** (bits - 1) - 1)
+
+
+def packed_width(chunk: int, bits: int) -> int:
+    """Bytes per packed chunk (``chunk`` values at ``bits`` bits each)."""
+    per = 8 // bits
+    if chunk % per:
+        raise ValueError(f"chunk ({chunk}) must be a multiple of {per} for {bits}-bit packing")
+    return chunk // per
+
+
+def pack_levels(lv, bits: int, xp=np):
+    """Biased levels [..., chunk] uint8 in [0, 2L] -> packed [..., chunk//per].
+
+    Consecutive elements share a byte, element ``j`` of a byte-group shifted
+    by ``bits * j`` — ``unpack_levels`` inverts it exactly.
+    """
+    per = 8 // bits
+    chunk = lv.shape[-1]
+    lv3 = lv.reshape(lv.shape[:-1] + (packed_width(chunk, bits), per))
+    packed = lv3[..., 0]
+    for j in range(1, per):
+        packed = packed | (lv3[..., j] << xp.uint8(bits * j))
+    return packed
+
+
+def unpack_levels(packed, chunk: int, bits: int, xp=np):
+    """Packed bytes [..., chunk//per] -> biased levels [..., chunk] uint8."""
+    per = 8 // bits
+    mask = xp.uint8(2**bits - 1)
+    parts = [(packed >> xp.uint8(bits * j)) & mask for j in range(per)]
+    lv = xp.stack(parts, axis=-1)
+    return lv.reshape(lv.shape[:-2] + (chunk,))
+
+
+def quantize_pack(v2, keys, bits: int, xp=np):
+    """Chunked values [nc, chunk] f32 + per-chunk keys [nc] uint32 ->
+    (packed uint8 [nc, chunk // (8//bits)], scale f32 [nc]).
+
+    The scale is the chunk's max-abs; stochastic rounding uses one hash per
+    (chunk key, element position).  All arithmetic fp32/uint — bitwise
+    identical between numpy and jnp.
+    """
+    L = _levels(bits, xp)
+    nc, chunk = v2.shape
+    a = xp.abs(v2)
+    scale = a.max(axis=1)                                    # [nc] f32
+    # guarded division (no divide-by-zero warning on all-zero chunks); the
+    # select also keeps XLA's algebraic simplifier from folding the division
+    # into downstream multiplies, which would break the numpy/jit bitwise
+    # contract (see unpack_dequantize)
+    safe = xp.where(scale > 0, scale, xp.float32(1.0))
+    inv = xp.where(scale > 0, L / safe, xp.float32(0.0))
+    x = a * inv[:, None]
+    pos = xp.arange(chunk, dtype=xp.uint32)[None, :]
+    u = key_combine(keys[:, None], pos, xp).astype(xp.float32) * xp.float32(2.0**-32)
+    q = xp.clip(xp.floor(x + u), xp.float32(0.0), L)         # [0, L] f32
+    lv = xp.where(v2 < 0, L - q, L + q).astype(xp.uint8)     # [0, 2L]
+    return pack_levels(lv, bits, xp), scale
+
+
+def unpack_dequantize(packed, scale, chunk: int, bits: int, xp=np):
+    """Inverse of :func:`quantize_pack`: -> f32 [nc, chunk].
+
+    ``((lv - L) * scale) * (1/L)`` — multiplies only, in this association:
+    XLA's simplifier rewrites the naive ``(lv - L) * (scale / L)`` under jit
+    (division-by-constant strength reduction), which would silently break the
+    numpy / in-jit / Pallas bitwise contract.  ``1/L`` is inexact for
+    bits > 2, but it is the SAME constant in every backend — the contract is
+    identical streams, and the quantization error bound absorbs the ulp."""
+    L = _levels(bits, xp)
+    lv = unpack_levels(packed, chunk, bits, xp).astype(xp.float32)
+    recip = xp.float32(1.0) / L
+    return (lv - L) * scale[:, None] * recip
+
+
+def quantize_pack_ref(v2, keys, bits: int):
+    """jnp oracle: the in-jit path the Pallas kernel must match bitwise."""
+    import jax.numpy as jnp
+
+    return quantize_pack(v2, keys, bits, xp=jnp)
+
+
+def unpack_dequantize_ref(packed, scale, chunk: int, bits: int):
+    import jax.numpy as jnp
+
+    return unpack_dequantize(packed, scale, chunk, bits, xp=jnp)

@@ -38,11 +38,12 @@ def smoke_task_for(cfg, fl: FLConfig):
                      seed=fl.seed, extras=extras)
 
 
-def run_smoke(arch: str, rounds: int, algorithm: str, server_opt: str) -> None:
+def run_smoke(arch: str, rounds: int, algorithm: str, server_opt: str,
+              uplink: str = "identity") -> None:
     cfg = get_arch(arch).reduced()
     fl = FLConfig(num_clients=6, cohort_size=3, sampling="uniform", epochs=1,
                   local_batch=2, algorithm=algorithm, local_lr=0.05,
-                  server_opt=server_opt, mean_samples=4, seed=0)
+                  server_opt=server_opt, mean_samples=4, seed=0, uplink=uplink)
     task = smoke_task_for(cfg, fl)
     pop = Population.build(fl)
     pipe = FederatedPipeline(task, pop, fl)
@@ -55,7 +56,7 @@ def run_smoke(arch: str, rounds: int, algorithm: str, server_opt: str) -> None:
 
 
 def run_charlm_e2e(rounds: int, algorithm: str, server_opt: str,
-                   checkpoint: str | None) -> None:
+                   checkpoint: str | None, uplink: str = "identity") -> None:
     """The e2e driver: ~100M-param char-LM, heterogeneous clients."""
     from ..configs.paper_tasks import CHARLM_100M
 
@@ -63,7 +64,7 @@ def run_charlm_e2e(rounds: int, algorithm: str, server_opt: str,
     fl = FLConfig(num_clients=32, cohort_size=8, sampling="uniform", epochs=1,
                   local_batch=4, algorithm=algorithm, local_lr=0.05,
                   server_opt=server_opt, imbalance="lognormal", mean_samples=8,
-                  cohort_mode="sequential", seed=1)
+                  cohort_mode="sequential", seed=1, uplink=uplink)
     task = CharLMTask(vocab=min(cfg.vocab, 512), seq_len=128, num_clients=fl.num_clients)
     import dataclasses
     cfg = dataclasses.replace(cfg, vocab=min(cfg.vocab, 512))
@@ -94,11 +95,16 @@ def main() -> None:
     ap.add_argument("--algorithm", default="fedshuffle")
     ap.add_argument("--server-opt", default="sgd")
     ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--uplink", default="identity",
+                    help="uplink codec (repro.fed.comm.CODECS): identity | "
+                         "qsgd | topk | randk | ef_qsgd | ef_randk")
     args = ap.parse_args()
     if args.config == "charlm_e2e":
-        run_charlm_e2e(args.rounds, args.algorithm, args.server_opt, args.checkpoint)
+        run_charlm_e2e(args.rounds, args.algorithm, args.server_opt,
+                       args.checkpoint, args.uplink)
     else:
-        run_smoke(args.arch, args.rounds, args.algorithm, args.server_opt)
+        run_smoke(args.arch, args.rounds, args.algorithm, args.server_opt,
+                  args.uplink)
 
 
 if __name__ == "__main__":

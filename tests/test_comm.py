@@ -1,0 +1,282 @@
+"""Codec-layer contracts: per-codec round-trip properties, wire accounting,
+bind-time validation, and the error-feedback bank's bitwise checkpoint
+resume through ``save_server_state`` / ``load_server_state``."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.base import FLConfig
+from repro.data.federated import FederatedPipeline, Population
+from repro.data.tasks import DuplicatedQuadraticTask
+from repro.fed.comm import (CODECS, Codec, dense_bits, register_codec,
+                            round_keys, uplink_apply, uplink_wire_bits,
+                            with_error_feedback)
+from repro.fed.losses import make_quadratic_loss
+from repro.fed.strategy import bind_strategy, strategy_for
+from repro.utils.checkpoint import load_server_state, save_server_state
+
+FL = FLConfig(uplink_bits=4, uplink_chunk=16, uplink_frac=0.25)
+
+
+def _delta(seed=0):
+    r = np.random.default_rng(seed)
+    return {"a": jnp.asarray(r.normal(size=37).astype(np.float32)),
+            "b": jnp.asarray(r.normal(size=(4, 5)).astype(np.float32))}
+
+
+def _key(seed=0, client=1, rnd=2):
+    return round_keys(seed, jnp.asarray([client], jnp.int32),
+                      jnp.int32(rnd), jnp)[0]
+
+
+def _apply(name, delta, key, fl=FL, ef=None):
+    codec = CODECS[name](fl)
+    if ef is None:
+        ef = ({"e": jax.tree.map(jnp.zeros_like, delta)}
+              if codec.client_init is not None else {})
+    dhat, ef2 = uplink_apply(codec)(delta, ef, key)
+    return codec, dhat, ef2
+
+
+# -- registry / validation ---------------------------------------------------
+
+
+def test_registry_contents():
+    for name in ("identity", "qsgd", "topk", "randk", "ef_qsgd", "ef_randk"):
+        assert name in CODECS
+        assert isinstance(CODECS[name](FL), Codec)
+
+
+def test_unknown_uplink_rejected_at_bind():
+    fl = dataclasses.replace(FL, uplink="zip")
+    with pytest.raises(ValueError, match="unknown uplink codec"):
+        bind_strategy(strategy_for(fl), fl, make_quadratic_loss(3), num_clients=3)
+
+
+@pytest.mark.parametrize("bad", [
+    dict(uplink="qsgd", uplink_bits=3),
+    dict(uplink="qsgd", uplink_chunk=0),
+    dict(uplink="qsgd", uplink_chunk=3),        # not a multiple of 8//bits
+    dict(uplink="qsgd", uplink_backend="cuda"),
+    dict(uplink="topk", uplink_frac=0.0),
+    dict(uplink="randk", uplink_frac=1.5),
+])
+def test_bad_knobs_rejected_at_bind(bad):
+    fl = dataclasses.replace(FL, **bad)
+    with pytest.raises(ValueError):
+        bind_strategy(strategy_for(fl), fl, make_quadratic_loss(3), num_clients=3)
+
+
+def test_uplink_state_key_reserved():
+    """A stateful client transform named 'uplink' would collide with the EF
+    residual bank — binding must refuse it."""
+    from repro.core.local import (CLIENT_TRANSFORMS, ClientChain,
+                                  ClientTransform)
+    from repro.fed.strategy import LOCAL_UPDATES
+
+    def make(loss_fn, fl):
+        return ClientTransform(
+            name="uplink", init=lambda p: {},
+            update=lambda s, d, c, cs: (d, c),
+            client_init=lambda p: {"z": jax.tree.map(jnp.zeros_like, p)},
+            finalize=lambda e, c, cs: cs)
+
+    CLIENT_TRANSFORMS["_collide_uplink"] = make
+    LOCAL_UPDATES["_collide_uplink"] = ClientChain("_collide_uplink",
+                                                   ("_collide_uplink",))
+    try:
+        fl = dataclasses.replace(FL, local_update="_collide_uplink")
+        with pytest.raises(ValueError, match="reserved"):
+            bind_strategy(strategy_for(fl), fl, make_quadratic_loss(3),
+                          num_clients=3)
+    finally:
+        del CLIENT_TRANSFORMS["_collide_uplink"]
+        del LOCAL_UPDATES["_collide_uplink"]
+
+
+def test_register_codec_rejects_duplicates():
+    with pytest.raises(ValueError):
+        register_codec("identity", CODECS["identity"])
+
+
+def test_with_error_feedback_rejects_stateful():
+    with pytest.raises(ValueError):
+        with_error_feedback(CODECS["topk"](FL))
+
+
+# -- per-codec round-trip properties ----------------------------------------
+
+
+def test_identity_is_exact_passthrough():
+    delta = _delta()
+    _, dhat, ef2 = _apply("identity", delta, _key())
+    assert all(a is b for a, b in zip(jax.tree.leaves(dhat),
+                                      jax.tree.leaves(delta)))
+    assert ef2 == {}
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), bits=st.sampled_from([2, 4, 8]))
+def test_qsgd_error_bound(seed, bits):
+    fl = dataclasses.replace(FL, uplink_bits=bits)
+    delta = _delta(seed)
+    codec, dhat, _ = _apply("qsgd", delta, _key(seed), fl=fl)
+    L = 2 ** (bits - 1) - 1
+    for d, h in zip(jax.tree.leaves(delta), jax.tree.leaves(dhat)):
+        flat = np.asarray(d).reshape(-1)
+        # per-chunk scale bound: |dhat - d| <= maxabs(chunk) / L
+        for c0 in range(0, flat.size, fl.uplink_chunk):
+            seg = flat[c0:c0 + fl.uplink_chunk]
+            err = np.abs(np.asarray(h).reshape(-1)[c0:c0 + fl.uplink_chunk] - seg)
+            assert (err <= np.abs(seg).max() / L * (1 + 1e-5) + 1e-12).all()
+
+
+def test_qsgd_seeded_and_round_dependent():
+    delta = _delta()
+    _, d1, _ = _apply("qsgd", delta, _key(rnd=1))
+    _, d1b, _ = _apply("qsgd", delta, _key(rnd=1))
+    _, d2, _ = _apply("qsgd", delta, _key(rnd=2))
+    for a, b in zip(jax.tree.leaves(d1), jax.tree.leaves(d1b)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert any(not np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(jax.tree.leaves(d1), jax.tree.leaves(d2)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       frac=st.sampled_from([0.1, 0.25, 0.5, 1.0]))
+def test_topk_keeps_largest_and_ef_conserves(seed, frac):
+    fl = dataclasses.replace(FL, uplink_frac=frac)
+    delta = _delta(seed)
+    ef = {"e": jax.tree.map(lambda t: 0.1 * jnp.ones_like(t), delta)}
+    codec, dhat, ef2 = _apply("topk", delta, _key(seed), fl=fl, ef=ef)
+    for d, e, h, e2 in zip(jax.tree.leaves(delta), jax.tree.leaves(ef),
+                           jax.tree.leaves(dhat), jax.tree.leaves(ef2)):
+        src = np.asarray(d, np.float32) + np.asarray(e, np.float32)
+        h, e2 = np.asarray(h), np.asarray(e2)
+        k = max(1, min(src.size, int(round(frac * src.size))))
+        nz = h.reshape(-1) != 0
+        assert nz.sum() <= k
+        # kept coordinates carry src exactly; EF conservation is bitwise:
+        # dhat + e' == delta + e  (finalize computes e' = src - dhat)
+        np.testing.assert_array_equal(h.reshape(-1)[nz],
+                                      src.reshape(-1)[nz])
+        np.testing.assert_array_equal(h + e2, src)
+        # the kept set IS a top-k set of |src|
+        kept_min = np.abs(src.reshape(-1)[nz]).min() if nz.any() else 0.0
+        dropped = np.abs(src.reshape(-1)[~nz])
+        assert dropped.size == 0 or dropped.max() <= kept_min + 1e-12
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       frac=st.sampled_from([0.1, 0.25, 0.5]))
+def test_randk_selects_k_scaled_coords(seed, frac):
+    fl = dataclasses.replace(FL, uplink_frac=frac)
+    delta = _delta(seed)
+    _, dhat, _ = _apply("randk", delta, _key(seed), fl=fl)
+    for d, h in zip(jax.tree.leaves(delta), jax.tree.leaves(dhat)):
+        d, h = np.asarray(d).reshape(-1), np.asarray(h).reshape(-1)
+        k = max(1, min(d.size, int(round(frac * d.size))))
+        nz = h != 0
+        assert nz.sum() <= k                     # (a selected coord may be 0)
+        np.testing.assert_allclose(h[nz], d[nz] * (d.size / k), rtol=1e-6)
+
+
+def test_randk_selection_varies_by_round_but_not_by_rerun():
+    delta = _delta()
+    _, d1, _ = _apply("randk", delta, _key(rnd=1))
+    _, d1b, _ = _apply("randk", delta, _key(rnd=1))
+    _, d2, _ = _apply("randk", delta, _key(rnd=2))
+    m1 = np.asarray(jax.tree.leaves(d1)[0]) != 0
+    m1b = np.asarray(jax.tree.leaves(d1b)[0]) != 0
+    m2 = np.asarray(jax.tree.leaves(d2)[0]) != 0
+    np.testing.assert_array_equal(m1, m1b)
+    assert not np.array_equal(m1, m2)
+
+
+# -- wire accounting ---------------------------------------------------------
+
+
+def test_wire_bits_formulas():
+    params = {"w": jnp.zeros((100,), jnp.float32)}
+    dense = dense_bits(params)
+    assert dense == 3200
+    fl = dataclasses.replace(FL, uplink_bits=4, uplink_chunk=16,
+                             uplink_frac=0.1)
+    # qsgd: ceil(100/16)=7 chunks -> 7*(16*4) level bits + 7*32 scale bits
+    assert uplink_wire_bits(CODECS["qsgd"](fl), params) == 7 * 64 + 7 * 32
+    # topk: k=10 values + int32 indices
+    assert uplink_wire_bits(CODECS["topk"](fl), params) == 10 * 64
+    # randk: k=10 values only (indices re-derived from the round key)
+    assert uplink_wire_bits(CODECS["randk"](fl), params) == 10 * 32
+    # the acceptance bar: >= 4x reduction for the compressed codecs
+    for name in ("qsgd", "topk", "randk"):
+        assert dense / uplink_wire_bits(CODECS[name](fl), params) >= 4.0, name
+
+
+# -- error-feedback bank: bitwise checkpoint resume --------------------------
+
+
+TASK = DuplicatedQuadraticTask(copies=(1, 2, 3))
+LOSS = make_quadratic_loss(3)
+
+
+def _fl_train(**kw):
+    return FLConfig(num_clients=3, cohort_size=2, sampling="uniform", epochs=2,
+                    local_batch=1, algorithm="fedshuffle", local_lr=0.05,
+                    server_lr=0.8, seed=11, uplink="topk", uplink_frac=0.5,
+                    **kw)
+
+
+def _assert_state_equal(a, b, what):
+    for x, y in zip(jax.tree.leaves(a._asdict()), jax.tree.leaves(b._asdict())):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y), err_msg=what)
+
+
+@pytest.mark.parametrize("engine", ["legacy", "cohort"])
+def test_ef_bank_resume_bitwise(tmp_path, engine):
+    """save_server_state at round 2, resume via train(state=, start_round=2):
+    the error-feedback residual bank must ride the checkpoint and the resumed
+    trajectory must equal the unbroken one bitwise."""
+    from repro.fed.train_loop import train
+
+    fl = _fl_train(engine=engine)
+    params = {"x": jnp.array([0.3, -0.1, 0.2], jnp.float32)}
+
+    def pipe():
+        return FederatedPipeline(TASK, Population.build(fl, sizes=TASK.sizes()), fl)
+
+    full = train(LOSS, params, pipe(), fl, 4, log_every=0)
+    assert full.state.clients is not None and "uplink" in full.state.clients
+
+    half = train(LOSS, params, pipe(), fl, 2, log_every=0)
+    path = os.path.join(tmp_path, f"ef_{engine}.npz")
+    save_server_state(path, half.state)
+    strat = bind_strategy(strategy_for(fl), fl, LOSS, num_clients=fl.num_clients)
+    restored = load_server_state(path, strat.init(params))
+    _assert_state_equal(half.state, restored, f"{engine}: restored state")
+    resumed = train(LOSS, params, pipe(), fl, 4, log_every=0,
+                    state=restored, start_round=2)
+    _assert_state_equal(full.state, resumed.state, f"{engine}: resumed run")
+
+
+def test_ef_bank_template_mismatch_raises(tmp_path):
+    """A checkpoint with an EF bank must not load into an identity-codec
+    template (and vice versa) — silent resume without residuals is the bug
+    the sidecar validation exists for."""
+    fl = _fl_train()
+    params = {"x": jnp.zeros(3, jnp.float32)}
+    strat = bind_strategy(strategy_for(fl), fl, LOSS, num_clients=3)
+    path = os.path.join(tmp_path, "ef.npz")
+    save_server_state(path, strat.init(params))
+    fl_id = dataclasses.replace(fl, uplink="identity")
+    strat_id = bind_strategy(strategy_for(fl_id), fl_id, LOSS, num_clients=3)
+    with pytest.raises(ValueError, match="state bank"):
+        load_server_state(path, strat_id.init(params))

@@ -1,0 +1,115 @@
+"""Uplink quantization kernels: the numpy / jnp / Pallas triple must produce
+BITWISE-identical packed streams and dequantized values (including under
+jit, where XLA's algebraic simplifier is known to rewrite naive div-by-
+constant formulations), plus the QSGD contract properties."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.quantize.ops import quantize_pack, unpack_dequantize
+from repro.kernels.quantize.ref import (BITS_CHOICES, pack_levels,
+                                        packed_width, quantize_pack as qp_np,
+                                        unpack_dequantize as ud_np,
+                                        unpack_levels)
+
+RNG = np.random.default_rng(0xC0DEC)
+
+
+def _chunks(nc=7, chunk=32, scale_pow=0.0):
+    v2 = (RNG.normal(size=(nc, chunk)) * 10.0**scale_pow).astype(np.float32)
+    keys = RNG.integers(0, 2**32, size=nc, dtype=np.uint32)
+    return v2, keys
+
+
+@pytest.mark.parametrize("bits", BITS_CHOICES)
+def test_numpy_jnp_pallas_bitwise(bits):
+    v2, keys = _chunks()
+    v2[3] = 0.0                                   # all-zero chunk
+    pn, sn = qp_np(v2, keys, bits, xp=np)
+    for backend in ("ref", "pallas"):
+        p, s = quantize_pack(jnp.asarray(v2), jnp.asarray(keys), bits=bits,
+                             backend=backend)
+        np.testing.assert_array_equal(pn, np.asarray(p), err_msg=backend)
+        np.testing.assert_array_equal(sn, np.asarray(s), err_msg=backend)
+        d = unpack_dequantize(p, s, chunk=v2.shape[1], bits=bits,
+                              backend=backend)
+        np.testing.assert_array_equal(ud_np(pn, sn, v2.shape[1], bits, xp=np),
+                                      np.asarray(d), err_msg=backend)
+
+
+@pytest.mark.parametrize("bits", BITS_CHOICES)
+def test_jit_matches_numpy_bitwise(bits):
+    """The in-round path runs under jit — XLA must not be allowed to drift
+    the fp32 stream from the host mirror (div-by-constant strength
+    reduction broke an earlier formulation)."""
+    v2, keys = _chunks(nc=11, chunk=64, scale_pow=2.5)
+    pn, sn = qp_np(v2, keys, bits, xp=np)
+    q = jax.jit(functools.partial(quantize_pack, bits=bits, backend="ref"))
+    u = jax.jit(functools.partial(unpack_dequantize, chunk=64, bits=bits,
+                                  backend="ref"))
+    p, s = q(jnp.asarray(v2), jnp.asarray(keys))
+    np.testing.assert_array_equal(pn, np.asarray(p))
+    np.testing.assert_array_equal(sn, np.asarray(s))
+    np.testing.assert_array_equal(ud_np(pn, sn, 64, bits, xp=np),
+                                  np.asarray(u(p, s)))
+
+
+@settings(max_examples=30, deadline=None)
+@given(bits=st.sampled_from(BITS_CHOICES),
+       nc=st.integers(1, 8),
+       logs=st.floats(-3.0, 3.0),
+       seed=st.integers(0, 2**31 - 1))
+def test_roundtrip_error_bound(bits, nc, logs, seed):
+    """|dequant - v| <= scale / L per element; zeros decode exactly."""
+    r = np.random.default_rng(seed)
+    chunk = 32
+    v2 = (r.normal(size=(nc, chunk)) * 10.0**logs).astype(np.float32)
+    v2[0, :4] = 0.0
+    keys = r.integers(0, 2**32, size=nc, dtype=np.uint32)
+    p, s = qp_np(v2, keys, bits, xp=np)
+    d = ud_np(p, s, chunk, bits, xp=np)
+    L = 2 ** (bits - 1) - 1
+    bound = (s / L)[:, None] * (1 + 1e-5) + 1e-12
+    assert (np.abs(d - v2) <= bound).all()
+    assert (d[v2 == 0] == 0).all()
+    # scales are the chunk max-abs exactly
+    np.testing.assert_array_equal(s, np.abs(v2).max(axis=1))
+
+
+@pytest.mark.parametrize("bits", BITS_CHOICES)
+def test_pack_unpack_levels_exact(bits):
+    """Bit-packing is lossless on the level codes."""
+    L2 = 2**bits - 1
+    lv = RNG.integers(0, L2 + 1, size=(5, 48)).astype(np.uint8)
+    packed = pack_levels(lv, bits, np)
+    assert packed.shape == (5, packed_width(48, bits))
+    np.testing.assert_array_equal(unpack_levels(packed, 48, bits, np), lv)
+    # jnp path packs identically
+    np.testing.assert_array_equal(
+        np.asarray(pack_levels(jnp.asarray(lv), bits, jnp)), packed)
+
+
+def test_stochastic_rounding_is_keyed():
+    """Same key -> same stream; different keys -> different rounding."""
+    v2, keys = _chunks(nc=2, chunk=64)
+    v2[1] = v2[0]
+    p, s = qp_np(v2, keys, 4, xp=np)
+    p2, _ = qp_np(v2, keys, 4, xp=np)
+    np.testing.assert_array_equal(p, p2)
+    assert not np.array_equal(p[0], p[1])       # same values, different keys
+
+
+def test_bad_bits_and_chunk_raise():
+    v2, keys = _chunks(nc=1, chunk=3)
+    with pytest.raises(ValueError):
+        qp_np(v2, keys, 3, xp=np)
+    with pytest.raises(ValueError):
+        qp_np(v2, keys, 4, xp=np)               # 3 % (8//4) != 0
+    with pytest.raises(ValueError):
+        quantize_pack(jnp.ones((1, 4)), jnp.zeros(1, jnp.uint32), bits=4,
+                      backend="nope")
