@@ -36,6 +36,17 @@ static bytes-on-wire compression ratio of each codec.  Writes
 asserts >= 4x bytes-on-wire reduction for every compressed codec, a single
 compilation, and a generous throughput floor vs identity.
 
+``--fleet`` measures the heterogeneous fleet plane under zipf-distributed
+device latency (``fl.fleet="zipf_latency"``): sync rounds wait for the
+slowest of their C=256 cohort every round, while the buffered-async server
+(``fl.server_mode="buffered"``) keeps the same 256 in flight and flushes on
+the first K=64 arrivals — the FedBuff straggler win, measured in *virtual*
+time from the committed event schedule (wall-clock rps is also reported as
+the simulation-overhead check).  Writes ``BENCH_fleet.json`` /
+``benchmarks/results/bench_fleet.csv``; ``--check`` asserts buffered-async
+>= 1.5x sync virtual-time round-throughput at every population size and a
+single compilation per mode.
+
 ``--quick`` (CI smoke) shrinks populations/rounds and writes
 ``benchmarks/results/*_quick.csv`` + ``*_quick.json`` — it never touches the
 committed ``BENCH_*.json`` baselines NOR the full-run CSVs, so a quick run
@@ -67,6 +78,7 @@ BASELINE_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_cohort.json
 BUCKETED_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_bucketed.json")
 STATEFUL_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_stateful.json")
 COMM_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_comm.json")
+FLEET_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_fleet.json")
 
 # The regime the engine exists for: wide cohorts of small local batches,
 # where the legacy path is bound by its per-client python assembly loop
@@ -389,6 +401,108 @@ def main_imbalanced(pops=(1_000, 100_000, 1_000_000), rounds: int = 60,
                            quick)
 
 
+# -- fleet scenario (virtual-clock: buffered-async vs sync round time) -------
+#
+# Same quadratic task / cohort machinery as the main scenario; the delta is
+# the fleet plane.  Both arms draw per-client wall times from the same
+# zipf_latency fleet (heavy-tailed device latency, O(population) arrays built
+# once).  The sync server waits for the slowest of its C in-cohort clients
+# every round; the buffered server keeps C clients in flight and aggregates
+# the first K arrivals per tick — so its virtual round time is a low order
+# statistic of the latency distribution instead of the max.  Virtual times
+# come from the host index plans (the same numbers the round step surfaces
+# as ``round_virtual_time``); wall-clock rps is measured alongside to bound
+# the event-simulation overhead.
+
+FLEET_BUFFER = 64
+
+
+def _fleet_fl(pop: int, **kw) -> FLConfig:
+    return _fl(pop, engine="cohort", rr_backend="device_ref", prefetch=2,
+               participation="uniform_floyd", fleet="zipf_latency",
+               zipf_alpha=1.2, tier_latency=1.0, **kw)
+
+
+def _mean_virtual_time(pipe, rounds: int) -> float:
+    """Mean per-round virtual duration from the host plans: max arrival
+    offset over the round's valid clients (== ``round_virtual_time``)."""
+    return float(np.mean([
+        (lambda m: np.max(m.arrive_time * (m.valid > 0)))(
+            pipe.index_plan(r, with_idx=False).meta)
+        for r in range(rounds)
+    ]))
+
+
+def bench_fleet_population(pop: int, rounds: int) -> dict:
+    task = PopulationQuadraticTask(dim=DIM, num_clients=pop,
+                                   samples_per_client=SAMPLES)
+    sizes = task.sizes()
+    loss = make_quadratic_loss(DIM)
+    params = {"x": jnp.zeros(DIM)}
+    out: dict = {}
+    for mode in ("sync", "buffered"):
+        kw = ({} if mode == "sync" else
+              dict(server_mode="buffered", buffer_size=FLEET_BUFFER,
+                   staleness="poly", staleness_power=0.5))
+        fl = _fleet_fl(pop, **kw)
+        eng = CohortEngine.build(task, Population.build(fl, sizes=sizes), fl)
+        strat = bind_strategy(strategy_for(fl), fl, loss, num_clients=pop)
+        # donation keeps the buffered arm's [N+1] fleet state bank (arrival /
+        # staleness counters) updating in-place rather than copied per round
+        step = jit_round_step(build_round_step(loss, strat, fl, num_clients=pop,
+                                               plane=eng.plane), donate=True)
+        st = strat.init(params)
+        st, _ = step(st, eng.device_plan(0))            # compile
+        jax.block_until_ready(st.params)
+        out[mode] = _time_engine(eng, step, st, rounds, 2)
+        out[f"{mode}_vtime_per_round"] = _mean_virtual_time(eng.pipeline,
+                                                            WARMUP + rounds)
+        out["compilations"] = max(out.get("compilations", 0),
+                                  step._cache_size())
+        if mode == "buffered":
+            sched = eng.pipeline._fleet_sched
+            out["mean_staleness"] = float(np.concatenate([
+                sched.tick(t).staleness for t in range(WARMUP + rounds)
+            ]).mean())
+    # the headline ratio: virtual-time round-throughput, buffered vs sync
+    out["buffered_vs_sync_vtime"] = (out["sync_vtime_per_round"]
+                                     / out["buffered_vtime_per_round"])
+    # fairness-normalized: sync aggregates C clients/round, buffered only K —
+    # virtual time per aggregated client update
+    out["buffered_vs_sync_vtime_per_update"] = (
+        (out["sync_vtime_per_round"] / COHORT)
+        / (out["buffered_vtime_per_round"] / FLEET_BUFFER))
+    return out
+
+
+def main_fleet(pops=(1_000, 100_000, 1_000_000), rounds: int = 60,
+               check: bool = False, quick: bool = False) -> list[str]:
+    rows = []
+    results: dict = {"dim": DIM, "cohort": COHORT, "buffer": FLEET_BUFFER,
+                     "local_batch": 2, "epochs": 2,
+                     "samples_per_client": SAMPLES, "fleet": "zipf_latency",
+                     "zipf_alpha": 1.2, "tier_latency": 1.0,
+                     "staleness": "poly", "staleness_power": 0.5,
+                     "rounds_timed": rounds, "populations": {}}
+    for pop in pops:
+        res = bench_fleet_population(pop, rounds)
+        results["populations"][str(pop)] = res
+        for name in ("sync", "buffered"):
+            rows.append(csv_row(f"fleet/{pop}/{name}", 1.0 / res[name],
+                                f"{res[name]:.1f}rps"))
+            rows.append(csv_row(f"fleet/{pop}/{name}_vtime",
+                                res[f"{name}_vtime_per_round"] * 1e-6,
+                                f"{res[f'{name}_vtime_per_round']:.2f}vt"))
+        print(f"pop={pop}: " + ", ".join(f"{k}={v:.3f}" if isinstance(v, float)
+                                         else f"{k}={v}" for k, v in res.items()))
+        if check:
+            # the acceptance bar: buffered-async beats sync round-throughput
+            # in virtual time under zipf latency, with one compile per mode
+            assert res["buffered_vs_sync_vtime"] >= 1.5, (pop, res)
+            assert res["compilations"] == 1, (pop, res)
+    return _write_scenario(results, rows, FLEET_PATH, "bench_fleet", quick)
+
+
 def main(pops=(1_000, 100_000, 1_000_000), rounds: int = 60,
          check: bool = False, quick: bool = False) -> list[str]:
     rows = []
@@ -423,6 +537,8 @@ if __name__ == "__main__":
                     help="stateful-chain scenario: scaffold state bank vs sgd")
     ap.add_argument("--compressed", action="store_true",
                     help="uplink codec scenario: identity vs qsgd/topk/randk")
+    ap.add_argument("--fleet", action="store_true",
+                    help="fleet scenario: buffered-async vs sync virtual time")
     args = ap.parse_args()
     pops = (1_000, 10_000) if args.quick else (1_000, 100_000, 1_000_000)
     rounds = args.rounds or (15 if args.quick else 60)
@@ -431,7 +547,8 @@ if __name__ == "__main__":
     # the committed baselines nor the full-run CSVs
     entry = (main_stateful if args.stateful
              else main_imbalanced if args.imbalanced
-             else main_comm if args.compressed else main)
+             else main_comm if args.compressed
+             else main_fleet if args.fleet else main)
     for row in entry(pops=pops, rounds=rounds, check=args.check,
                      quick=args.quick):
         print(row)

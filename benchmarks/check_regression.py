@@ -13,6 +13,8 @@ box), so the gate checks the *ratio* metrics each scenario was built around:
 * stateful   — scaffold / sgd throughput retention (O(cohort) state traffic)
 * comm       — bytes-on-wire compression ratios (static — also held to the
                hard >= 4x acceptance floor) and codec / identity throughput
+* fleet      — buffered-async / sync virtual-time round-throughput under
+               zipf device latency (also held to the hard >= 1.5x floor)
 
 A quick-run ratio below ``tolerance * baseline`` (default 0.5 — generous,
 sized for runner jitter, not for architectural regressions: an O(N) scatter
@@ -46,10 +48,13 @@ SCENARIOS: dict[str, tuple[str, tuple[str, ...]]] = {
     "comm": ("BENCH_comm.json",
              ("ratio_qsgd", "ratio_topk", "ratio_randk",
               "qsgd_vs_identity", "topk_vs_identity", "randk_vs_identity")),
+    "fleet": ("BENCH_fleet.json",
+              ("buffered_vs_sync_vtime", "buffered_vs_sync_vtime_per_update")),
 }
 
 # acceptance floors that hold regardless of the baseline (the committed bar)
-HARD_FLOORS = {"ratio_qsgd": 4.0, "ratio_topk": 4.0, "ratio_randk": 4.0}
+HARD_FLOORS = {"ratio_qsgd": 4.0, "ratio_topk": 4.0, "ratio_randk": 4.0,
+               "buffered_vs_sync_vtime": 1.5}
 
 
 def check_scenario(name: str, tolerance: float) -> list[str]:

@@ -225,6 +225,21 @@ RRBackend = Literal["host", "host_feistel", "device_ref", "device"]
 #   "randk"    — seeded random-k, unbiased n/k scaling (values-only wire)
 #   "ef_qsgd" / "ef_randk" — error-feedback variants
 UplinkBackend = Literal["ref", "pallas"]
+# Heterogeneous fleet plane (repro.fed.fleet).  Fleet model (FLEETS registry;
+# extensible via register_fleet, hence plain str):
+#   "homogeneous"  — unit speed, zero latency (with server_mode="sync" and no
+#                    faults the fleet plane is fully off — bitwise-frozen)
+#   "tiered"       — fleet_tiers discrete device tiers, speeds 1..1/tier_spread
+#   "zipf_latency" — Pareto(zipf_alpha)-tailed per-client latency (stragglers)
+# Fault scenarios ride FLConfig.faults as a comma-separated list of FAULTS
+# registry names ("dropout,straggler,abort"), each with its knobs below.
+# Server aggregation mode:
+#   "sync"     — the classic synchronous round (the default; frozen contract)
+#   "buffered" — FedBuff-style async: cohort_size clients in flight, the
+#                server aggregates the first buffer_size arrivals per virtual
+#                tick, late updates discounted by the staleness weighting
+ServerMode = Literal["sync", "buffered"]
+Staleness = Literal["constant", "poly"]
 
 
 @dataclass(frozen=True)
@@ -273,6 +288,23 @@ class FLConfig:
     uplink_chunk: int = 256        # qsgd: values per fp32 scale
     uplink_frac: float = 0.1       # topk/randk: fraction of coords shipped
     uplink_backend: UplinkBackend = "ref"  # quantize pack path (ref | pallas)
+    # heterogeneous fleet plane (device tiers, fault injection, async server;
+    # see the ServerMode note above and repro.fed.fleet) — the defaults keep
+    # the synchronous path bitwise-frozen
+    fleet: str = "homogeneous"     # device-tier model (key into fed.fleet.FLEETS)
+    fleet_tiers: int = 3           # tiered: number of device speed tiers
+    tier_spread: float = 4.0       # tiered: slowest/fastest speed ratio (>= 1)
+    tier_latency: float = 1.0      # base per-round latency (virtual-time units)
+    zipf_alpha: float = 1.2        # zipf_latency: Pareto tail exponent
+    faults: str = ""               # comma-separated fed.fleet.FAULTS scenarios
+    drop_prob: float = 0.0         # "dropout": per-(client, round) failure prob
+    straggler_prob: float = 0.0    # "straggler": P(round slowed by the factor)
+    straggler_factor: float = 8.0  # "straggler": wall-time multiplier (>= 1)
+    round_deadline: float = 0.0    # "abort": virtual-time budget cutting steps
+    server_mode: ServerMode = "sync"
+    buffer_size: int = 16          # buffered: aggregate first K arrivals/tick
+    staleness: Staleness = "poly"  # buffered staleness discount kind
+    staleness_power: float = 0.5   # poly: weight = (1 + tau) ** -staleness_power
     # system heterogeneity (Fig. 4): every client is cut short by this many
     # local steps (planned vs actual); the "gen" hybrid algorithm corrects it
     drop_last_steps: int = 0

@@ -93,25 +93,27 @@ Q_KINDS: dict[str, Callable] = {
 }
 
 
-def _register(registry: dict, slot: str, name: str, fn: Callable) -> None:
-    if name in registry:
-        raise ValueError(f"{slot}-kind {name!r} already registered")
+def _register(registry: dict, slot: str, name: str, fn: Callable,
+              overwrite: bool = False) -> None:
+    if not overwrite and name in registry:
+        raise ValueError(
+            f"{slot}-kind {name!r} already registered (pass overwrite=True to replace)")
     registry[name] = fn
 
 
-def register_c_kind(name: str, fn: Callable) -> None:
+def register_c_kind(name: str, fn: Callable, *, overwrite: bool = False) -> None:
     """fn(steps, planned) -> 1/c_i ([C])."""
-    _register(C_KINDS, "c", name, fn)
+    _register(C_KINDS, "c", name, fn, overwrite)
 
 
-def register_w_kind(name: str, fn: Callable) -> None:
+def register_w_kind(name: str, fn: Callable, *, overwrite: bool = False) -> None:
     """fn(meta, steps, planned) -> w~_i ([C])."""
-    _register(W_KINDS, "w", name, fn)
+    _register(W_KINDS, "w", name, fn, overwrite)
 
 
-def register_q_kind(name: str, fn: Callable) -> None:
+def register_q_kind(name: str, fn: Callable, *, overwrite: bool = False) -> None:
     """fn(meta, num_clients, cohort_size) -> q_i^S ([C] or scalar)."""
-    _register(Q_KINDS, "q", name, fn)
+    _register(Q_KINDS, "q", name, fn, overwrite)
 
 
 # ---------------------------------------------------------------------------

@@ -186,10 +186,12 @@ class ClientChain(NamedTuple):
 CLIENT_TRANSFORMS: dict[str, Callable] = {}
 
 
-def register_client_transform(name: str, make: Callable) -> None:
+def register_client_transform(name: str, make: Callable, *,
+                              overwrite: bool = False) -> None:
     """Register ``make(loss_fn, fl) -> ClientTransform`` under ``name``."""
-    if name in CLIENT_TRANSFORMS:
-        raise ValueError(f"client transform {name!r} already registered")
+    if not overwrite and name in CLIENT_TRANSFORMS:
+        raise ValueError(
+            f"client transform {name!r} already registered (pass overwrite=True to replace)")
     CLIENT_TRANSFORMS[name] = make
 
 

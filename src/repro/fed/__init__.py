@@ -41,6 +41,20 @@ from .comm import (
     register_codec,
     with_error_feedback,
 )
+from .fleet import (
+    FAULTS,
+    FLEETS,
+    FLEET_STATE_KEY,
+    BufferedSchedule,
+    FleetModel,
+    apply_faults,
+    build_fleet,
+    fleet_active,
+    register_fault,
+    register_fleet,
+    staleness_weights,
+    validate_fleet_config,
+)
 from .train_loop import train
 
 __all__ = ["as_device_batch", "build_round_step", "jit_round_step",
@@ -56,4 +70,8 @@ __all__ = ["as_device_batch", "build_round_step", "jit_round_step",
            "CohortEngine", "DevicePlane", "RoundPrefetcher", "as_device_plan",
            "build_plane", "register_participation",
            "CODECS", "Codec", "build_codec", "register_codec",
-           "with_error_feedback"]
+           "with_error_feedback",
+           "FLEETS", "FAULTS", "FLEET_STATE_KEY", "BufferedSchedule",
+           "FleetModel", "apply_faults", "build_fleet", "fleet_active",
+           "register_fault", "register_fleet", "staleness_weights",
+           "validate_fleet_config"]

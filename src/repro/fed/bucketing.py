@@ -12,6 +12,12 @@ steps are exact no-ops), so the two layouts cannot drift.
 ``unbucket`` appends one zeros row to the bucket concatenation; unassigned
 slots (invalid cohort padding) point at it via ``pos``, matching the exact
 zeros the padded layout computes for fully-masked slots.
+
+The fleet plane composes with this for free: a deterministic ``abort``
+deadline caps each client's realized steps by its device tier
+(``FleetModel.deadline_caps``), the pipeline folds those caps into the
+bucket edges, and slow tiers land in narrow buckets — the scan never pays
+for steps the deadline forbids (the tier <-> bucket mapping).
 """
 from __future__ import annotations
 

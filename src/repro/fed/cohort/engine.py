@@ -78,6 +78,15 @@ class CohortEngine:
     def k_max(self) -> int:
         return self.pipeline.k_max
 
+    @property
+    def fleet(self):
+        """The pipeline's :class:`~repro.fed.fleet.model.FleetModel` (None
+        when the fleet plane is off).  Fleet math lives entirely in the
+        pipeline's index-plan assembly — sync fault passes, the buffered
+        virtual-clock schedule — so the engine's plans carry the fleet meta
+        fields with no engine-side changes; both paths stay interchangeable."""
+        return self.pipeline.fleet
+
     # -- round production ---------------------------------------------------
 
     def index_plan(self, rnd: int):

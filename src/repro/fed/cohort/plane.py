@@ -21,7 +21,10 @@ Two bank layouts:
 RR indices on device (``kernels.rr_perm``) when the plan carries none.
 Bitwise contract: a gather returns exactly the floats ``task.batch`` would
 have produced, so with host-generated indices the materialized batch equals
-the legacy path bit-for-bit.
+the legacy path bit-for-bit.  The fleet plane (``repro.fed.fleet``) never
+touches the plane: fault cuts and buffered-tick cohorts are realized in the
+host index plan, whose meta (staleness / arrive_time / dropped included)
+passes through ``materialize`` untouched.
 
 The *data* bank here is immutable and round-independent.  Its mutable
 sibling — the per-client **state bank** of stateful local chains (SCAFFOLD

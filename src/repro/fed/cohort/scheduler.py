@@ -141,10 +141,12 @@ PARTICIPATION: dict[str, Callable] = {
 }
 
 
-def register_participation(name: str, fn: Callable) -> None:
+def register_participation(name: str, fn: Callable, *,
+                           overwrite: bool = False) -> None:
     """fn(fl, population, rnd, slots, probs) -> CohortSample."""
-    if name in PARTICIPATION:
-        raise ValueError(f"participation schedule {name!r} already registered")
+    if not overwrite and name in PARTICIPATION:
+        raise ValueError(
+            f"participation schedule {name!r} already registered (pass overwrite=True to replace)")
     PARTICIPATION[name] = fn
 
 

@@ -291,10 +291,12 @@ CODECS: dict[str, Callable[[FLConfig], Codec]] = {
 }
 
 
-def register_codec(name: str, make: Callable[[FLConfig], Codec]) -> None:
+def register_codec(name: str, make: Callable[[FLConfig], Codec], *,
+                   overwrite: bool = False) -> None:
     """Register ``make(fl) -> Codec`` under ``name`` (FLConfig.uplink key)."""
-    if name in CODECS:
-        raise ValueError(f"uplink codec {name!r} already registered")
+    if not overwrite and name in CODECS:
+        raise ValueError(
+            f"uplink codec {name!r} already registered (pass overwrite=True to replace)")
     CODECS[name] = make
 
 

@@ -1,0 +1,48 @@
+"""Buffered-async server path: staleness weighting + the fleet state bank.
+
+The FedBuff-style server (``fl.server_mode="buffered"``) aggregates each
+tick's first-K arrivals through the *existing* strategy hooks: binding wraps
+``agg_coeffs`` so every coefficient is multiplied by a staleness discount,
+and ``aggregate`` (= ``weighted_sum(deltas, agg_coeffs(meta))``) inherits it
+in both cohort modes.  The weighting contract:
+
+    ``constant`` — w(tau) = 1            (pure FedBuff averaging)
+    ``poly``     — w(tau) = (1 + tau) ** -fl.staleness_power
+
+with tau the update's staleness in server ticks (``meta.staleness``; 0 for
+work dispatched and aggregated in the same tick — and identically 0 in sync
+mode, where the weight is exactly 1 and the math is untouched).
+
+Per-client staleness counters ride ``ServerState.clients`` under the
+reserved ``FLEET_STATE_KEY`` bank key, exactly like scaffold variates and
+uplink error-feedback residuals: one row per client + a scratch row, rows
+gathered/scattered O(cohort) inside the jitted round, untouched rows passed
+through the local chain bit-for-bit.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...configs.base import FLConfig
+
+FLEET_STATE_KEY = "fleet"   # reserved ServerState.clients bank key
+
+
+def fleet_client_state() -> dict:
+    """One client's row of the fleet bank: cumulative arrival/staleness
+    counters (fp32 scalars; the round driver increments the cohort's rows)."""
+    return {"arrivals": jnp.zeros((), jnp.float32),
+            "stale_sum": jnp.zeros((), jnp.float32)}
+
+
+def staleness_weights(fl: FLConfig, meta) -> jnp.ndarray:
+    """Per-slot staleness discounts ([C] fp32, 1.0 at tau=0).
+
+    Metas without fleet fields (hand-built test metas) weigh as tau=0."""
+    stal = getattr(meta, "staleness", None)
+    if stal is None:
+        stal = jnp.zeros_like(jnp.asarray(meta.valid, jnp.float32))
+    stal = jnp.asarray(stal, jnp.float32)
+    if fl.staleness == "constant":
+        return jnp.ones_like(stal)
+    return (1.0 + stal) ** jnp.float32(-fl.staleness_power)

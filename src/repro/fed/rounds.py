@@ -55,6 +55,7 @@ from ..utils.pytree import tree_zeros_like
 from .bucketing import scan_clients, vmap_clients
 from .comm import (UPLINK_STATE_KEY, dense_bits, round_keys, uplink_apply,
                    uplink_wire_bits)
+from .fleet import FLEET_STATE_KEY, fleet_active
 from .server import ServerState
 from .strategy import (BoundStrategy, CohortState, FedStrategy, RoundCtx,
                        bind_strategy)
@@ -219,6 +220,17 @@ def build_round_step(loss_fn: Callable,
 
         cstate = None
         new_clients = None
+        if banked and FLEET_STATE_KEY in new_cs:
+            # buffered server bookkeeping: bump the cohort's arrival /
+            # staleness counters BEFORE the masked commit below, so invalid
+            # padding slots (and dropped clients) revert to what they read
+            fb = new_cs[FLEET_STATE_KEY]
+            stal = (jnp.asarray(meta.staleness, jnp.float32)
+                    if meta.staleness is not None else jnp.zeros_like(meta.valid))
+            new_cs = {**new_cs, FLEET_STATE_KEY: {
+                "arrivals": fb["arrivals"] + 1.0,
+                "stale_sum": fb["stale_sum"] + stal,
+            }}
         if banked:
             # invalid slots commit exactly what they read (layout-independent
             # — the bucketed reassembly's zeros row never reaches the bank),
@@ -259,6 +271,19 @@ def build_round_step(loss_fn: Callable,
                 bits_pc / 8e6)
             metrics["uplink_compression"] = jnp.float32(
                 dense_bits(state.params) / bits_pc)
+        if fleet_active(fl):
+            # fleet telemetry — keys exist only when the fleet plane is on,
+            # so every pre-existing configuration's metric tree stays frozen.
+            # round_virtual_time: sync = slowest surviving client's wall
+            # time; buffered = the tick's span (the K-th arrival flushes it).
+            z = jnp.zeros_like(meta.valid)
+            stal = z if meta.staleness is None else jnp.asarray(meta.staleness, jnp.float32)
+            arr = z if meta.arrive_time is None else jnp.asarray(meta.arrive_time, jnp.float32)
+            drp = z if meta.dropped is None else jnp.asarray(meta.dropped, jnp.float32)
+            metrics["round_virtual_time"] = jnp.max(arr * meta.valid)
+            metrics["arrived_clients"] = meta.valid.sum()
+            metrics["dropped_clients"] = drp.sum()
+            metrics["mean_staleness"] = (stal * meta.valid).sum() / valid_sum
         return state, metrics
 
     return round_step
@@ -270,8 +295,10 @@ def as_device_meta(meta):
     The single definition of the meta dtype policy — ``as_device_batch``
     (legacy path) and ``cohort.plan.as_device_plan`` (engine path) both use
     it, which is what keeps the two paths bitwise-interchangeable."""
-    return type(meta)(*[jnp.asarray(a, jnp.float32 if a.dtype != jnp.int64 else jnp.int32)
-                        for a in meta])
+    return type(meta)(*[
+        None if a is None
+        else jnp.asarray(a, jnp.float32 if a.dtype != jnp.int64 else jnp.int32)
+        for a in meta])
 
 
 def as_device_batch(rb):

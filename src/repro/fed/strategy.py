@@ -60,6 +60,8 @@ from ..data.federated import BucketedBatch
 from ..utils.pytree import tree_copy, tree_zeros_like
 from .bucketing import scan_clients, vmap_clients
 from .comm import UPLINK_STATE_KEY, build_codec
+from .fleet import (FLEET_STATE_KEY, fleet_active, fleet_client_state,
+                    staleness_weights, validate_fleet_config)
 from .server import ServerState
 
 StrategyState = dict  # the server-side optimizer state (the ``opt`` dict)
@@ -121,13 +123,15 @@ LOCAL_UPDATES: dict[str, "ClientChain | Callable"] = {
 }
 
 
-def register_local_update(name: str, make: "ClientChain | Callable") -> None:
+def register_local_update(name: str, make: "ClientChain | Callable", *,
+                          overwrite: bool = False) -> None:
     """Register a local-update rule: a :class:`~repro.core.local.ClientChain`
     (preferred — composable, may declare per-client state) or the legacy raw
     factory ``make(loss_fn, fl) -> one_client(params, momentum, data, mask,
     eta) -> (delta, loss)``."""
-    if name in LOCAL_UPDATES:
-        raise ValueError(f"local update {name!r} already registered")
+    if not overwrite and name in LOCAL_UPDATES:
+        raise ValueError(
+            f"local update {name!r} already registered (pass overwrite=True to replace)")
     LOCAL_UPDATES[name] = make
 
 
@@ -425,9 +429,10 @@ SERVER_OPTS: dict[str, ServerOpt] = {
 }
 
 
-def register_server_opt(opt: ServerOpt) -> None:
-    if opt.name in SERVER_OPTS:
-        raise ValueError(f"server opt {opt.name!r} already registered")
+def register_server_opt(opt: ServerOpt, *, overwrite: bool = False) -> None:
+    if not overwrite and opt.name in SERVER_OPTS:
+        raise ValueError(
+            f"server opt {opt.name!r} already registered (pass overwrite=True to replace)")
     SERVER_OPTS[opt.name] = opt
 
 
@@ -471,7 +476,8 @@ STRATEGIES: dict[str, FedStrategy] = {}
 
 def register_strategy(strategy: FedStrategy, *, overwrite: bool = False) -> FedStrategy:
     if not overwrite and strategy.name in STRATEGIES:
-        raise ValueError(f"strategy {strategy.name!r} already registered")
+        raise ValueError(
+            f"strategy {strategy.name!r} already registered (pass overwrite=True to replace)")
     if strategy.equalize not in (None, "min", "mean"):
         raise ValueError(
             f"strategy {strategy.name!r}: equalize must be None, 'min' or "
@@ -600,6 +606,11 @@ def bind_strategy(strategy: "FedStrategy | BoundStrategy | None", fl: FLConfig,
             f"unknown exec_mode {fl.exec_mode!r}; have ('padded', 'bucketed')")
     if fl.exec_mode == "bucketed" and fl.buckets < 1:
         raise ValueError(f"fl.buckets must be >= 1, got {fl.buckets}")
+    if fleet_active(fl):
+        # every fleet-plane knob validated here, mirroring the engine block
+        # below: unknown fleet/fault names or bad parameters fail loudly at
+        # bind time, not rounds deep into the virtual-clock simulation
+        validate_fleet_config(fl)
     if fl.engine == "cohort":
         # better a loud bind-time error than a first-round failure deep in the
         # prefetch thread: the engine knobs are all validated here
@@ -677,6 +688,23 @@ def bind_strategy(strategy: "FedStrategy | BoundStrategy | None", fl: FLConfig,
             d[UPLINK_STATE_KEY] = codec.client_init(params)
             return d
 
+    buffered = fl.server_mode == "buffered"
+    if buffered:
+        if FLEET_STATE_KEY in state_names:
+            raise ValueError(
+                f"local update {local_update!r} has a stateful client "
+                f"transform named {FLEET_STATE_KEY!r} — that bank key is "
+                f"reserved for the buffered server's per-client staleness "
+                f"counters; rename the transform.")
+        pre_fleet_state = client_state
+
+        def client_state(params):
+            # per-client arrival/staleness counters share the bank under the
+            # reserved "fleet" key, exactly like the codec's EF residual
+            d = dict(pre_fleet_state(params)) if pre_fleet_state is not None else {}
+            d[FLEET_STATE_KEY] = fleet_client_state()
+            return d
+
     gen = strategy.gen
 
     def init(params) -> ServerState:
@@ -699,8 +727,14 @@ def bind_strategy(strategy: "FedStrategy | BoundStrategy | None", fl: FLConfig,
         return ClientPlan(eta=fl.local_lr * lr_mult * inv_c)
 
     def agg_coeffs(meta) -> jnp.ndarray:
-        return agg_coeff(gen, meta, num_clients=num_clients,
-                         cohort_size=fl.cohort_size)
+        # buffered-async: each tick aggregates |S| = buffer_size arrivals (the
+        # q normalization's cohort size) and discounts stale updates; the sync
+        # path multiplies nothing — bitwise-frozen
+        coeff = agg_coeff(gen, meta, num_clients=num_clients,
+                          cohort_size=fl.buffer_size if buffered else fl.cohort_size)
+        if buffered:
+            coeff = coeff * staleness_weights(fl, meta)
+        return coeff
 
     def aggregate(deltas, meta):
         return weighted_sum(deltas, agg_coeffs(meta))

@@ -94,10 +94,16 @@ def train(
             with engine.round_plans(rounds - start_round, start=start_round) as it:
                 yield from it
 
+    virtual_time = 0.0
     for r, batch in round_iter():
         state, mets = step(state, batch, jnp.asarray(sched(r, rounds), jnp.float32))
         row = {"round": r, "lr_mult": sched(r, rounds),
                **{k: float(v) for k, v in mets.items()}}
+        if "round_virtual_time" in row:
+            # cumulative virtual clock — the x-axis fleet experiments plot
+            # loss against (only present when the fleet plane is on)
+            virtual_time += row["round_virtual_time"]
+            row["virtual_time"] = virtual_time
         if eval_fn is not None and (r % eval_every == 0 or r == rounds - 1):
             row.update({f"eval_{k}": float(v) for k, v in eval_fn(state.params).items()})
         ml.append(**row)

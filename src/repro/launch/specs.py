@@ -58,6 +58,8 @@ def _meta_specs(C: int):
         num_samples=_sds((C,), jnp.float32), epochs=_sds((C,), jnp.float32),
         num_steps=_sds((C,), jnp.float32), num_steps_planned=_sds((C,), jnp.float32),
         valid=_sds((C,), jnp.float32), client_id=_sds((C,), jnp.int32),
+        staleness=_sds((C,), jnp.float32), arrive_time=_sds((C,), jnp.float32),
+        dropped=_sds((C,), jnp.float32),
     )
 
 

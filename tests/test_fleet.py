@@ -1,0 +1,360 @@
+"""Fleet-plane units + virtual-clock property tests.
+
+Covers the three fleet layers in isolation (device-tier models, fault
+scenarios, the buffered virtual-clock executor) plus the registrar
+``overwrite=True`` escape hatch across every extension registry.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.base import FLConfig
+from repro.data.federated import ClientMeta, Population
+from repro.fed.fleet import (FAULTS, FLEETS, BufferedSchedule, apply_faults,
+                             build_fleet, fleet_active, fleet_uniform,
+                             parse_faults, staleness_weights,
+                             validate_fleet_config)
+from repro.fed.fleet.model import SUB_DROPOUT, SUB_STRAGGLER
+
+
+def _fl(**kw):
+    kw.setdefault("num_clients", 16)
+    kw.setdefault("cohort_size", 4)
+    kw.setdefault("sampling", "uniform")
+    kw.setdefault("epochs", 2)
+    kw.setdefault("local_batch", 2)
+    return FLConfig(**kw)
+
+
+def _pop(fl):
+    return Population.build(fl)
+
+
+# ---------------------------------------------------------------------------
+# registrar escape hatch: every registry refuses duplicates with a uniform
+# message and accepts overwrite=True
+# ---------------------------------------------------------------------------
+
+
+def _registrar_cases():
+    from repro.core.algorithms import (C_KINDS, Q_KINDS, W_KINDS,
+                                       register_c_kind, register_q_kind,
+                                       register_w_kind)
+    from repro.core.local import CLIENT_TRANSFORMS, register_client_transform
+    from repro.fed.cohort.scheduler import PARTICIPATION, register_participation
+    from repro.fed.comm.codecs import CODECS, register_codec
+    from repro.fed.fleet import register_fault, register_fleet
+    from repro.fed.strategy import (LOCAL_UPDATES, SERVER_OPTS,
+                                    register_local_update, register_server_opt)
+
+    dummy = object()
+    return [
+        ("fleet", FLEETS, lambda n, o: register_fleet(n, dummy, overwrite=o)),
+        ("fault", FAULTS, lambda n, o: register_fault(n, dummy, overwrite=o)),
+        ("participation", PARTICIPATION,
+         lambda n, o: register_participation(n, dummy, overwrite=o)),
+        ("codec", CODECS, lambda n, o: register_codec(n, dummy, overwrite=o)),
+        ("client_transform", CLIENT_TRANSFORMS,
+         lambda n, o: register_client_transform(n, dummy, overwrite=o)),
+        ("local_update", LOCAL_UPDATES,
+         lambda n, o: register_local_update(n, dummy, overwrite=o)),
+        ("c_kind", C_KINDS, lambda n, o: register_c_kind(n, dummy, overwrite=o)),
+        ("w_kind", W_KINDS, lambda n, o: register_w_kind(n, dummy, overwrite=o)),
+        ("q_kind", Q_KINDS, lambda n, o: register_q_kind(n, dummy, overwrite=o)),
+    ]
+
+
+@pytest.mark.parametrize("kind,registry,reg",
+                         _registrar_cases(),
+                         ids=[c[0] for c in _registrar_cases()])
+def test_registrar_overwrite_escape_hatch(kind, registry, reg):
+    name = f"_test_overwrite_{kind}"
+    assert name not in registry
+    try:
+        reg(name, False)
+        with pytest.raises(ValueError, match="overwrite=True"):
+            reg(name, False)
+        reg(name, True)                      # explicit replace is allowed
+    finally:
+        registry.pop(name, None)
+
+
+def test_register_server_opt_and_strategy_overwrite():
+    from repro.core.algorithms import GenSpec
+    from repro.fed.strategy import (SERVER_OPTS, STRATEGIES, FedStrategy,
+                                    ServerOpt, register_server_opt,
+                                    register_strategy)
+
+    opt = ServerOpt("_test_overwrite_opt", lambda fl, p: {}, lambda *a: None)
+    try:
+        register_server_opt(opt)
+        with pytest.raises(ValueError, match="overwrite=True"):
+            register_server_opt(opt)
+        register_server_opt(opt, overwrite=True)
+    finally:
+        SERVER_OPTS.pop(opt.name, None)
+    strat = FedStrategy(name="_test_overwrite_strat",
+                        gen=GenSpec(c="one", w="w", q="p"))
+    try:
+        register_strategy(strat)
+        with pytest.raises(ValueError, match="overwrite=True"):
+            register_strategy(strat)
+        register_strategy(strat, overwrite=True)
+    finally:
+        STRATEGIES.pop(strat.name, None)
+
+
+# ---------------------------------------------------------------------------
+# fleet models
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_off_by_default():
+    fl = _fl()
+    assert not fleet_active(fl)
+    assert build_fleet(fl, _pop(fl)) is None
+
+
+@pytest.mark.parametrize("name", sorted(FLEETS))
+def test_fleet_models_shapes_and_determinism(name):
+    fl = _fl(fleet=name, server_mode="sync",
+             faults="dropout", drop_prob=0.1)        # activate the plane
+    pop = _pop(fl)
+    a, b = build_fleet(fl, pop), build_fleet(fl, pop)
+    n = pop.num_clients
+    for m in (a, b):
+        assert m.tier.shape == m.speed.shape == m.latency.shape == (n,)
+        assert (m.speed > 0).all() and (m.latency >= 0).all()
+    np.testing.assert_array_equal(a.tier, b.tier)
+    np.testing.assert_array_equal(a.speed, b.speed)
+    np.testing.assert_array_equal(a.latency, b.latency)
+
+
+def test_tiered_fleet_ranges():
+    fl = _fl(fleet="tiered", fleet_tiers=4, tier_spread=8.0, faults="")
+    m = build_fleet(fl, _pop(fl))
+    assert m.tier.min() >= 0 and m.tier.max() <= 3
+    assert m.speed.max() <= 1.0 and m.speed.min() >= 1.0 / 8.0
+
+
+def test_zipf_latency_tail_capped():
+    fl = _fl(fleet="zipf_latency", zipf_alpha=0.5, tier_latency=2.0)
+    m = build_fleet(fl, _pop(fl))
+    assert (m.latency >= 2.0).all()                  # lat multiplier >= 1
+    assert (m.latency <= 2.0 * 256.0).all()          # Pareto tail cap
+    assert (m.speed == 1.0).all()
+
+
+def test_fleet_uniform_stateless_and_domain_separated():
+    ids = np.arange(10)
+    a = fleet_uniform(7, ids, 3, SUB_DROPOUT)
+    b = fleet_uniform(7, ids, 3, SUB_DROPOUT)
+    c = fleet_uniform(7, ids, 3, SUB_STRAGGLER)
+    np.testing.assert_array_equal(a, b)
+    assert (a != c).any()
+    assert (a >= 0).all() and (a < 1).all()
+
+
+def test_wall_time_and_deadline_caps_inverse():
+    fl = _fl(fleet="tiered", fleet_tiers=3, faults="")
+    m = build_fleet(fl, _pop(fl))
+    ids = np.arange(_pop(fl).num_clients)
+    caps = m.deadline_caps(20.0)
+    # a client's cap is exactly the most steps that finish by the deadline
+    fits = caps >= 1
+    assert (m.wall_time(ids[fits], caps[fits]) <= 20.0 + 1e-9).all()
+    assert (m.wall_time(ids, caps + 1) > 20.0 - 1e-9).all()
+
+
+# ---------------------------------------------------------------------------
+# fault scenarios
+# ---------------------------------------------------------------------------
+
+
+def test_dropout_marks_expected_fraction():
+    fl = _fl(num_clients=4000, fleet="homogeneous",
+             faults="dropout", drop_prob=0.3)
+    m = build_fleet(fl, _pop(fl))
+    rf = apply_faults(fl, m, np.arange(4000), 5, np.full(4000, 10))
+    frac = rf.dropped.mean()
+    assert 0.25 < frac < 0.35
+    # dropped set is (seed, client, round)-stateless
+    rf2 = apply_faults(fl, m, np.arange(4000), 5, np.full(4000, 10))
+    np.testing.assert_array_equal(rf.dropped, rf2.dropped)
+
+
+def test_straggler_multiplies_wall_times():
+    fl = _fl(num_clients=2000, fleet="homogeneous",
+             faults="straggler", straggler_prob=0.5, straggler_factor=8.0)
+    m = build_fleet(fl, _pop(fl))
+    base = m.wall_time(np.arange(2000), np.full(2000, 10))
+    rf = apply_faults(fl, m, np.arange(2000), 0, np.full(2000, 10))
+    hit = rf.wall > base * 4.0
+    assert 0.4 < hit.mean() < 0.6
+    np.testing.assert_allclose(rf.wall[hit], base[hit] * 8.0)
+    np.testing.assert_allclose(rf.wall[~hit], base[~hit])
+
+
+def test_abort_caps_steps_and_drops_unreachable():
+    fl = _fl(fleet="tiered", fleet_tiers=4, tier_spread=16.0,
+             tier_latency=8.0, faults="abort", round_deadline=10.0)
+    m = build_fleet(fl, _pop(fl))
+    ids = np.arange(_pop(fl).num_clients)
+    rf = apply_faults(fl, m, ids, 0, np.full(len(ids), 100))
+    caps = m.deadline_caps(10.0)
+    np.testing.assert_array_equal(rf.dropped, caps < 1)
+    assert (rf.wall <= 10.0).all()
+    np.testing.assert_array_equal(rf.steps_cap, np.maximum(caps, 1))
+
+
+def test_validate_fleet_config_rejects_bad_knobs():
+    for kw, msg in [
+        (dict(fleet="nope"), "unknown fleet"),
+        (dict(faults="dropout", drop_prob=0.0), "drop_prob"),
+        (dict(faults="abort"), "round_deadline"),
+        (dict(server_mode="buffered", buffer_size=8, cohort_size=4),
+         "cannot exceed"),
+        (dict(server_mode="buffered", buffer_size=2, cohort_size=16,
+              num_clients=16), "cohort_size [+] buffer_size - 1"),
+        (dict(server_mode="buffered", buffer_size=2, algorithm="fedavg_min"),
+         "equalized"),
+    ]:
+        with pytest.raises(ValueError, match=msg):
+            validate_fleet_config(_fl(**kw))
+
+
+# ---------------------------------------------------------------------------
+# virtual clock (property tests)
+# ---------------------------------------------------------------------------
+
+
+def _schedule(num_clients=24, cohort_size=8, buffer_size=4, fleet="zipf_latency",
+              faults="", seed=3, **kw):
+    fl = _fl(num_clients=num_clients, cohort_size=cohort_size,
+             buffer_size=buffer_size, server_mode="buffered", fleet=fleet,
+             faults=faults, seed=seed, **kw)
+    pop = _pop(fl)
+    return fl, BufferedSchedule(fl, pop, build_fleet(fl, pop),
+                                probs=np.full(num_clients, cohort_size / num_clients),
+                                steps_fn=lambda cid, rnd: 5 + (cid % 3))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000), buffer_size=st.integers(1, 8),
+       drop=st.booleans())
+def test_clock_event_times_monotone(seed, buffer_size, drop):
+    fl, sched = _schedule(buffer_size=buffer_size, seed=seed,
+                          faults="dropout" if drop else "",
+                          drop_prob=0.25 if drop else 0.0)
+    sched.tick(6)
+    times = [t for t, *_ in sched.events]
+    assert all(a <= b for a, b in zip(times, times[1:]))
+    clocks = [sched.tick(t).clock for t in range(6)]
+    assert all(a <= b for a, b in zip(clocks, clocks[1:]))
+    durations = [sched.tick(t).duration for t in range(6)]
+    assert all(d >= 0 for d in durations)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000), drop=st.booleans())
+def test_clock_every_event_arrives_or_drops(seed, drop):
+    fl, sched = _schedule(seed=seed, faults="dropout" if drop else "",
+                          drop_prob=0.3 if drop else 0.0)
+    T = 5
+    ticks = [sched.tick(t) for t in range(T)]
+    # each tick aggregates exactly buffer_size arrivals...
+    for tk in ticks:
+        assert len(tk.ids) == fl.buffer_size
+        assert (tk.staleness >= 0).all()
+        assert len(set(tk.ids.tolist())) == len(tk.ids)   # distinct clients
+    # ...and every event the clock processed is accounted as one or the other
+    n_events = sum(len(t.ids) + len(t.dropped_ids) for t in ticks)
+    kinds = [k for _, k, *_ in sched.events[:n_events]]
+    assert kinds.count("arrive") == T * fl.buffer_size
+    assert kinds.count("drop") == sum(len(t.dropped_ids) for t in ticks)
+    # concurrency invariant: every pop redispatches, so in-flight stays M
+    assert len(sched._in_flight) == fl.cohort_size
+    assert sched.dispatched == fl.cohort_size + n_events
+    if not drop:
+        assert all(len(t.dropped_ids) == 0 for t in ticks)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_clock_replay_is_deterministic(seed):
+    _, a = _schedule(seed=seed, faults="dropout", drop_prob=0.2)
+    _, b = _schedule(seed=seed, faults="dropout", drop_prob=0.2)
+    # random re-access order must replay identical outcomes
+    ta, tb = a.tick(4), b.tick(4)
+    for t in (3, 0, 4):
+        ta, tb = a.tick(t), b.tick(t)
+        np.testing.assert_array_equal(ta.ids, tb.ids)
+        np.testing.assert_array_equal(ta.staleness, tb.staleness)
+        np.testing.assert_allclose(ta.arrive, tb.arrive)
+        assert ta.clock == tb.clock
+
+
+# ---------------------------------------------------------------------------
+# staleness weighting / buffered aggregation coefficients
+# ---------------------------------------------------------------------------
+
+
+def _meta(staleness, valid=None):
+    C = len(staleness)
+    v = np.ones(C) if valid is None else np.asarray(valid, float)
+    return ClientMeta(
+        weight=np.full(C, 1.0 / C), prob=np.full(C, 0.5),
+        num_samples=np.full(C, 4.0), epochs=np.full(C, 2.0),
+        num_steps=np.full(C, 3.0), num_steps_planned=np.full(C, 3.0),
+        valid=v, client_id=np.arange(C),
+        staleness=np.asarray(staleness, float),
+        arrive_time=np.zeros(C), dropped=np.zeros(C),
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(power=st.floats(0.0, 3.0),
+       stal=st.lists(st.floats(0.0, 50.0), min_size=1, max_size=8))
+def test_staleness_weights_contract(power, stal):
+    meta = _meta(stal)
+    w_const = staleness_weights(_fl(staleness="constant"), meta)
+    np.testing.assert_array_equal(np.asarray(w_const), np.ones(len(stal)))
+    w_poly = np.asarray(staleness_weights(
+        _fl(staleness="poly", staleness_power=power), meta))
+    assert ((w_poly > 0) & (w_poly <= 1.0)).all()
+    np.testing.assert_allclose(w_poly, (1.0 + np.asarray(stal)) ** -power,
+                               rtol=1e-5)
+    # tau = 0 is weight 1 exactly (the sync degenerate value)
+    np.testing.assert_allclose(
+        np.asarray(staleness_weights(
+            _fl(staleness="poly", staleness_power=power), _meta([0.0] * 3))),
+        np.ones(3))
+
+
+def test_staleness_weights_default_for_fleetless_meta():
+    meta = _meta([5.0, 1.0])._replace(staleness=None)
+    w = np.asarray(staleness_weights(_fl(staleness="poly"), meta))
+    np.testing.assert_array_equal(w, np.ones(2))
+
+
+def test_buffered_agg_coeffs_are_staleness_discounted():
+    from repro.core.algorithms import agg_coeff
+    from repro.fed.losses import make_quadratic_loss
+    from repro.fed.strategy import bind_strategy, strategy_for
+
+    fl = _fl(num_clients=16, cohort_size=4, server_mode="buffered",
+             buffer_size=4, fleet="zipf_latency", algorithm="fedshuffle",
+             staleness="poly", staleness_power=0.5)
+    strat = bind_strategy(strategy_for(fl), fl, make_quadratic_loss(3),
+                          num_clients=fl.num_clients)
+    meta = _meta([0.0, 2.0, 5.0, 1.0])
+    got = np.asarray(strat.agg_coeffs(meta))
+    base = np.asarray(agg_coeff(strat.gen, meta, num_clients=fl.num_clients,
+                                cohort_size=fl.buffer_size))
+    w = np.asarray(staleness_weights(fl, meta))
+    np.testing.assert_allclose(got, base * w, rtol=1e-6)
+    assert got[0] == pytest.approx(base[0])          # tau=0: undiscounted

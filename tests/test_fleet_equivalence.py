@@ -1,0 +1,235 @@
+"""Fleet-plane equivalence.
+
+* ``server_mode='sync'`` + ``fleet='homogeneous'`` + no faults is the frozen
+  bitwise contract: the round must reproduce the pre-fleet seed math EXACTLY
+  — ServerState and metrics, with no fleet keys leaking into the metric tree
+  — across presets x cohort modes x {padded, bucketed}.
+* Active fleet configurations (sync faults, buffered-async) hold the layout
+  contract instead: padded == bucketed and legacy host path == cohort engine
+  (prefetch ON) bitwise, staleness-counter banks included — fleet draws and
+  the virtual-clock schedule are (seed, client, round)-stateless, so where a
+  round is produced cannot matter.
+
+The per-push CI shard runs a reduced preset grid; the nightly workflow sets
+``FEDSHUFFLE_FULL_GRID=1`` to sweep every registered preset.
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.core.algorithms import PRESETS
+from repro.data.federated import FederatedPipeline, Population
+from repro.data.tasks import DuplicatedQuadraticTask
+from repro.fed.cohort import CohortEngine
+from repro.fed.losses import make_quadratic_loss
+from repro.fed.rounds import as_device_batch, build_round_step, jit_round_step
+from repro.fed.strategy import bind_strategy, strategy_for
+
+from test_strategy_equivalence import (_seed_build_round_step,
+                                       _seed_init_server)
+
+TASK = DuplicatedQuadraticTask(copies=(1, 2, 3))
+LOSS = make_quadratic_loss(3)
+N_ROUNDS = 3
+P0 = {"x": jnp.array([0.3, -0.1, 0.2], jnp.float32)}
+
+GRID_PRESETS = (sorted(PRESETS) if os.environ.get("FEDSHUFFLE_FULL_GRID")
+                else ["fedshuffle", "fednova", "fedavg_min"])
+
+# a sync fleet configuration exercising every built-in fault scenario
+SYNC_FLEET = dict(fleet="tiered", fleet_tiers=3, tier_spread=4.0,
+                  tier_latency=1.0, faults="dropout,straggler,abort",
+                  drop_prob=0.25, straggler_prob=0.3, straggler_factor=4.0,
+                  round_deadline=12.0)
+BUFFERED = dict(fleet="zipf_latency", server_mode="buffered", buffer_size=2,
+                staleness="poly", staleness_power=0.5,
+                faults="dropout", drop_prob=0.2)
+
+
+def _fl(preset="fedshuffle", mode="vmapped", **kw):
+    return FLConfig(num_clients=3, cohort_size=2, sampling="uniform", epochs=2,
+                    local_batch=1, algorithm=preset, local_lr=0.05,
+                    server_lr=0.8, mvr_a=0.2, cohort_mode=mode,
+                    drop_last_steps=1, seed=11, buckets=2, **kw)
+
+
+def _assert_tree_equal(a, b, what):
+    assert jax.tree.structure(a) == jax.tree.structure(b), what
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y), err_msg=what)
+
+
+def _run_legacy(fl, rounds=N_ROUNDS):
+    pipe = FederatedPipeline(TASK, Population.build(fl, sizes=TASK.sizes()), fl)
+    strat = bind_strategy(strategy_for(fl), fl, LOSS, num_clients=fl.num_clients)
+    step = build_round_step(LOSS, strat, fl, num_clients=fl.num_clients)
+    state = strat.init(P0)
+    for r in range(rounds):
+        state, mets = step(state, as_device_batch(pipe.round_batch(r)))
+    return state, mets
+
+
+def _run_engine(fl, rounds=N_ROUNDS, prefetch=2):
+    pop = Population.build(fl, sizes=TASK.sizes())
+    eng = CohortEngine.build(TASK, pop, fl)
+    strat = bind_strategy(strategy_for(fl), fl, LOSS, num_clients=fl.num_clients)
+    step = build_round_step(LOSS, strat, fl, num_clients=fl.num_clients,
+                            plane=eng.plane)
+    state = strat.init(P0)
+    with eng.round_plans(rounds, prefetch=prefetch) as it:
+        for r, plan in it:
+            state, mets = step(state, plan)
+    return state, mets
+
+
+@pytest.mark.parametrize("mode", ["vmapped", "sequential"])
+@pytest.mark.parametrize("exec_mode", ["padded", "bucketed"])
+def test_sync_homogeneous_matches_seed_bitwise(mode, exec_mode):
+    """The fleet-plane-off default vs the frozen pre-fleet seed: same
+    ServerState, same metric tree (no fleet keys leak), every grid preset."""
+    for preset in GRID_PRESETS:
+        fl = _fl(preset, mode, exec_mode=exec_mode)
+        assert fl.fleet == "homogeneous" and fl.server_mode == "sync"
+        fl_seed = dataclasses.replace(fl, exec_mode="padded")
+        pipe = FederatedPipeline(
+            TASK, Population.build(fl_seed, sizes=TASK.sizes()), fl_seed)
+        seed_step = _seed_build_round_step(LOSS, fl_seed,
+                                           num_clients=fl.num_clients)
+        seed_state = _seed_init_server(fl_seed, P0)
+        for r in range(N_ROUNDS):
+            seed_state, seed_mets = seed_step(
+                seed_state, as_device_batch(pipe.round_batch(r)))
+        state, mets = _run_legacy(fl)
+        tag = f"{preset}/{mode}/{exec_mode}"
+        assert set(mets) == {"local_loss", "delta_norm", "cohort"}, tag
+        _assert_tree_equal(seed_state.params, state.params, f"{tag}: params")
+        _assert_tree_equal(seed_state.opt, state.opt, f"{tag}: opt")
+        _assert_tree_equal(seed_mets, mets, f"{tag}: metrics")
+        assert state.clients is None, tag
+
+
+@pytest.mark.parametrize("mode", ["vmapped", "sequential"])
+def test_sync_fleet_padded_matches_bucketed_bitwise(mode):
+    """Fault cuts land in the host index plan as mask prefixes, so the
+    bucketed layout must reproduce the padded faulty rounds bitwise."""
+    for preset in GRID_PRESETS:
+        sp, mp = _run_legacy(_fl(preset, mode, exec_mode="padded",
+                                 **SYNC_FLEET))
+        sb, mb = _run_legacy(_fl(preset, mode, exec_mode="bucketed",
+                                 **SYNC_FLEET))
+        tag = f"sync-fleet/{preset}/{mode}"
+        _assert_tree_equal(sp.params, sb.params, f"{tag}: params")
+        _assert_tree_equal(sp.opt, sb.opt, f"{tag}: opt")
+        _assert_tree_equal(mp, mb, f"{tag}: metrics")
+
+
+@pytest.mark.parametrize("mode", ["vmapped", "sequential"])
+@pytest.mark.parametrize("exec_mode", ["padded", "bucketed"])
+def test_sync_fleet_engine_matches_legacy_bitwise(mode, exec_mode):
+    """Fault draws are (seed, client, round)-stateless, so the cohort engine
+    (prefetch thread ON) must realize the identical faulty trajectory."""
+    fl = _fl("fedshuffle", mode, exec_mode=exec_mode, engine="cohort",
+             **SYNC_FLEET)
+    ls, lm = _run_legacy(fl)
+    es, em = _run_engine(fl)
+    tag = f"sync-fleet-engine/{mode}/{exec_mode}"
+    _assert_tree_equal(ls.params, es.params, f"{tag}: params")
+    _assert_tree_equal(ls.opt, es.opt, f"{tag}: opt")
+    _assert_tree_equal(lm, em, f"{tag}: metrics")
+
+
+@pytest.mark.parametrize("mode", ["vmapped", "sequential"])
+def test_buffered_padded_matches_bucketed_bitwise(mode):
+    sp, mp = _run_legacy(_fl("fedshuffle", mode, exec_mode="padded",
+                             **BUFFERED))
+    sb, mb = _run_legacy(_fl("fedshuffle", mode, exec_mode="bucketed",
+                             **BUFFERED))
+    tag = f"buffered/{mode}"
+    _assert_tree_equal(sp.params, sb.params, f"{tag}: params")
+    _assert_tree_equal(sp.opt, sb.opt, f"{tag}: opt")
+    _assert_tree_equal(mp, mb, f"{tag}: metrics")
+    _assert_tree_equal(sp.clients, sb.clients, f"{tag}: fleet bank")
+
+
+@pytest.mark.parametrize("mode", ["vmapped", "sequential"])
+def test_buffered_engine_matches_legacy_bitwise(mode):
+    """The virtual-clock schedule is lazily simulated per pipeline but fully
+    deterministic in (fl, population) — the engine's independently simulated
+    schedule must commit the identical buffered trajectory."""
+    fl = _fl("fedshuffle", mode, engine="cohort", **BUFFERED)
+    ls, lm = _run_legacy(fl)
+    es, em = _run_engine(fl)
+    tag = f"buffered-engine/{mode}"
+    _assert_tree_equal(ls.params, es.params, f"{tag}: params")
+    _assert_tree_equal(ls.opt, es.opt, f"{tag}: opt")
+    _assert_tree_equal(lm, em, f"{tag}: metrics")
+    _assert_tree_equal(ls.clients, es.clients, f"{tag}: fleet bank")
+
+
+def test_buffered_merged_bank_with_stateful_chain_and_ef_codec():
+    """scaffold (client chain) + topk EF (codec) + the buffered staleness
+    counters share the [N+1, ...] bank under three reserved keys — and the
+    merged bank stays bitwise-consistent across layouts."""
+    fl = _fl("fedavg", "vmapped", server_opt="scaffold", uplink="topk",
+             uplink_frac=0.5, **BUFFERED)
+    sp, _ = _run_legacy(dataclasses.replace(fl, exec_mode="padded"))
+    sb, _ = _run_legacy(dataclasses.replace(fl, exec_mode="bucketed"))
+    assert set(sp.clients) == {"scaffold", "uplink", "fleet"}
+    _assert_tree_equal(sp.clients, sb.clients, "buffered merged bank")
+    # the staleness counters moved for aggregated clients only
+    arrivals = np.asarray(sp.clients["fleet"]["arrivals"])
+    assert arrivals.sum() == N_ROUNDS * fl.buffer_size
+    assert arrivals[-1] == 0.0                       # scratch row untouched
+
+
+def test_buffered_metrics_surface():
+    _, mets = _run_legacy(_fl("fedshuffle", "vmapped", **BUFFERED))
+    for key in ("round_virtual_time", "arrived_clients", "dropped_clients",
+                "mean_staleness"):
+        assert key in mets, key
+    assert float(mets["arrived_clients"]) == 2.0     # == buffer_size
+    assert float(mets["round_virtual_time"]) > 0.0
+    assert float(mets["mean_staleness"]) >= 0.0
+
+
+def test_sync_fleet_metrics_surface_and_degenerate_staleness():
+    _, mets = _run_legacy(_fl("fedshuffle", "vmapped", **SYNC_FLEET))
+    assert float(mets["mean_staleness"]) == 0.0      # sync degenerate value
+    assert float(mets["round_virtual_time"]) >= 0.0
+    assert (float(mets["arrived_clients"])
+            + float(mets["dropped_clients"])) <= 2.0 + 1e-6
+
+
+def test_single_compilation_buffered():
+    """Rotating buffered cohorts, varying staleness and per-round drop counts
+    must reuse ONE compiled executable (all meta shapes are static)."""
+    fl = _fl("fedshuffle", "vmapped", engine="cohort",
+             rr_backend="device_ref", **BUFFERED)
+    pop = Population.build(fl, sizes=TASK.sizes())
+    eng = CohortEngine.build(TASK, pop, fl)
+    strat = bind_strategy(strategy_for(fl), fl, LOSS, num_clients=fl.num_clients)
+    step = jit_round_step(build_round_step(LOSS, strat, fl,
+                                           num_clients=fl.num_clients,
+                                           plane=eng.plane), donate=False)
+    state = strat.init(P0)
+    for r in range(4):
+        state, _ = step(state, eng.device_plan(r))
+    assert step._cache_size() == 1
+
+
+def test_train_loop_accumulates_virtual_time():
+    from repro.fed.train_loop import train
+
+    fl = _fl("fedshuffle", "vmapped", **BUFFERED)
+    pipe = FederatedPipeline(TASK, Population.build(fl, sizes=TASK.sizes()), fl)
+    res = train(LOSS, P0, pipe, fl, N_ROUNDS, log_every=0)
+    rows = res.metrics.rows
+    vt = [r["virtual_time"] for r in rows]
+    per_round = [r["round_virtual_time"] for r in rows]
+    np.testing.assert_allclose(vt, np.cumsum(per_round), rtol=1e-6)
+    assert all(b >= a for a, b in zip(vt, vt[1:]))
