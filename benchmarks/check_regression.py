@@ -15,6 +15,8 @@ box), so the gate checks the *ratio* metrics each scenario was built around:
                hard >= 4x acceptance floor) and codec / identity throughput
 * fleet      — buffered-async / sync virtual-time round-throughput under
                zipf device latency (also held to the hard >= 1.5x floor)
+* obs        — telemetry-arm / off throughput retention (full
+               instrumentation also held to the hard >= 0.9 floor)
 
 A quick-run ratio below ``tolerance * baseline`` (default 0.5 — generous,
 sized for runner jitter, not for architectural regressions: an O(N) scatter
@@ -50,11 +52,15 @@ SCENARIOS: dict[str, tuple[str, tuple[str, ...]]] = {
               "qsgd_vs_identity", "topk_vs_identity", "randk_vs_identity")),
     "fleet": ("BENCH_fleet.json",
               ("buffered_vs_sync_vtime", "buffered_vs_sync_vtime_per_update")),
+    "obs": ("BENCH_obs.json",
+            ("metrics_vs_off", "trace_vs_off", "instrumented_vs_off")),
 }
 
 # acceptance floors that hold regardless of the baseline (the committed bar)
 HARD_FLOORS = {"ratio_qsgd": 4.0, "ratio_topk": 4.0, "ratio_randk": 4.0,
-               "buffered_vs_sync_vtime": 1.5}
+               "buffered_vs_sync_vtime": 1.5,
+               # full instrumentation may cost at most 10% round throughput
+               "instrumented_vs_off": 0.9}
 
 
 def check_scenario(name: str, tolerance: float) -> list[str]:

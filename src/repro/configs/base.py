@@ -240,6 +240,14 @@ UplinkBackend = Literal["ref", "pallas"]
 #                tick, late updates discounted by the staleness weighting
 ServerMode = Literal["sync", "buffered"]
 Staleness = Literal["constant", "poly"]
+# Observability plane (repro.obs).  "off" (the default) is the frozen
+# contract: no new metric keys, bitwise-identical rounds.  "metrics" makes
+# the jitted round emit fixed-shape distribution summaries (hist_* keys:
+# per-client step counts, update norms, staleness, uplink bytes) and the
+# train loop route them into a metric registry; "trace" enables only the
+# host span instrumentation (spans still no-op until a tracer is installed
+# via obs.trace.capture); "full" = both.
+Telemetry = Literal["off", "metrics", "trace", "full"]
 
 
 @dataclass(frozen=True)
@@ -305,6 +313,11 @@ class FLConfig:
     buffer_size: int = 16          # buffered: aggregate first K arrivals/tick
     staleness: Staleness = "poly"  # buffered staleness discount kind
     staleness_power: float = 0.5   # poly: weight = (1 + tau) ** -staleness_power
+    # observability plane (span tracing + metric registry + in-jit
+    # histograms; see the Telemetry note above and repro.obs) — "off" keeps
+    # every existing configuration bitwise-frozen
+    telemetry: Telemetry = "off"
+    telemetry_bins: int = 16       # bins per in-jit histogram (static shapes)
     # system heterogeneity (Fig. 4): every client is cut short by this many
     # local steps (planned vs actual); the "gen" hybrid algorithm corrects it
     drop_last_steps: int = 0

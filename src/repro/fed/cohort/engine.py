@@ -32,6 +32,7 @@ from typing import Any
 
 from ...configs.base import FLConfig
 from ...data.federated import FederatedPipeline, IndexPlan, Population
+from ...obs import trace
 from .plan import as_device_plan
 from .plane import DevicePlane, build_plane
 from .prefetch import RoundPrefetcher
@@ -123,7 +124,12 @@ class CohortEngine:
         return self.pipeline.index_plan(rnd, with_idx=False)
 
     def device_plan(self, rnd: int) -> IndexPlan:
-        return as_device_plan(self.index_plan(rnd))
+        # two spans: host-side cohort sampling / index assembly vs the H2D
+        # commit — no-ops unless an obs tracer is active
+        with trace.span("plan/assemble", round=rnd):
+            plan = self.index_plan(rnd)
+        with trace.span("plan/h2d_commit", round=rnd):
+            return as_device_plan(plan)
 
     @contextmanager
     def round_plans(self, rounds: int, *, prefetch: int | None = None, start: int = 0):

@@ -23,6 +23,8 @@ import queue
 import threading
 from typing import Any, Callable, Iterator
 
+from ...obs import trace
+
 _DONE = object()
 
 
@@ -46,13 +48,20 @@ class RoundPrefetcher:
     def _produce(self) -> None:
         try:
             for r in range(self._start, self._start + self._rounds):
-                plan = self._make_plan(r)
-                while not self._stop.is_set():
-                    try:
-                        self._q.put((r, plan), timeout=0.1)
-                        break
-                    except queue.Full:
-                        continue
+                # spans land on this producer thread's own trace track (the
+                # tracer records thread ids), so Perfetto shows plan builds
+                # overlapping the main thread's step dispatch — and
+                # "backpressure" shows when the producer outruns the consumer
+                with trace.span("prefetch/plan_build", round=r):
+                    plan = self._make_plan(r)
+                with trace.span("prefetch/backpressure", round=r):
+                    while not self._stop.is_set():
+                        try:
+                            self._q.put((r, plan), timeout=0.1)
+                            break
+                        except queue.Full:
+                            continue
+                trace.counter("prefetch/queue_depth", depth=self._q.qsize())
                 if self._stop.is_set():
                     return
         except BaseException as e:  # noqa: BLE001 — surfaced to the consumer

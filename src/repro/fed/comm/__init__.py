@@ -2,9 +2,11 @@
 from .codecs import (CODECS, UPLINK_STATE_KEY, Codec, build_codec, dense_bits,
                      make_identity, make_qsgd, make_randk, make_topk_raw,
                      register_codec, round_keys, uplink_apply,
-                     uplink_wire_bits, with_error_feedback)
+                     uplink_mbytes_per_slot, uplink_wire_bits,
+                     with_error_feedback)
 
 __all__ = ["CODECS", "UPLINK_STATE_KEY", "Codec", "build_codec", "dense_bits",
            "make_identity", "make_qsgd", "make_randk", "make_topk_raw",
-           "register_codec", "round_keys", "uplink_apply", "uplink_wire_bits",
+           "register_codec", "round_keys", "uplink_apply",
+           "uplink_mbytes_per_slot", "uplink_wire_bits",
            "with_error_feedback"]

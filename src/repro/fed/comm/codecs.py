@@ -160,6 +160,17 @@ def dense_bits(params) -> float:
                      for leaf in jax.tree.leaves(params)))
 
 
+def uplink_mbytes_per_slot(codec: Codec, params, valid) -> jnp.ndarray:
+    """Per-slot megabytes on the wire this round ([C] fp32).
+
+    Today every arriving client pays the codec's static params-shaped cost
+    (invalid padding slots pay 0), so this is ``valid * const`` — but it is
+    the slot-order array the telemetry histograms bin, and the one place a
+    future variable-rate codec changes to make per-client cost honest."""
+    bits = uplink_wire_bits(codec, params)
+    return jnp.asarray(valid, jnp.float32) * jnp.float32(bits / 8e6)
+
+
 # ---------------------------------------------------------------------------
 # Built-in codec factories: make(fl) -> Codec
 # ---------------------------------------------------------------------------

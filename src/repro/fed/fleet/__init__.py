@@ -16,7 +16,8 @@ adds no fleet math, the round step adds no metric keys — bitwise-frozen.
 from __future__ import annotations
 
 from ...configs.base import FLConfig
-from .buffered import FLEET_STATE_KEY, fleet_client_state, staleness_weights
+from .buffered import (FLEET_STATE_KEY, fleet_client_state, slot_staleness,
+                       staleness_weights)
 from .clock import BufferedSchedule, TickOutcome
 from .faults import (FAULTS, RoundFaults, apply_faults, register_fault,
                      validate_faults)

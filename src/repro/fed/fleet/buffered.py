@@ -35,14 +35,24 @@ def fleet_client_state() -> dict:
             "stale_sum": jnp.zeros((), jnp.float32)}
 
 
+def slot_staleness(meta) -> jnp.ndarray:
+    """The cohort's per-slot staleness as a [C] fp32 array.
+
+    The single definition of the "no fleet fields => tau = 0" rule —
+    hand-built test metas and sync-mode plans (``meta.staleness`` None or
+    zeros) read as fresh everywhere staleness is consumed (the weighting
+    below, the round driver's bank bookkeeping, the telemetry histograms)."""
+    stal = getattr(meta, "staleness", None)
+    if stal is None:
+        return jnp.zeros_like(jnp.asarray(meta.valid, jnp.float32))
+    return jnp.asarray(stal, jnp.float32)
+
+
 def staleness_weights(fl: FLConfig, meta) -> jnp.ndarray:
     """Per-slot staleness discounts ([C] fp32, 1.0 at tau=0).
 
     Metas without fleet fields (hand-built test metas) weigh as tau=0."""
-    stal = getattr(meta, "staleness", None)
-    if stal is None:
-        stal = jnp.zeros_like(jnp.asarray(meta.valid, jnp.float32))
-    stal = jnp.asarray(stal, jnp.float32)
+    stal = slot_staleness(meta)
     if fl.staleness == "constant":
         return jnp.ones_like(stal)
     return (1.0 + stal) ** jnp.float32(-fl.staleness_power)

@@ -51,11 +51,13 @@ import jax.numpy as jnp
 
 from ..configs.base import FLConfig
 from ..data.federated import Bucket, BucketedBatch, RoundBatch
+from ..obs import hist as obs_hist
+from ..obs import metrics_enabled
 from ..utils.pytree import tree_zeros_like
 from .bucketing import scan_clients, vmap_clients
 from .comm import (UPLINK_STATE_KEY, dense_bits, round_keys, uplink_apply,
-                   uplink_wire_bits)
-from .fleet import FLEET_STATE_KEY, fleet_active
+                   uplink_mbytes_per_slot, uplink_wire_bits)
+from .fleet import FLEET_STATE_KEY, fleet_active, slot_staleness
 from .server import ServerState
 from .strategy import (BoundStrategy, CohortState, FedStrategy, RoundCtx,
                        bind_strategy)
@@ -92,6 +94,15 @@ def build_round_step(loss_fn: Callable,
     codec = strat.codec
     apply_up = uplink_apply(codec) if codec is not None else None
     has_ef = codec is not None and codec.client_init is not None
+    # in-jit telemetry histograms (fl.telemetry): fixed-shape summaries over
+    # the slot-order [C] arrays every path already stages, with static
+    # config-derived edges (obs.hist cardinality contract).  "off" (the
+    # default) adds no ops and no metric keys — bitwise-frozen.
+    tele_hist = metrics_enabled(fl.telemetry)
+    hist_edges = obs_hist.round_hist_edges(
+        fl, with_staleness=fleet_active(fl),
+        with_uplink=codec is not None and codec.name != "identity",
+    ) if tele_hist else {}
 
     def round_step(state: ServerState, batch, lr_mult=1.0):
         if not isinstance(batch, (RoundBatch, BucketedBatch)):
@@ -151,6 +162,7 @@ def build_round_step(loss_fn: Callable,
                 new_cs = {**new_cs, UPLINK_STATE_KEY: ef2}
             return dhat, new_cs
 
+        slot_sq = None  # [C] squared update norms, only under telemetry
         if fl.cohort_mode == "vmapped":
             if bucketed:
                 # per-bucket [C_b, K_b] scans, reassembled to [C] slot order
@@ -161,6 +173,8 @@ def build_round_step(loss_fn: Callable,
                 deltas, losses, new_cs = jax.vmap(client)(
                     batch.data, batch.step_mask, plan.eta, cstate0)
             deltas, new_cs = uplink_cohort(deltas, new_cs)
+            if tele_hist:
+                slot_sq = obs_hist.slot_sqnorms(deltas)
             delta_agg = strat.aggregate(deltas, meta)
         else:  # sequential: the scan accumulates coeff_i * Delta_i as it goes,
             # so the strategy contributes through agg_coeffs rather than the
@@ -200,6 +214,8 @@ def build_round_step(loss_fn: Callable,
 
             if deltas is not None:
                 deltas, new_cs = uplink_cohort(deltas, new_cs)
+                if tele_hist:
+                    slot_sq = obs_hist.slot_sqnorms(deltas)
 
                 def accum(acc, xs):
                     delta, coeff_i = xs
@@ -210,12 +226,21 @@ def build_round_step(loss_fn: Callable,
                 def body(acc, xs):
                     data_i, mask_i, eta_i, coeff_i, cs_i = xs
                     delta, loss, cs_new = client(data_i, mask_i, eta_i, cs_i)
-                    return add_weighted(acc, delta, coeff_i), (loss, cs_new)
+                    ys = (loss, cs_new)
+                    if tele_hist:
+                        # telemetry extends the scan ys; the off path's body
+                        # is literally the pre-telemetry one
+                        ys = ys + (obs_hist.tree_sqnorm(delta),)
+                    return add_weighted(acc, delta, coeff_i), ys
 
-                delta_agg, (losses, new_cs) = jax.lax.scan(
+                delta_agg, ys = jax.lax.scan(
                     body, acc0,
                     (batch.data, batch.step_mask, plan.eta, coeff, cstate0)
                 )
+                if tele_hist:
+                    losses, new_cs, slot_sq = ys
+                else:
+                    losses, new_cs = ys
             delta_agg = jax.tree.map(lambda a, p: a.astype(p.dtype), delta_agg, state.params)
 
         cstate = None
@@ -225,8 +250,7 @@ def build_round_step(loss_fn: Callable,
             # staleness counters BEFORE the masked commit below, so invalid
             # padding slots (and dropped clients) revert to what they read
             fb = new_cs[FLEET_STATE_KEY]
-            stal = (jnp.asarray(meta.staleness, jnp.float32)
-                    if meta.staleness is not None else jnp.zeros_like(meta.valid))
+            stal = slot_staleness(meta)
             new_cs = {**new_cs, FLEET_STATE_KEY: {
                 "arrivals": fb["arrivals"] + 1.0,
                 "stale_sum": fb["stale_sum"] + stal,
@@ -277,15 +301,35 @@ def build_round_step(loss_fn: Callable,
             # round_virtual_time: sync = slowest surviving client's wall
             # time; buffered = the tick's span (the K-th arrival flushes it).
             z = jnp.zeros_like(meta.valid)
-            stal = z if meta.staleness is None else jnp.asarray(meta.staleness, jnp.float32)
+            stal = slot_staleness(meta)
             arr = z if meta.arrive_time is None else jnp.asarray(meta.arrive_time, jnp.float32)
             drp = z if meta.dropped is None else jnp.asarray(meta.dropped, jnp.float32)
             metrics["round_virtual_time"] = jnp.max(arr * meta.valid)
             metrics["arrived_clients"] = meta.valid.sum()
             metrics["dropped_clients"] = drp.sum()
             metrics["mean_staleness"] = (stal * meta.valid).sum() / valid_sum
+        if tele_hist:
+            # fixed-shape distribution summaries (obs.hist): hist_*-prefixed
+            # [bins] counts — the train loop routes them to registry
+            # Histogram instruments rather than the scalar metric row
+            metrics["hist_steps"] = obs_hist.fixed_histogram(
+                meta.num_steps, hist_edges["hist_steps"], weights=meta.valid)
+            metrics["hist_update_norm"] = obs_hist.fixed_histogram(
+                jnp.sqrt(slot_sq), hist_edges["hist_update_norm"],
+                weights=meta.valid)
+            if "hist_staleness" in hist_edges:
+                metrics["hist_staleness"] = obs_hist.fixed_histogram(
+                    slot_staleness(meta), hist_edges["hist_staleness"],
+                    weights=meta.valid)
+            if "hist_uplink_mbytes" in hist_edges:
+                metrics["hist_uplink_mbytes"] = obs_hist.fixed_histogram(
+                    uplink_mbytes_per_slot(codec, state.params, meta.valid),
+                    hist_edges["hist_uplink_mbytes"], weights=meta.valid)
         return state, metrics
 
+    # the host side (train loop) pre-creates matching registry Histograms
+    # from the same static edge table the jitted emitter closed over
+    round_step.telemetry_hist_edges = hist_edges
     return round_step
 
 

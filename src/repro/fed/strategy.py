@@ -57,6 +57,7 @@ from ..core.algorithms import GenSpec, PRESETS, agg_coeff, lr_scale
 from ..core.local import (ClientChain, build_local_step, chain_client_template,
                           full_local_gradient, resolve_chain)
 from ..data.federated import BucketedBatch
+from ..obs import validate_telemetry_config
 from ..utils.pytree import tree_copy, tree_zeros_like
 from .bucketing import scan_clients, vmap_clients
 from .comm import UPLINK_STATE_KEY, build_codec
@@ -606,6 +607,8 @@ def bind_strategy(strategy: "FedStrategy | BoundStrategy | None", fl: FLConfig,
             f"unknown exec_mode {fl.exec_mode!r}; have ('padded', 'bucketed')")
     if fl.exec_mode == "bucketed" and fl.buckets < 1:
         raise ValueError(f"fl.buckets must be >= 1, got {fl.buckets}")
+    # telemetry knobs validated at bind time like every other plane's
+    validate_telemetry_config(fl)
     if fleet_active(fl):
         # every fleet-plane knob validated here, mirroring the engine block
         # below: unknown fleet/fault names or bad parameters fail loudly at

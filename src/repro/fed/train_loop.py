@@ -2,17 +2,36 @@
 
 Handles: pipeline iteration, LR schedules (constant / cosine / WSD), periodic
 eval on a pooled held-out batch, checkpointing, and metric logging.
+
+Observability (``repro.obs``): every host phase of the loop is wrapped in a
+trace span (``round/plan_wait``, ``round/step_dispatch``,
+``round/metrics_fetch``, ``round/eval``, ``round/checkpoint``,
+``round/log``) — no-ops unless a tracer is active.  When ``fl.telemetry``
+asks for metrics, the jitted round's ``hist_*`` device histogram counts are
+folded into registry :class:`~repro.obs.metrics.Histogram` instruments
+(never into the scalar row), and each row carries ``jax_compiles`` — the
+recompile sentinel's per-round delta, which should be 0 after round 0.
+Passing ``telemetry_dir=`` streams the rows to ``metrics.jsonl``, writes a
+``summary.json`` instrument snapshot, and (when ``fl.telemetry`` requests
+tracing and no tracer is already active) captures ``trace.json`` /
+``events.jsonl`` for the whole run.
 """
 from __future__ import annotations
 
+import os
 import time
+from contextlib import ExitStack
 from dataclasses import dataclass
 from typing import Any, Callable
 
 import jax.numpy as jnp
+import numpy as np
 
 from ..configs.base import FLConfig
 from ..data.federated import FederatedPipeline
+from ..obs import metrics_enabled, sentinels, trace, tracing_requested
+from ..obs.hist import HIST_PREFIX
+from ..obs.metrics import JSONLSink, MetricRegistry
 from ..utils.checkpoint import save_checkpoint
 from ..utils.logging import MetricLogger, log
 from .cohort import CohortEngine
@@ -33,6 +52,7 @@ SCHEDULES: dict[str, Callable[[int, int], float]] = {
 class TrainResult:
     state: ServerState
     metrics: MetricLogger
+    registry: MetricRegistry | None = None
 
 
 def train(
@@ -52,6 +72,7 @@ def train(
     name: str = "run",
     state: ServerState | None = None,
     start_round: int = 0,
+    telemetry_dir: str | None = None,
 ) -> TrainResult:
     """Run rounds ``start_round..rounds`` (checkpoint/resume: pass the
     ``ServerState`` restored by ``utils.checkpoint.load_server_state`` as
@@ -80,10 +101,18 @@ def train(
     # the ServerState argument is donated (in-place params/opt update; no
     # per-round copy of the model) — safe because the loop rebinds ``state``
     # and never touches a previous round's state again
-    step = jit_round_step(build_round_step(loss_fn, strat, fl,
-                                           num_clients=fl.num_clients,
-                                           plane=engine.plane if engine else None))
-    ml = MetricLogger(name=name)
+    raw_step = build_round_step(loss_fn, strat, fl, num_clients=fl.num_clients,
+                                plane=engine.plane if engine else None)
+    step = jit_round_step(raw_step)
+
+    registry = MetricRegistry(name=name)
+    ml = MetricLogger(name=name, registry=registry)
+    tele = metrics_enabled(fl.telemetry)
+    # registry Histograms matching the jitted emitter's static edge table —
+    # each round's device [bins] counts merge into the run accumulators
+    hists = {k: registry.histogram(k, edges)
+             for k, edges in raw_step.telemetry_hist_edges.items()}
+    snt = sentinels.sentinel() if tele else None
     t0 = time.time()
 
     def round_iter():
@@ -94,26 +123,69 @@ def train(
             with engine.round_plans(rounds - start_round, start=start_round) as it:
                 yield from it
 
-    virtual_time = 0.0
-    for r, batch in round_iter():
-        state, mets = step(state, batch, jnp.asarray(sched(r, rounds), jnp.float32))
-        row = {"round": r, "lr_mult": sched(r, rounds),
-               **{k: float(v) for k, v in mets.items()}}
-        if "round_virtual_time" in row:
-            # cumulative virtual clock — the x-axis fleet experiments plot
-            # loss against (only present when the fleet plane is on)
-            virtual_time += row["round_virtual_time"]
-            row["virtual_time"] = virtual_time
-        if eval_fn is not None and (r % eval_every == 0 or r == rounds - 1):
-            row.update({f"eval_{k}": float(v) for k, v in eval_fn(state.params).items()})
-        ml.append(**row)
-        if log_every and (r % log_every == 0 or r == rounds - 1):
-            log(f"[{name}] round {r}/{rounds}", **{k: f"{v:.5f}" if isinstance(v, float) else v
-                                                   for k, v in row.items() if k != "round"})
-        if checkpoint_path and checkpoint_every and (r + 1) % checkpoint_every == 0:
-            save_checkpoint(checkpoint_path, state.params,
+    with ExitStack() as stack:
+        if telemetry_dir is not None:
+            os.makedirs(telemetry_dir, exist_ok=True)
+            registry.add_sink(JSONLSink(os.path.join(telemetry_dir, "metrics.jsonl")))
+            if tracing_requested(fl.telemetry) and trace.active() is None:
+                stack.enter_context(trace.capture(
+                    chrome=os.path.join(telemetry_dir, "trace.json"),
+                    jsonl=os.path.join(telemetry_dir, "events.jsonl"),
+                    name=name))
+        virtual_time = 0.0
+        rit = round_iter()
+        try:
+            while True:
+                with trace.span("round/plan_wait"):
+                    try:
+                        r, batch = next(rit)
+                    except StopIteration:
+                        break
+                compiles0 = snt.count if snt is not None else 0
+                with trace.span("round/step_dispatch", round=r):
+                    state, mets = step(state, batch,
+                                       jnp.asarray(sched(r, rounds), jnp.float32))
+                with trace.span("round/metrics_fetch", round=r):
+                    row = {"round": r, "lr_mult": sched(r, rounds),
+                           **{k: float(v) for k, v in mets.items()
+                              if not k.startswith(HIST_PREFIX)}}
+                    for k, h in hists.items():
+                        if k in mets:
+                            h.merge_counts(np.asarray(mets[k]))
+                if snt is not None:
+                    # per-round XLA compile count: 1 on round 0, then 0 — any
+                    # later nonzero is a recompile (shape/layout leak)
+                    delta = snt.count - compiles0
+                    row["jax_compiles"] = delta
+                    registry.counter("jax_compiles").inc(delta)
+                if "round_virtual_time" in row:
+                    # cumulative virtual clock — the x-axis fleet experiments
+                    # plot loss against (present only with the fleet plane on)
+                    virtual_time += row["round_virtual_time"]
+                    row["virtual_time"] = virtual_time
+                if eval_fn is not None and (r % eval_every == 0 or r == rounds - 1):
+                    with trace.span("round/eval", round=r):
+                        row.update({f"eval_{k}": float(v)
+                                    for k, v in eval_fn(state.params).items()})
+                ml.append(**row)
+                if log_every and (r % log_every == 0 or r == rounds - 1):
+                    with trace.span("round/log", round=r):
+                        log(f"[{name}] round {r}/{rounds}",
+                            **{k: f"{v:.5f}" if isinstance(v, float) else v
+                               for k, v in row.items() if k != "round"})
+                if checkpoint_path and checkpoint_every and (r + 1) % checkpoint_every == 0:
+                    with trace.span("round/checkpoint", round=r):
+                        save_checkpoint(
+                            checkpoint_path, state.params,
                             {"round": r, "elapsed_s": time.time() - t0, "name": name})
+        finally:
+            rit.close()
+            if telemetry_dir is not None:
+                registry.dump_summary(os.path.join(telemetry_dir, "summary.json"))
+                registry.close()
     if checkpoint_path:
-        save_checkpoint(checkpoint_path, state.params,
-                        {"round": rounds - 1, "elapsed_s": time.time() - t0, "name": name})
-    return TrainResult(state=state, metrics=ml)
+        with trace.span("round/checkpoint", round=rounds - 1):
+            save_checkpoint(checkpoint_path, state.params,
+                            {"round": rounds - 1, "elapsed_s": time.time() - t0,
+                             "name": name})
+    return TrainResult(state=state, metrics=ml, registry=registry)

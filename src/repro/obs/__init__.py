@@ -1,0 +1,64 @@
+"""Observability plane: tracing, metric registry, recompile sentinels,
+in-jit distribution summaries.
+
+Four layers, all inert by default (``FLConfig.telemetry = "off"`` keeps
+every pre-existing configuration's ServerState and metric tree
+bitwise-frozen; tracing no-ops until a tracer is installed):
+
+* :mod:`repro.obs.trace`     — span-based host-loop tracing, Chrome
+  ``trace_event`` / JSONL export (open in Perfetto), thread-aware (the
+  prefetch producer reports plan-build spans and queue depth).
+* :mod:`repro.obs.metrics`   — counters / gauges / histograms behind a
+  ``Sink`` protocol (memory / jsonl / csv, extensible via
+  :func:`register_sink`); ``utils.logging.MetricLogger`` is a thin client.
+* :mod:`repro.obs.sentinels` — XLA recompile counting via jax.monitoring +
+  :func:`compile_guard`, the reusable form of the test suites'
+  single-compilation guards.
+* :mod:`repro.obs.hist`      — fixed-shape, jit-safe histograms the round
+  step emits from its slot-order ``[C]`` arrays (step counts, update
+  norms, staleness, uplink bytes).
+
+``fl.telemetry`` selects what runs: ``"metrics"`` adds the in-jit
+histograms + registry accounting, ``"trace"`` only the host spans,
+``"full"`` both.
+"""
+from . import hist, metrics, sentinels, trace
+from .hist import HIST_PREFIX, fixed_histogram, log_edges, pow2_edges
+from .metrics import (SINKS, CSVSink, Histogram, InMemorySink, JSONLSink,
+                      MetricRegistry, build_sink, format_csv, register_sink,
+                      union_keys)
+from .sentinels import RecompileError, cache_size, compile_guard, sentinel
+from .trace import Tracer, capture
+
+TELEMETRY_MODES = ("off", "metrics", "trace", "full")
+
+
+def metrics_enabled(telemetry: str) -> bool:
+    """Whether ``fl.telemetry`` asks for in-jit summaries + registry rows."""
+    return telemetry in ("metrics", "full")
+
+
+def tracing_requested(telemetry: str) -> bool:
+    """Whether ``fl.telemetry`` asks for host span tracing."""
+    return telemetry in ("trace", "full")
+
+
+def validate_telemetry_config(fl) -> None:
+    """Bind-time validation of the telemetry knobs (mirrors the fleet/codec
+    validators: bad values fail at bind, not rounds into a run)."""
+    if fl.telemetry not in TELEMETRY_MODES:
+        raise ValueError(
+            f"unknown telemetry mode {fl.telemetry!r}; have {TELEMETRY_MODES}")
+    if fl.telemetry_bins < 2:
+        raise ValueError(
+            f"fl.telemetry_bins must be >= 2, got {fl.telemetry_bins}")
+
+
+__all__ = [
+    "CSVSink", "HIST_PREFIX", "Histogram", "InMemorySink", "JSONLSink",
+    "MetricRegistry", "RecompileError", "SINKS", "TELEMETRY_MODES", "Tracer",
+    "build_sink", "cache_size", "capture", "compile_guard", "fixed_histogram",
+    "format_csv", "hist", "log_edges", "metrics", "metrics_enabled",
+    "pow2_edges", "register_sink", "sentinel", "sentinels", "trace",
+    "tracing_requested", "union_keys", "validate_telemetry_config",
+]

@@ -1,0 +1,127 @@
+"""Recompile sentinels: count XLA compilations, guard against recompiles.
+
+The repo's perf story leans hard on "one compiled executable per
+configuration" — a shape or dtype leaking into a traced value silently
+recompiles every round and craters throughput without changing results.
+Four test suites independently grew the same ad-hoc guard
+(``step._cache_size() == 1``); this module makes it a first-class primitive:
+
+* :func:`sentinel` — a process-wide :class:`CompileSentinel` hooked into
+  ``jax.monitoring``'s ``/jax/core/compile/backend_compile_duration`` event
+  (fires once per *actual* backend compile, never on cache hits), counting
+  compilations and total compile seconds.  While a tracer is active
+  (``obs.trace``), every observed compile is also emitted as a
+  ``jax/backend_compile`` span, so recompiles are visible in Perfetto
+  exactly where they stall the round timeline.
+* :func:`compile_guard` — a context manager asserting a bounded number of
+  compilations across its body.  Given a jitted function it reads that
+  function's executable-cache growth (exact, per-function); without one it
+  falls back to the process-wide sentinel delta (any jitted function in the
+  block counts).  Exceeding the bound raises :class:`RecompileError` at
+  exit.
+
+    step = jit_round_step(build_round_step(...))
+    with obs.compile_guard(step):          # max_compiles=1
+        for r, plan in plans:
+            state, _ = step(state, plan)   # a recompile here -> loud error
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any
+
+from . import trace as _trace
+
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+
+class CompileSentinel:
+    """Process-wide compile counter fed by the jax.monitoring listener."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.count = 0
+        self.secs = 0.0
+
+    def _observe(self, event: str, duration_secs: float, **kw: Any) -> None:
+        if event != _COMPILE_EVENT:
+            return
+        with self._lock:
+            self.count += 1
+            self.secs += float(duration_secs)
+        tracer = _trace.active()
+        if tracer is not None:
+            # the listener fires at compile end: back-date the span so it
+            # occupies the compile's actual wall-clock window
+            t1 = time.perf_counter_ns()
+            dur = int(float(duration_secs) * 1e9)
+            tracer._add("X", "jax/backend_compile", t1 - dur, dur,
+                        {"secs": float(duration_secs)})
+
+
+_SENTINEL: CompileSentinel | None = None
+_INSTALL_LOCK = threading.Lock()
+
+
+def sentinel() -> CompileSentinel:
+    """The installed process-wide sentinel (registered once, kept forever —
+    the listener is a counter bump, cheap enough to always leave on)."""
+    global _SENTINEL
+    with _INSTALL_LOCK:
+        if _SENTINEL is None:
+            import jax.monitoring
+
+            _SENTINEL = CompileSentinel()
+            jax.monitoring.register_event_duration_secs_listener(
+                _SENTINEL._observe)
+    return _SENTINEL
+
+
+def cache_size(fn) -> int:
+    """Compiled-executable cache entries of a ``jax.jit`` wrapper."""
+    try:
+        return int(fn._cache_size())
+    except AttributeError:
+        raise TypeError(
+            f"{fn!r} has no executable cache — pass the jax.jit wrapper "
+            f"itself (or use compile_guard() without a function for the "
+            f"process-wide sentinel)") from None
+
+
+class RecompileError(AssertionError):
+    """More compilations than the guard allowed (see compile_guard)."""
+
+
+class compile_guard:
+    """Context manager bounding compilations across its body.
+
+    ``fn`` — a ``jax.jit`` wrapper: counts that function's new executables
+    (exact).  ``fn=None`` — counts every backend compile in the process via
+    the sentinel (use when the jitted callable is buried in a helper).
+    ``.compiles`` holds the observed count after exit.  An exception already
+    propagating out of the body takes precedence over the guard's own error.
+    """
+
+    def __init__(self, fn=None, *, max_compiles: int = 1, name: str | None = None):
+        self._fn = fn
+        self.max_compiles = int(max_compiles)
+        self.name = name or (getattr(fn, "__name__", None) if fn is not None
+                             else "process")
+        self.compiles: int | None = None
+
+    def _current(self) -> int:
+        return cache_size(self._fn) if self._fn is not None else sentinel().count
+
+    def __enter__(self) -> "compile_guard":
+        self._base = self._current()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.compiles = self._current() - self._base
+        if exc_type is None and self.compiles > self.max_compiles:
+            raise RecompileError(
+                f"compile_guard({self.name}): {self.compiles} compilations, "
+                f"expected <= {self.max_compiles} — a shape/dtype is leaking "
+                f"into the traced computation (rotating cohorts and advancing "
+                f"rounds must reuse one executable)")

@@ -1,0 +1,210 @@
+"""Telemetry-plane equivalence.
+
+* ``telemetry="off"`` (the default) is the frozen bitwise contract: the
+  round step must reproduce the untelemetered trajectory EXACTLY —
+  ServerState and the metric tree (no ``hist_*`` keys leak) — across
+  presets x cohort modes x {padded, bucketed} layouts, comm codecs and the
+  buffered fleet included.
+* ``telemetry="full"`` holds the *observer* contract instead: histograms
+  ride the metrics dict only — the ServerState trajectory is bitwise the
+  off run's — and the fixed-shape device counts are layout-invariant
+  (padded == bucketed, legacy == engine), because their edges are static
+  config constants and their inputs are the slot-order [C] arrays both
+  layouts already reconstruct.
+
+The per-push CI shard runs a reduced preset grid; the nightly workflow sets
+``FEDSHUFFLE_FULL_GRID=1`` to sweep every registered preset.
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.configs.base import FLConfig
+from repro.core.algorithms import PRESETS
+from repro.data.federated import FederatedPipeline, Population
+from repro.data.tasks import DuplicatedQuadraticTask
+from repro.fed.cohort import CohortEngine
+from repro.fed.losses import make_quadratic_loss
+from repro.fed.rounds import as_device_batch, build_round_step, jit_round_step
+from repro.fed.strategy import bind_strategy, strategy_for
+from repro.obs.hist import HIST_PREFIX
+
+TASK = DuplicatedQuadraticTask(copies=(1, 2, 3))
+LOSS = make_quadratic_loss(3)
+N_ROUNDS = 3
+P0 = {"x": jnp.array([0.3, -0.1, 0.2], jnp.float32)}
+
+GRID_PRESETS = (sorted(PRESETS) if os.environ.get("FEDSHUFFLE_FULL_GRID")
+                else ["fedshuffle", "fednova", "fedavg_min"])
+
+BASE_KEYS = {"local_loss", "delta_norm", "cohort"}
+
+
+def _fl(preset="fedshuffle", mode="vmapped", **kw):
+    kw.setdefault("uplink_chunk", 8)
+    kw.setdefault("uplink_bits", 4)
+    kw.setdefault("uplink_frac", 0.5)
+    return FLConfig(num_clients=3, cohort_size=2, sampling="uniform", epochs=2,
+                    local_batch=1, algorithm=preset, local_lr=0.05,
+                    server_lr=0.8, mvr_a=0.2, cohort_mode=mode,
+                    drop_last_steps=1, seed=11, buckets=2, **kw)
+
+
+def _assert_tree_equal(a, b, what):
+    assert jax.tree.structure(a) == jax.tree.structure(b), what
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y), err_msg=what)
+
+
+def _run_legacy(fl, rounds=N_ROUNDS):
+    pipe = FederatedPipeline(TASK, Population.build(fl, sizes=TASK.sizes()), fl)
+    strat = bind_strategy(strategy_for(fl), fl, LOSS, num_clients=fl.num_clients)
+    step = build_round_step(LOSS, strat, fl, num_clients=fl.num_clients)
+    state = strat.init(P0)
+    for r in range(rounds):
+        state, mets = step(state, as_device_batch(pipe.round_batch(r)))
+    return state, mets
+
+
+def _run_engine(fl, rounds=N_ROUNDS, prefetch=2):
+    pop = Population.build(fl, sizes=TASK.sizes())
+    eng = CohortEngine.build(TASK, pop, fl)
+    strat = bind_strategy(strategy_for(fl), fl, LOSS, num_clients=fl.num_clients)
+    step = build_round_step(LOSS, strat, fl, num_clients=fl.num_clients,
+                            plane=eng.plane)
+    state = strat.init(P0)
+    with eng.round_plans(rounds, prefetch=prefetch) as it:
+        for r, plan in it:
+            state, mets = step(state, plan)
+    return state, mets
+
+
+def _split(mets):
+    hists = {k: v for k, v in mets.items() if k.startswith(HIST_PREFIX)}
+    return {k: v for k, v in mets.items() if k not in hists}, hists
+
+
+@pytest.mark.parametrize("mode", ["vmapped", "sequential"])
+@pytest.mark.parametrize("exec_mode", ["padded", "bucketed"])
+def test_telemetry_off_is_frozen_and_full_is_pure_observer(mode, exec_mode):
+    """off == the pre-telemetry trajectory (keys frozen); full == the same
+    ServerState with only additive hist_* metric keys, for every preset."""
+    for preset in GRID_PRESETS:
+        fl = _fl(preset, mode, exec_mode=exec_mode)
+        assert fl.telemetry == "off"
+        s_off, m_off = _run_legacy(fl)
+        s_full, m_full = _run_legacy(dataclasses.replace(fl, telemetry="full"))
+        tag = f"{preset}/{mode}/{exec_mode}"
+        assert set(m_off) == BASE_KEYS, tag
+        scalars, hists = _split(m_full)
+        assert set(hists) == {"hist_steps", "hist_update_norm"}, tag
+        _assert_tree_equal(s_off.params, s_full.params, f"{tag}: params")
+        _assert_tree_equal(s_off.opt, s_full.opt, f"{tag}: opt")
+        _assert_tree_equal(m_off, scalars, f"{tag}: scalar metrics")
+        for k, h in hists.items():
+            h = np.asarray(h)
+            assert h.shape == (fl.telemetry_bins,), (tag, k)
+            # every valid client is counted exactly once per histogram
+            assert h.sum() == float(m_full["cohort"]), (tag, k)
+
+
+@pytest.mark.parametrize("mode", ["vmapped", "sequential"])
+def test_full_histograms_are_layout_invariant(mode):
+    """Static edges + slot-order inputs: padded, bucketed, and the engine
+    path (prefetch thread on) must report identical device counts."""
+    fl = _fl("fedshuffle", mode, telemetry="full", engine="cohort")
+    _, mp = _run_legacy(dataclasses.replace(fl, exec_mode="padded"))
+    _, mb = _run_legacy(dataclasses.replace(fl, exec_mode="bucketed"))
+    _, me = _run_engine(fl)
+    _, hp = _split(mp)
+    _, hb = _split(mb)
+    _, he = _split(me)
+    _assert_tree_equal(hp, hb, f"{mode}: padded vs bucketed hists")
+    _assert_tree_equal(hp, he, f"{mode}: legacy vs engine hists")
+
+
+@pytest.mark.parametrize("uplink", ["qsgd", "topk"])
+@pytest.mark.parametrize("mode", ["vmapped", "sequential"])
+def test_telemetry_off_frozen_under_compression(uplink, mode):
+    """full vs off under a compressed uplink: same trajectory (EF banks
+    included), and the uplink-bytes histogram appears only under full."""
+    fl = _fl("fedshuffle", mode, uplink=uplink)
+    s_off, m_off = _run_legacy(fl)
+    s_full, m_full = _run_legacy(dataclasses.replace(fl, telemetry="full"))
+    tag = f"{uplink}/{mode}"
+    scalars, hists = _split(m_full)
+    assert set(m_off) == BASE_KEYS | {"uplink_mbytes", "uplink_compression"}, tag
+    assert "hist_uplink_mbytes" in hists, tag
+    _assert_tree_equal(s_off.params, s_full.params, f"{tag}: params")
+    _assert_tree_equal(s_off.opt, s_full.opt, f"{tag}: opt")
+    _assert_tree_equal(m_off, scalars, f"{tag}: scalar metrics")
+    if s_off.clients is not None:
+        _assert_tree_equal(s_off.clients, s_full.clients, f"{tag}: EF bank")
+
+
+def test_telemetry_off_frozen_under_buffered_fleet():
+    """full vs off with the buffered-async fleet: same trajectory and fleet
+    bank; the staleness histogram appears and counts every arrival."""
+    fl = _fl("fedavg", "vmapped", fleet="zipf_latency", server_mode="buffered",
+             buffer_size=2, staleness="poly", staleness_power=0.5)
+    s_off, m_off = _run_engine(fl)
+    s_full, m_full = _run_engine(dataclasses.replace(fl, telemetry="full"))
+    scalars, hists = _split(m_full)
+    assert "hist_staleness" in hists
+    assert np.asarray(hists["hist_staleness"]).sum() == float(m_full["cohort"])
+    _assert_tree_equal(s_off.params, s_full.params, "fleet: params")
+    _assert_tree_equal(s_off.clients, s_full.clients, "fleet: bank")
+    _assert_tree_equal(m_off, scalars, "fleet: scalar metrics")
+
+
+def test_telemetry_bins_knob_changes_shape_only():
+    fl = _fl("fedshuffle", telemetry="metrics", telemetry_bins=5)
+    s5, m5 = _run_legacy(fl)
+    s16, m16 = _run_legacy(dataclasses.replace(fl, telemetry_bins=16))
+    assert np.asarray(m5["hist_steps"]).shape == (5,)
+    assert np.asarray(m16["hist_steps"]).shape == (16,)
+    _assert_tree_equal(s5.params, s16.params, "bins: params")
+
+
+def test_single_compilation_telemetry_full():
+    """The histograms' edges are trace-time constants — telemetry must not
+    add a recompile across rotating cohorts and advancing rounds."""
+    fl = _fl("fedshuffle", "vmapped", telemetry="full", engine="cohort",
+             rr_backend="device_ref")
+    pop = Population.build(fl, sizes=TASK.sizes())
+    eng = CohortEngine.build(TASK, pop, fl)
+    strat = bind_strategy(strategy_for(fl), fl, LOSS, num_clients=fl.num_clients)
+    step = jit_round_step(build_round_step(LOSS, strat, fl,
+                                           num_clients=fl.num_clients,
+                                           plane=eng.plane), donate=False)
+    state = strat.init(P0)
+    with obs.compile_guard(step):
+        for r in range(4):
+            state, _ = step(state, eng.device_plan(r))
+
+
+def test_train_loop_telemetry_routes_histograms():
+    """train() with telemetry='metrics': scalar rows never see hist_* keys,
+    the registry accumulates device counts, and the trajectory equals the
+    off run's bitwise."""
+    from repro.fed.train_loop import train
+
+    fl = _fl("fedshuffle", "vmapped")
+    pipe = FederatedPipeline(TASK, Population.build(fl, sizes=TASK.sizes()), fl)
+    res_off = train(LOSS, P0, pipe, fl, N_ROUNDS, log_every=0)
+    fl_t = dataclasses.replace(fl, telemetry="metrics")
+    pipe_t = FederatedPipeline(TASK, Population.build(fl_t, sizes=TASK.sizes()), fl_t)
+    res = train(LOSS, P0, pipe_t, fl_t, N_ROUNDS, log_every=0)
+    _assert_tree_equal(res_off.state.params, res.state.params, "train: params")
+    assert not any(k.startswith(HIST_PREFIX) for k in res.metrics.last())
+    assert "jax_compiles" in res.metrics.last()
+    assert sum(r["jax_compiles"] for r in res.metrics.rows) == 1
+    snap = res.registry.snapshot()
+    cohort_total = sum(r["cohort"] for r in res.metrics.rows)
+    assert snap["histograms"]["hist_steps"]["total"] == cohort_total
+    assert "jax_compiles" not in res_off.metrics.last()
