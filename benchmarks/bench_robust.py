@@ -1,0 +1,175 @@
+"""Robust-aggregation benchmark: estimator throughput + attack recovery.
+
+For population sizes 1e3 / 1e5 / 1e6 (the cohort scenario's quadratic task,
+engine + prefetch at depth 2) measures rounds/sec of the same round loop
+under each ``fl.aggregator``:
+
+* ``mean``              — the canonical weighted_sum (the reference; plane
+  activated via ``guard="quarantine"`` so all arms pay the staging cost)
+* ``coordinate_median`` — sorted-scan weighted median per coordinate
+* ``trimmed_mean``      — sorted-scan central-mass window per coordinate
+* ``krum``              — O(C^2) pairwise-distance Gram scoring
+
+plus one *quality* arm (population-independent, run once): 20% sign-flip
+adversaries at 10x scale on a duplicated-quadratic fleet — the committed
+recovery contract is that ``trimmed_mean`` lands inside 1.5x the attack-free
+loss while plain ``mean`` blows past 10x (usually to divergence).
+
+Writes ``BENCH_robust.json`` at the repo root (committed baseline) and
+``benchmarks/results/bench_robust.csv``; ``--quick`` writes
+``results/bench_robust_quick.{csv,json}`` for ``benchmarks.check_regression``.
+``--check`` asserts the acceptance bars: every robust estimator keeps
+>= 50% of the mean arm's rounds/sec, each arm compiles exactly once, and
+the quality arm's recovery contract holds.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.federated import FederatedPipeline, Population
+from repro.data.tasks import DuplicatedQuadraticTask, PopulationQuadraticTask
+from repro.fed.cohort import CohortEngine
+from repro.fed.losses import make_quadratic_loss
+from repro.fed.rounds import (as_device_batch, build_round_step,
+                              jit_round_step)
+from repro.fed.strategy import bind_strategy, strategy_for
+from repro.obs import cache_size
+
+from .bench_cohort import COHORT, DIM, SAMPLES, _fl, _time_engine, _write_scenario
+from .common import csv_row
+
+ROBUST_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_robust.json")
+
+AGG_ARMS = ("mean", "coordinate_median", "trimmed_mean", "krum")
+
+REPEATS = 3
+
+# the quality arm's fleet (mirrors examples/robust_aggregation.py)
+Q_CLIENTS, Q_ROUNDS, Q_SEED = 10, 300, 2
+Q_ATTACK = dict(attack="sign_flip", attack_frac=0.2, attack_scale=10.0)
+_LOSS_CAP = 1e30    # divergence clamp so the JSON stays portable
+
+
+def bench_robust_population(pop: int, rounds: int) -> dict:
+    task = PopulationQuadraticTask(dim=DIM, num_clients=pop,
+                                   samples_per_client=SAMPLES)
+    sizes = task.sizes()
+    loss = make_quadratic_loss(DIM)
+    params = {"x": jnp.zeros(DIM)}
+    out: dict = {}
+    for agg in AGG_ARMS:
+        # quarantine stays on in every arm (mean included) so the ratios
+        # isolate the *estimator* cost, not the plane's staging cost
+        fl = _fl(pop, engine="cohort", rr_backend="device_ref", prefetch=2,
+                 aggregator=agg, trim_frac=0.1, guard="quarantine")
+        eng = CohortEngine.build(task, Population.build(fl, sizes=sizes), fl)
+        strat = bind_strategy(strategy_for(fl), fl, loss, num_clients=pop)
+        step = jit_round_step(build_round_step(loss, strat, fl, num_clients=pop,
+                                               plane=eng.plane), donate=True)
+        # best-of-REPEATS: estimator cost is deterministic per round, so the
+        # max rps is the noise-robust estimate (state rebuilt per repeat:
+        # the step donates its ServerState buffers)
+        rps = []
+        for _ in range(REPEATS):
+            st = strat.init(params)
+            st, _ = step(st, eng.device_plan(0))        # compile (cached)
+            jax.block_until_ready(st.params)
+            rps.append(_time_engine(eng, step, st, rounds, 2))
+        out[agg] = max(rps)
+        # rotating cohorts must never leak a shape into the traced round
+        out["compilations"] = max(out.get("compilations", 0), cache_size(step))
+    out["median_vs_mean"] = out["coordinate_median"] / out["mean"]
+    out["trimmed_mean_vs_mean"] = out["trimmed_mean"] / out["mean"]
+    out["krum_vs_mean"] = out["krum"] / out["mean"]
+    return out
+
+
+def _quality_run(loss_fn, task, **robust_kw) -> float:
+    from repro.configs.base import FLConfig
+
+    fl = FLConfig(num_clients=Q_CLIENTS, cohort_size=Q_CLIENTS,
+                  sampling="full", epochs=1, local_batch=1,
+                  algorithm="fedshuffle", local_lr=0.05, server_opt="sgd",
+                  seed=Q_SEED, **robust_kw)
+    pipe = FederatedPipeline(task, Population.build(fl, sizes=task.sizes()), fl)
+    strat = bind_strategy(strategy_for(fl), fl, loss_fn,
+                          num_clients=Q_CLIENTS)
+    state = strat.init({"x": jnp.zeros(Q_CLIENTS)})
+    step = jax.jit(build_round_step(loss_fn, strat, fl,
+                                    num_clients=Q_CLIENTS))
+    for r in range(Q_ROUNDS):
+        state, _ = step(state, as_device_batch(pipe.round_batch(r)))
+    x = np.asarray(state.params["x"])
+    if not np.all(np.isfinite(x)) or np.abs(x).max() > 1e6:
+        return _LOSS_CAP
+    return min(task.loss_np(x), _LOSS_CAP)
+
+
+def bench_attack_recovery() -> dict:
+    """Final loss after Q_ROUNDS under 20% sign-flip, per defense."""
+    task = DuplicatedQuadraticTask(copies=(1,) * Q_CLIENTS)
+    loss_fn = make_quadratic_loss(Q_CLIENTS)
+    clean = _quality_run(loss_fn, task)
+    attacked = _quality_run(loss_fn, task, **Q_ATTACK)
+    healed = _quality_run(loss_fn, task, aggregator="trimmed_mean",
+                          trim_frac=0.25, **Q_ATTACK)
+    return {"loss_clean_mean": clean, "loss_attacked_mean": attacked,
+            "loss_attacked_trimmed_mean": healed,
+            "recovery_vs_clean": healed / max(clean, 1e-12),
+            "attack_damage_vs_clean": attacked / max(clean, 1e-12)}
+
+
+def main_robust(pops=(1_000, 100_000, 1_000_000), rounds: int = 60,
+                check: bool = False, quick: bool = False) -> list[str]:
+    rows = []
+    results: dict = {"dim": DIM, "cohort": COHORT, "local_batch": 2, "epochs": 2,
+                     "samples_per_client": SAMPLES, "rounds_timed": rounds,
+                     "populations": {}}
+    for pop in pops:
+        res = bench_robust_population(pop, rounds)
+        results["populations"][str(pop)] = res
+        for agg in AGG_ARMS:
+            rows.append(csv_row(f"robust/{pop}/{agg}", 1.0 / res[agg],
+                                f"{res[agg]:.1f}rps"))
+        print(f"pop={pop}: " + ", ".join(f"{k}={v:.3f}" if isinstance(v, float)
+                                         else f"{k}={v}" for k, v in res.items()))
+        if check:
+            # acceptance bar: robust estimators cost <= half the round
+            # throughput of plain mean, and never recompile
+            for key in ("median_vs_mean", "trimmed_mean_vs_mean",
+                        "krum_vs_mean"):
+                assert res[key] >= 0.5, (pop, key, res)
+            assert res["compilations"] == 1, (pop, res)
+    quality = bench_attack_recovery()
+    results["quality"] = quality
+    rows.append(csv_row("robust/quality/recovery_vs_clean",
+                        quality["recovery_vs_clean"],
+                        f"attacked={quality['attack_damage_vs_clean']:.1e}x"))
+    print("quality: " + ", ".join(f"{k}={v:.4g}" for k, v in quality.items()))
+    if check:
+        # the committed recovery contract (examples/robust_aggregation.py)
+        assert quality["recovery_vs_clean"] <= 1.5, quality
+        assert quality["attack_damage_vs_clean"] >= 10.0, quality
+    return _write_scenario(results, rows, ROBUST_PATH, "bench_robust", quick)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small populations / few rounds (CI smoke)")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--check", action="store_true",
+                    help="assert the >= 0.5x throughput floors, one compile "
+                         "per arm, and the attack-recovery contract")
+    args = ap.parse_args()
+    pops = (1_000, 10_000) if args.quick else (1_000, 100_000, 1_000_000)
+    rounds = args.rounds or (15 if args.quick else 60)
+    print("name,us_per_call,derived")
+    for row in main_robust(pops=pops, rounds=rounds, check=args.check,
+                           quick=args.quick):
+        print(row)

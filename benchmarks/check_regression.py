@@ -17,6 +17,8 @@ box), so the gate checks the *ratio* metrics each scenario was built around:
                zipf device latency (also held to the hard >= 1.5x floor)
 * obs        — telemetry-arm / off throughput retention (full
                instrumentation also held to the hard >= 0.9 floor)
+* robust     — robust-aggregator / mean throughput retention (median,
+               trimmed_mean, krum — each also held to the hard >= 0.5 floor)
 
 A quick-run ratio below ``tolerance * baseline`` (default 0.5 — generous,
 sized for runner jitter, not for architectural regressions: an O(N) scatter
@@ -54,13 +56,19 @@ SCENARIOS: dict[str, tuple[str, tuple[str, ...]]] = {
               ("buffered_vs_sync_vtime", "buffered_vs_sync_vtime_per_update")),
     "obs": ("BENCH_obs.json",
             ("metrics_vs_off", "trace_vs_off", "instrumented_vs_off")),
+    "robust": ("BENCH_robust.json",
+               ("median_vs_mean", "trimmed_mean_vs_mean", "krum_vs_mean")),
 }
 
 # acceptance floors that hold regardless of the baseline (the committed bar)
 HARD_FLOORS = {"ratio_qsgd": 4.0, "ratio_topk": 4.0, "ratio_randk": 4.0,
                "buffered_vs_sync_vtime": 1.5,
                # full instrumentation may cost at most 10% round throughput
-               "instrumented_vs_off": 0.9}
+               "instrumented_vs_off": 0.9,
+               # robust estimators may cost at most half the mean arm's
+               # round throughput (sorted scans / bit-search scoring)
+               "median_vs_mean": 0.5, "trimmed_mean_vs_mean": 0.5,
+               "krum_vs_mean": 0.5}
 
 
 def check_scenario(name: str, tolerance: float) -> list[str]:

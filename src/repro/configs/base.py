@@ -248,6 +248,32 @@ Staleness = Literal["constant", "poly"]
 # host span instrumentation (spans still no-op until a tracer is installed
 # via obs.trace.capture); "full" = both.
 Telemetry = Literal["off", "metrics", "trace", "full"]
+# Byzantine-robustness plane (repro.fed.robust).  The defaults (attack="none",
+# aggregator="mean", guard="off") keep the plane fully off — bitwise-frozen.
+# Attack model (ATTACKS registry; extensible via register_attack, hence plain
+# str) — the adversary set is drawn counter-based per (seed, client), attacks
+# rewrite the slot-order delta stack before the uplink codec encodes it:
+#   "none"         — no adversaries (the frozen default)
+#   "sign_flip"    — adversaries ship -attack_scale * Delta_i
+#   "zero_update"  — adversaries ship zeros (free-riding)
+#   "scaled_noise" — adversaries ship attack_scale * U[-1,1) noise
+#   "ipm"          — inner-product manipulation: -attack_scale * honest mean
+# Robust aggregator (ROBUST_AGGS registry; register_robust_agg) — weight-aware
+# over the strategy's bound FedShuffle coefficients, on the weighted_sum scale:
+#   "mean"              — the canonical weighted_sum (the frozen default)
+#   "coordinate_median" — per-coordinate weighted median (breakdown 1/2)
+#   "trimmed_mean"      — central [trim_frac, 1-trim_frac] mass window
+#   "norm_clip"         — clip update norms to the cohort median, then mean
+#   "centered_clip"     — iterative centered clipping (Karimireddy et al.)
+#   "krum" / "multi_krum" — pairwise-distance selection (Blanchard et al.)
+# Self-healing guards:
+#   "off"        — no guards (the frozen default)
+#   "quarantine" — per-client NaN/Inf/norm-spike quarantine + coefficient
+#                  renormalization inside the round
+#   "reject"     — server-level divergence guard: revert a blown round's
+#                  state updates (the round counter still advances)
+#   "full"       — both
+Guard = Literal["off", "quarantine", "reject", "full"]
 
 
 @dataclass(frozen=True)
@@ -318,6 +344,15 @@ class FLConfig:
     # every existing configuration bitwise-frozen
     telemetry: Telemetry = "off"
     telemetry_bins: int = 16       # bins per in-jit histogram (static shapes)
+    # byzantine-robustness plane (adversarial clients, robust aggregation,
+    # self-healing guards; see the Attack/Aggregator/Guard notes above and
+    # repro.fed.robust) — the defaults keep the plane bitwise-frozen off
+    attack: str = "none"           # adversary model (key into robust.ATTACKS)
+    attack_frac: float = 0.0       # expected adversarial fraction of clients
+    attack_scale: float = 1.0      # attack magnitude multiplier
+    aggregator: str = "mean"       # server combiner (key into robust.ROBUST_AGGS)
+    trim_frac: float = 0.1         # trimmed_mean/krum breakdown parameter (0, 0.5)
+    guard: Guard = "off"           # self-healing guards (quarantine/reject/full)
     # system heterogeneity (Fig. 4): every client is cut short by this many
     # local steps (planned vs actual); the "gen" hybrid algorithm corrects it
     drop_last_steps: int = 0

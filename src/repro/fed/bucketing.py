@@ -18,6 +18,12 @@ deadline caps each client's realized steps by its device tier
 (``FleetModel.deadline_caps``), the pipeline folds those caps into the
 bucket edges, and slow tiers land in narrow buckets — the scan never pays
 for steps the deadline forbids (the tier <-> bucket mapping).
+
+The robustness plane leans on the same reassembly contract: attacks,
+robust aggregators and quarantine guards all consume the full slot-order
+``[C]`` delta stack (never per-bucket slices), so coordinate medians,
+trimmed means and Krum distances see identical operand order under both
+layouts and ``padded == bucketed`` stays bitwise with the plane on.
 """
 from __future__ import annotations
 

@@ -44,6 +44,13 @@ randk       seeded random-k sparsification, unbiased n/k scaling
 ef_qsgd     qsgd + error feedback
 ef_randk    randk + error feedback
 =========== ============================================================
+
+Robustness-plane ordering: the round driver applies client attacks
+(``fl.attack``, ``repro.fed.robust``) *before* ``encode`` — a Byzantine
+client controls the payload it ships, so the attack corrupts what goes on
+the wire and the codec faithfully compresses the corrupted update.  Robust
+aggregators and quarantine guards then operate on the **decoded** deltas,
+the same arrays honest aggregation would see.
 """
 from __future__ import annotations
 

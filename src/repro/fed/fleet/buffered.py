@@ -18,6 +18,13 @@ reserved ``FLEET_STATE_KEY`` bank key, exactly like scaffold variates and
 uplink error-feedback residuals: one row per client + a scratch row, rows
 gathered/scattered O(cohort) inside the jitted round, untouched rows passed
 through the local chain bit-for-bit.
+
+Composition with the robustness plane (``repro.fed.robust``): staleness
+discounts enter through the wrapped ``agg_coeffs``, and robust aggregators
+consume exactly those coefficients — a stale adversary therefore carries
+less weight in a weighted median / trimmed mean, and quarantine
+renormalization (``renormalize_coeffs``) preserves the staleness-discounted
+total mass, so buffered ticks keep the same scale contract as sync rounds.
 """
 from __future__ import annotations
 

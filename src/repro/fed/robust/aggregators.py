@@ -1,0 +1,266 @@
+"""Byzantine-robust aggregation over FedShuffle's per-client coefficients.
+
+FedShuffle's entire correction flows through the aggregation weights
+``coeff_i = valid_i * w~_i / q_i`` — so robust estimators here *compose
+with* those weights instead of replacing them.  Every aggregator takes the
+slot-order-stacked ``[C, ...]`` delta tree plus the strategy's bound
+coefficient vector (staleness discounts under the buffered fleet included)
+and returns an estimate on the **same scale** as the canonical
+``weighted_sum``: a coefficient-weighted location estimate multiplied by
+the total coefficient mass ``W = sum(coeff)``, so ``mean`` is exactly
+``weighted_sum`` and swapping aggregators never rescales ``server_lr``.
+
+All cross-client math runs on the slot-order ``[C]`` stack every layout
+already stages (``fed/bucketing.py`` reassembles the bucketed scans into
+slot order first) — padded == bucketed bitwise, and the sequential driver
+stages its deltas like the compressed-uplink path when the plane is on.
+
+Registered aggregators (``ROBUST_AGGS``; via :func:`register_robust_agg`):
+
+* ``mean``              — the canonical ``weighted_sum`` (the frozen default).
+* ``coordinate_median`` — per-coordinate *weighted* median via sorted
+  cumulative coefficients (breakdown point: 1/2 of coefficient mass).
+* ``trimmed_mean``      — per-coordinate weighted mean over the central
+  ``[trim, 1 - trim]`` coefficient-mass window (``fl.trim_frac`` off each
+  tail; breakdown point ``trim_frac``).
+* ``norm_clip``         — clip every client's update norm to the cohort's
+  median norm, then ``weighted_sum`` (bounds influence, not direction).
+* ``centered_clip``     — Karimireddy et al. 2021 iterative centered
+  clipping: repeat ``v += sum_i (coeff_i/W) * clip(Delta_i - v, tau)``.
+* ``krum`` / ``multi_krum`` — Blanchard et al. 2017 via the O(C^2) pairwise
+  squared-distance matrix; ``f = floor(trim_frac * |valid|)`` tolerated
+  Byzantine clients, score = sum of the ``|valid| - f - 2`` nearest
+  distances; ``krum`` ships the best-scored client's update, ``multi_krum``
+  the coefficient-weighted mean of the best ``|valid| - f - 2``.
+
+Estimators are fp32 internally and cast back per-leaf, like ``weighted_sum``.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ...configs.base import FLConfig
+
+_EPS = 1e-12
+_BIG = 1e30  # finite stand-in for +inf where a 0-weight would make inf*0=nan
+
+# aggregators whose breakdown point / neighbor count is fl.trim_frac
+TRIM_PARAM_AGGS = ("trimmed_mean", "krum", "multi_krum")
+
+
+def _wbcast(w, ndim: int):
+    return w.reshape((-1,) + (1,) * (ndim - 1))
+
+
+def _wsum(deltas, coeff):
+    """The canonical fp32 einsum aggregation (== strategy.weighted_sum)."""
+    return jax.tree.map(
+        lambda t: jnp.einsum("c,c...->...", coeff.astype(jnp.float32),
+                             t.astype(jnp.float32)).astype(t.dtype),
+        deltas)
+
+
+def _sorted_with_weights(x, coeff):
+    """Sort a stacked leaf along the client axis, carrying weights along."""
+    xf = x.astype(jnp.float32)
+    order = jnp.argsort(xf, axis=0)
+    xs = jnp.take_along_axis(xf, order, axis=0)
+    wb = jnp.broadcast_to(_wbcast(coeff.astype(jnp.float32), x.ndim), x.shape)
+    ws = jnp.take_along_axis(wb, order, axis=0)
+    return xs, ws
+
+
+def slot_sqnorms(deltas) -> jnp.ndarray:
+    """Per-slot fp32 squared norms of the stacked tree ([C]).
+
+    Same leaf-order summation as ``obs.hist.slot_sqnorms`` (duplicated to
+    keep obs optional here); XLA CSEs the two when telemetry is also on.
+    """
+    return sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32)),
+                axis=tuple(range(1, x.ndim)))
+        for x in jax.tree.leaves(deltas))
+
+
+def masked_median(x, mask) -> jnp.ndarray:
+    """Unweighted median of ``x[mask > 0]`` ([C] -> scalar; inf when empty)."""
+    xs = jnp.sort(jnp.where(mask > 0, x.astype(jnp.float32), jnp.inf))
+    nv = (mask > 0).sum().astype(jnp.int32)
+    k = jnp.maximum(nv - 1, 0) // 2
+    return xs[k]
+
+
+def _mean(deltas, coeff, meta, fl: FLConfig):
+    return _wsum(deltas, coeff)
+
+
+def _coordinate_median(deltas, coeff, meta, fl: FLConfig):
+    W = coeff.astype(jnp.float32).sum()
+
+    def leaf(x):
+        xs, ws = _sorted_with_weights(x, coeff)
+        cw = jnp.cumsum(ws, axis=0)
+        half = 0.5 * cw[-1]
+        # first index whose cumulative mass reaches half: necessarily a
+        # slot with positive weight, so 0-coefficient (invalid/quarantined)
+        # values can never be selected
+        idx = jnp.argmax(cw >= half[None], axis=0)
+        med = jnp.take_along_axis(xs, idx[None], axis=0)[0]
+        return (med * W).astype(x.dtype)
+
+    return jax.tree.map(leaf, deltas)
+
+
+def _trimmed_mean(deltas, coeff, meta, fl: FLConfig):
+    cf = coeff.astype(jnp.float32)
+    W = cf.sum()
+    lo, hi = jnp.float32(fl.trim_frac) * W, jnp.float32(1.0 - fl.trim_frac) * W
+
+    def leaf(x):
+        xs, ws = _sorted_with_weights(x, coeff)
+        cw_hi = jnp.cumsum(ws, axis=0)
+        cw_lo = cw_hi - ws
+        # effective mass of each sorted value inside the central window
+        eff = jnp.clip(cw_hi, lo, hi) - jnp.clip(cw_lo, lo, hi)
+        tm = (eff * xs).sum(axis=0) / jnp.maximum(hi - lo, _EPS)
+        return (tm * W).astype(x.dtype)
+
+    return jax.tree.map(leaf, deltas)
+
+
+def _norm_clip(deltas, coeff, meta, fl: FLConfig):
+    norm = jnp.sqrt(slot_sqnorms(deltas))
+    tau = masked_median(norm, coeff > 0)
+    fac = jnp.minimum(1.0, tau / jnp.maximum(norm, _EPS))            # [C]
+    clipped = jax.tree.map(
+        lambda d: d.astype(jnp.float32) * _wbcast(fac, d.ndim), deltas)
+    out = _wsum(clipped, coeff)
+    return jax.tree.map(lambda o, d: o.astype(d.dtype), out, deltas)
+
+
+_CCLIP_ITERS = 3
+
+
+def _centered_clip(deltas, coeff, meta, fl: FLConfig):
+    cf = coeff.astype(jnp.float32)
+    W = cf.sum()
+    wn = cf / jnp.maximum(W, _EPS)                                   # [C]
+    tau = masked_median(jnp.sqrt(slot_sqnorms(deltas)), coeff > 0)
+    v = jax.tree.map(lambda d: jnp.zeros(d.shape[1:], jnp.float32), deltas)
+    for _ in range(_CCLIP_ITERS):
+        diff = jax.tree.map(
+            lambda d, vl: d.astype(jnp.float32) - vl[None], deltas, v)
+        r = jnp.sqrt(slot_sqnorms(diff))                             # [C]
+        fac = jnp.minimum(1.0, tau / jnp.maximum(r, _EPS))
+        v = jax.tree.map(
+            lambda vl, df: vl + jnp.einsum("c,c...->...", wn * fac, df),
+            v, diff)
+    return jax.tree.map(lambda vl, d: (vl * W).astype(d.dtype), v, deltas)
+
+
+def _pairwise_sqdists(deltas) -> jnp.ndarray:
+    """[C, C] fp32 squared distances via the Gram matrix (O(C^2) as spec'd)."""
+    sq = slot_sqnorms(deltas)                                        # [C]
+    gram = sum(
+        jnp.einsum("c...,e...->ce", x.astype(jnp.float32),
+                   x.astype(jnp.float32))
+        for x in jax.tree.leaves(deltas))
+    return jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * gram, 0.0)
+
+
+def _krum_scores(deltas, coeff, trim_frac: float):
+    """(scores [C], k) — sum of each valid client's k nearest distances.
+
+    The k-nearest selection binary-searches each row's k-th smallest
+    distance on the *int32 bit patterns* of the (non-negative) fp32
+    distances — positive floats are monotone in their bits, so 31 masked
+    count-reduce passes over the [C, C] matrix find the exact threshold.
+    XLA's comparator sort on [C, C] is ~100x slower on CPU at C=256 and
+    would put krum far under the >= 0.5x-of-mean throughput floor.  Ties at
+    the threshold all count (a deterministic, layout-stable superset of
+    "exactly k"), which only matters for bitwise-identical updates.
+    """
+    C = coeff.shape[0]
+    m = (coeff > 0).astype(jnp.float32)                              # [C]
+    nv = m.sum().astype(jnp.int32)
+    f = (jnp.float32(trim_frac) * nv.astype(jnp.float32)).astype(jnp.int32)
+    k = jnp.clip(nv - f - 2, 1, C)
+    dist = jnp.minimum(_pairwise_sqdists(deltas), _BIG)
+    # exclude self and invalid/quarantined partners from the neighbor pool
+    pair_ok = (m[:, None] * m[None, :]) * (1.0 - jnp.eye(C, dtype=jnp.float32))
+    dbits = jax.lax.bitcast_convert_type(dist, jnp.int32)            # [C, C]
+    kf = k.astype(jnp.float32)
+    lo = jnp.full((C,), -1, jnp.int32)                 # cnt(lo) <  k
+    hi = jnp.full((C,), jnp.iinfo(jnp.int32).max, jnp.int32)  # cnt(hi) >= k
+    for _ in range(31):                                # log2 of the bit range
+        mid = lo + (hi - lo) // 2
+        cnt = (pair_ok * (dbits <= mid[:, None])).sum(axis=1)
+        hit = cnt >= kf
+        hi = jnp.where(hit, mid, hi)
+        lo = jnp.where(hit, lo, mid)
+    near = pair_ok * (dbits <= hi[:, None]).astype(jnp.float32)
+    neigh = (near * dist).sum(axis=1)
+    # valid clients always strictly beat invalid ones, even when a tiny
+    # cohort leaves them without k finite neighbors
+    scores = jnp.where(m > 0, jnp.minimum(neigh, _BIG), jnp.inf)
+    return scores, k
+
+
+def _krum(deltas, coeff, meta, fl: FLConfig):
+    W = coeff.astype(jnp.float32).sum()
+    scores, _ = _krum_scores(deltas, coeff, fl.trim_frac)
+    sel = jnp.argmin(scores)
+    return jax.tree.map(lambda x: (x[sel].astype(jnp.float32) * W).astype(x.dtype),
+                        deltas)
+
+
+def _multi_krum(deltas, coeff, meta, fl: FLConfig):
+    cf = coeff.astype(jnp.float32)
+    W = cf.sum()
+    C = cf.shape[0]
+    scores, k = _krum_scores(deltas, coeff, fl.trim_frac)
+    order = jnp.argsort(scores)
+    keep = jnp.zeros(C, jnp.float32).at[order].set(
+        (jnp.arange(C) < k).astype(jnp.float32))
+    kept = cf * keep
+    # renormalize the survivors' coefficients so total mass is preserved
+    # (selection must not silently shrink the server step)
+    w2 = kept * (W / jnp.maximum(kept.sum(), _EPS))
+    return _wsum(deltas, w2)
+
+
+ROBUST_AGGS: dict[str, Callable] = {
+    "mean": _mean,
+    "coordinate_median": _coordinate_median,
+    "trimmed_mean": _trimmed_mean,
+    "norm_clip": _norm_clip,
+    "centered_clip": _centered_clip,
+    "krum": _krum,
+    "multi_krum": _multi_krum,
+}
+
+
+def register_robust_agg(name: str, agg: Callable, *,
+                        overwrite: bool = False) -> None:
+    """Register ``agg(deltas, coeff, meta, fl) -> delta_agg`` under ``name``
+    (the ``FLConfig.aggregator`` key)."""
+    if not overwrite and name in ROBUST_AGGS:
+        raise ValueError(
+            f"robust aggregator {name!r} already registered (pass overwrite=True to replace)")
+    ROBUST_AGGS[name] = agg
+
+
+def build_robust_aggregate(fl: FLConfig) -> Callable:
+    """Resolve ``fl.aggregator`` to ``(deltas, coeff, meta) -> delta_agg``."""
+    if fl.aggregator not in ROBUST_AGGS:
+        raise ValueError(
+            f"unknown aggregator {fl.aggregator!r}; have {sorted(ROBUST_AGGS)}")
+    fn = ROBUST_AGGS[fl.aggregator]
+
+    def robust_aggregate(deltas, coeff, meta):
+        return fn(deltas, coeff, meta, fl)
+
+    return robust_aggregate

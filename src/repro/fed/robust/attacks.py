@@ -1,0 +1,169 @@
+"""Adversarial-client attack models applied to the slot-order delta stack.
+
+A Byzantine client does not follow the protocol: whatever it *computed*
+locally, what it *ships* is adversarial.  This module implements that wire
+boundary in-jit: attacks rewrite the cohort's stacked slot-order ``[C]``
+delta tree **before** the uplink codec encodes it, so adversaries control
+their wire payload exactly (a sign-flipped update is quantized/sparsified
+like any honest one — compression does not sanitize it).
+
+The adversary *set* is drawn counter-based per ``(seed, client)`` through
+the same rr_perm hash chain the reshuffling / uplink / fleet streams ride,
+under a new domain tag (``_TAG_ROBUST``, like the fleet plane's
+``0xF1EE7``).  Membership is round-independent — a compromised device stays
+compromised — and a pure function of the client id, so the legacy path, the
+cohort engine, the prefetch thread and a checkpoint resume all replay the
+identical adversary set.  Per-round attack randomness (``scaled_noise``)
+folds ``state.rnd`` into its own key, so resumes also replay noise bitwise.
+
+Registered attacks (``ATTACKS``; extensible via :func:`register_attack`) —
+each is ``attack(deltas, adv, meta, keys, fl) -> deltas`` over the stacked
+``[C, ...]`` tree, where ``adv`` is the per-slot adversary mask (already
+masked by ``meta.valid``) and ``keys`` the per-slot round keys:
+
+* ``sign_flip``    — ship ``-attack_scale * Delta_i`` (gradient ascent).
+* ``zero_update``  — ship zeros (free-riding / update withholding).
+* ``scaled_noise`` — ship symmetric bounded noise, ``attack_scale *
+  U[-1, 1)`` per coordinate from the counter-based stream.
+* ``ipm``          — inner-product manipulation (Xie et al. 2020): every
+  adversary ships ``-attack_scale *`` (the honest cohort mean), steering
+  the aggregate's inner product with the true descent direction negative
+  while staying norm-inconspicuous for small scales.
+
+With ``fl.attack == "none"`` the round driver never calls into this module
+— the bitwise-frozen contract of the plane-off path.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...configs.base import FLConfig
+from ...kernels.rr_perm.ref import fmix32, key_combine, stream_key
+
+_TAG_ROBUST = 0xBADC0DE  # domain-separates robust draws from RR/comm/fleet
+
+# per-use subtags folded in after the robust tag (one stream per purpose)
+SUB_ADVERSARY = 0xAD5E7  # adversary-set membership (round-independent)
+SUB_NOISE = 0x2015E      # per-round attack noise stream
+
+
+def adversary_mask(seed: int, client_ids, frac: float, xp=jnp):
+    """Counter-based adversary membership per ``(seed, client)`` — [C] f32.
+
+    Round-independent on purpose (a compromised client stays compromised),
+    and a pure function of the ids, so every producer of the same cohort
+    (legacy / engine / prefetch / resume) sees the identical adversary set.
+    Works over ``xp`` = jnp (in-jit, the round driver) or numpy (host
+    mirrors in tests / examples) with bitwise-equal draws.
+    """
+    ids = xp.atleast_1d(xp.asarray(client_ids)).astype(xp.uint32)
+    key = stream_key(seed, ids, xp.uint32(0), xp)
+    key = key_combine(key, xp.uint32(_TAG_ROBUST), xp)
+    key = key_combine(key, xp.uint32(SUB_ADVERSARY), xp)
+    u = fmix32(key, xp).astype(xp.float32) / xp.float32(2**32)
+    return (u < xp.float32(frac)).astype(xp.float32)
+
+
+def attack_round_keys(seed: int, client_ids, rnd, xp=jnp):
+    """Per-slot uint32 attack-noise keys for one round ([C]).
+
+    Keyed off the absolute round counter (like the uplink's
+    ``comm.round_keys``) so a checkpoint resume replays identical noise.
+    """
+    ids = xp.atleast_1d(xp.asarray(client_ids)).astype(xp.uint32)
+    key = stream_key(seed, ids, rnd, xp)
+    key = key_combine(key, xp.uint32(_TAG_ROBUST), xp)
+    return key_combine(key, xp.uint32(SUB_NOISE), xp)
+
+
+def _bcast(v, ndim: int):
+    """[C] -> [C, 1, ..., 1] for broadcasting against a stacked leaf."""
+    return v.reshape((-1,) + (1,) * (ndim - 1))
+
+
+def _blend(deltas, adv, attacked):
+    """Adversary slots take ``attacked``, honest slots keep ``deltas``."""
+    return jax.tree.map(
+        lambda d, a: jnp.where(_bcast(adv, d.ndim) > 0,
+                               a.astype(d.dtype), d),
+        deltas, attacked)
+
+
+def _unit_noise(keys, like, leaf_idx: int):
+    """Counter-based U[-1, 1) of ``like``'s stacked shape ([C, ...])."""
+    n = max(1, int(np.prod(like.shape[1:], dtype=np.int64)))
+    ks = key_combine(keys, jnp.uint32(leaf_idx), jnp)
+    grid = key_combine(ks.reshape(-1, 1),
+                       jnp.arange(n, dtype=jnp.uint32).reshape(1, -1), jnp)
+    u = fmix32(grid, jnp).astype(jnp.float32) / jnp.float32(2**32)
+    return (2.0 * u - 1.0).reshape(like.shape)
+
+
+def _sign_flip(deltas, adv, meta, keys, fl: FLConfig):
+    flipped = jax.tree.map(
+        lambda d: -jnp.float32(fl.attack_scale) * d.astype(jnp.float32), deltas)
+    return _blend(deltas, adv, flipped)
+
+
+def _zero_update(deltas, adv, meta, keys, fl: FLConfig):
+    return _blend(deltas, adv, jax.tree.map(jnp.zeros_like, deltas))
+
+
+def _scaled_noise(deltas, adv, meta, keys, fl: FLConfig):
+    leaves, treedef = jax.tree.flatten(deltas)
+    noise = [jnp.float32(fl.attack_scale) * _unit_noise(keys, x, i)
+             for i, x in enumerate(leaves)]
+    return _blend(deltas, adv, jax.tree.unflatten(treedef, noise))
+
+
+def _ipm(deltas, adv, meta, keys, fl: FLConfig):
+    # unweighted mean over the honest valid slots — the attacker's estimate
+    # of the descent direction it wants to negate
+    honest = meta.valid * (1.0 - (adv > 0).astype(jnp.float32))      # [C]
+    denom = jnp.maximum(honest.sum(), 1.0)
+    attacked = jax.tree.map(
+        lambda d: jnp.broadcast_to(
+            -jnp.float32(fl.attack_scale) * jnp.einsum(
+                "c,c...->...", honest / denom, d.astype(jnp.float32)),
+            d.shape),
+        deltas)
+    return _blend(deltas, adv, attacked)
+
+
+ATTACKS: dict[str, Callable] = {
+    "sign_flip": _sign_flip,
+    "zero_update": _zero_update,
+    "scaled_noise": _scaled_noise,
+    "ipm": _ipm,
+}
+
+
+def register_attack(name: str, attack: Callable, *,
+                    overwrite: bool = False) -> None:
+    """Register ``attack(deltas, adv, meta, keys, fl) -> deltas`` under
+    ``name`` (the ``FLConfig.attack`` key)."""
+    if not overwrite and name in ATTACKS:
+        raise ValueError(
+            f"attack {name!r} already registered (pass overwrite=True to replace)")
+    ATTACKS[name] = attack
+
+
+def build_attack(fl: FLConfig) -> Callable | None:
+    """Resolve ``fl.attack`` to a closed attack over the stacked deltas;
+    None when no attack runs (the bitwise-frozen default path)."""
+    if fl.attack == "none":
+        return None
+    if fl.attack not in ATTACKS:
+        raise ValueError(f"unknown attack {fl.attack!r}; have {sorted(ATTACKS)}")
+    fn = ATTACKS[fl.attack]
+
+    def apply_attack(deltas, meta, rnd):
+        adv = adversary_mask(fl.seed, meta.client_id, fl.attack_frac) * meta.valid
+        keys = attack_round_keys(fl.seed, meta.client_id, rnd)
+        return fn(deltas, adv, meta, keys, fl)
+
+    return apply_attack

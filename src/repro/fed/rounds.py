@@ -31,6 +31,16 @@ feedback residuals (banked on ``ServerState.clients`` under "uplink")
 included.  ``identity`` is an exact pass-through: the default path's op
 sequence is byte-for-byte the pre-uplink one.
 
+When the byzantine-robustness plane is active (``FLConfig.attack`` /
+``aggregator`` / ``guard``; ``repro.fed.robust``), the driver (1) lets the
+configured attack rewrite the stacked slot-order deltas *before* codec
+encode, (2) aggregates through the bound robust aggregator over explicit —
+and, after a quarantine, renormalized — coefficients, and (3) may
+where-select the previous ServerState when the reject guard trips.  The
+sequential-padded round stages its delta stack like the compressed one, so
+padded == bucketed stays bitwise; with the plane off (the default) none of
+this traces — the op sequence is byte-for-byte the pre-robustness one.
+
 The step consumes either a materialized ``RoundBatch`` (legacy host
 assembly) or, when built with ``plane=`` (a cohort-engine
 :class:`~repro.fed.cohort.plane.DevicePlane`), an ``IndexPlan`` — indices
@@ -58,9 +68,13 @@ from .bucketing import scan_clients, vmap_clients
 from .comm import (UPLINK_STATE_KEY, dense_bits, round_keys, uplink_apply,
                    uplink_mbytes_per_slot, uplink_wire_bits)
 from .fleet import FLEET_STATE_KEY, fleet_active, slot_staleness
+from .robust import (build_attack, guard_quarantines, guard_rejects,
+                     params_ok, quarantine_masks, renormalize_coeffs,
+                     robust_active, scrub_deltas, select_state,
+                     suspicion_ratio)
 from .server import ServerState
 from .strategy import (BoundStrategy, CohortState, FedStrategy, RoundCtx,
-                       bind_strategy)
+                       bind_strategy, weighted_sum)
 
 
 def build_round_step(loss_fn: Callable,
@@ -99,9 +113,20 @@ def build_round_step(loss_fn: Callable,
     # config-derived edges (obs.hist cardinality contract).  "off" (the
     # default) adds no ops and no metric keys — bitwise-frozen.
     tele_hist = metrics_enabled(fl.telemetry)
+    # byzantine-robustness plane (fed.robust): attacks rewrite the stacked
+    # slot-order deltas BEFORE the uplink codec (adversaries control their
+    # wire payload), robust aggregators / quarantine combine over explicit
+    # renormalizable coefficients, and the reject guard where-selects the
+    # previous state on post-update blowup.  All off by default: the plane
+    # adds no ops and no metric keys — bitwise-frozen like comm/fleet/obs.
+    robust_on = robust_active(fl)
+    apply_attack = build_attack(fl) if robust_on else None
+    g_quar = robust_on and guard_quarantines(fl)
+    g_rej = robust_on and guard_rejects(fl)
     hist_edges = obs_hist.round_hist_edges(
         fl, with_staleness=fleet_active(fl),
         with_uplink=codec is not None and codec.name != "identity",
+        with_robust=robust_on,
     ) if tele_hist else {}
 
     def round_step(state: ServerState, batch, lr_mult=1.0):
@@ -116,6 +141,10 @@ def build_round_step(loss_fn: Callable,
             batch = plane.materialize(batch)
         bucketed = isinstance(batch, BucketedBatch)
         meta = batch.meta
+        # the reject guard reverts to the round's input state — capture it
+        # before anything rebinds ``state`` (safe under donation: reads of
+        # the donated buffers happen inside this jit, before release)
+        prev_state = state if g_rej else None
         plan = strat.client_transform(meta, lr_mult)                   # eta [C]
         momentum = state.opt.get("m", None)
         if momentum is None:
@@ -162,6 +191,32 @@ def build_round_step(loss_fn: Callable,
                 new_cs = {**new_cs, UPLINK_STATE_KEY: ef2}
             return dhat, new_cs
 
+        def robust_combine(deltas):
+            """Aggregate the decoded slot-order stack under the robustness
+            plane: quarantine -> coefficient renormalization -> the bound
+            robust aggregator (``mean`` == the canonical weighted_sum)."""
+            coeff = strat.agg_coeffs(meta)                           # [C]
+            info = {"quarantined_clients": jnp.float32(0.0),
+                    "suspected_adversaries": jnp.float32(0.0)}
+            if g_quar:
+                healthy, suspected = quarantine_masks(deltas, meta)
+                info["quarantined_clients"] = (meta.valid * (1.0 - healthy)).sum()
+                info["suspected_adversaries"] = suspected.sum()
+                coeff = renormalize_coeffs(coeff, healthy)
+                if "hist_suspicion" in hist_edges:
+                    info["suspicion"] = suspicion_ratio(deltas, meta)
+                # zero the quarantined slots' values too: a zeroed
+                # coefficient alone would still leak NaN/Inf through
+                # sorted-scan estimators (0 * nan = nan)
+                deltas = scrub_deltas(deltas, healthy)
+            elif "hist_suspicion" in hist_edges:
+                info["suspicion"] = suspicion_ratio(deltas, meta)
+            combine = strat.robust_aggregate
+            if combine is None:       # hand-built strategy: canonical mean
+                return weighted_sum(deltas, coeff), info
+            return combine(deltas, coeff, meta), info
+
+        rb_info = None
         slot_sq = None  # [C] squared update norms, only under telemetry
         if fl.cohort_mode == "vmapped":
             if bucketed:
@@ -172,10 +227,16 @@ def build_round_step(loss_fn: Callable,
             else:
                 deltas, losses, new_cs = jax.vmap(client)(
                     batch.data, batch.step_mask, plan.eta, cstate0)
+            if apply_attack is not None:
+                # before encode: adversaries control their wire payload
+                deltas = apply_attack(deltas, meta, state.rnd)
             deltas, new_cs = uplink_cohort(deltas, new_cs)
             if tele_hist:
                 slot_sq = obs_hist.slot_sqnorms(deltas)
-            delta_agg = strat.aggregate(deltas, meta)
+            if robust_on:
+                delta_agg, rb_info = robust_combine(deltas)
+            else:
+                delta_agg = strat.aggregate(deltas, meta)
         else:  # sequential: the scan accumulates coeff_i * Delta_i as it goes,
             # so the strategy contributes through agg_coeffs rather than the
             # whole-cohort aggregate hook
@@ -197,14 +258,15 @@ def build_round_step(loss_fn: Callable,
                 # coeff_i-weighted accumulation replays in slot order
                 deltas, losses, new_cs = scan_clients(client, batch, plan.eta,
                                                       cstate0)
-            elif apply_up is not None and codec.name != "identity":
-                # compressed uplink: stage the per-client deltas (scan) so
-                # the codec runs vmapped on the stacked [C] slot-order
-                # arrays, like every other layout.  Applying it inside the
-                # fused scan body instead would let XLA contract its float
+            elif (apply_up is not None and codec.name != "identity") or robust_on:
+                # compressed uplink / robustness plane: stage the per-client
+                # deltas (scan) so the codec, the attacks and the robust
+                # aggregators run vmapped on the stacked [C] slot-order
+                # arrays, like every other layout.  Applying them inside the
+                # fused scan body instead would let XLA contract their float
                 # ops differently there (FMA fusion), silently breaking the
-                # padded == bucketed bitwise contract for error-feedback
-                # residuals.
+                # padded == bucketed bitwise contract (error-feedback
+                # residuals, cross-client estimators).
                 def stage(_, xs):
                     return None, client(*xs)
 
@@ -213,15 +275,20 @@ def build_round_step(loss_fn: Callable,
                     (batch.data, batch.step_mask, plan.eta, cstate0))
 
             if deltas is not None:
+                if apply_attack is not None:
+                    deltas = apply_attack(deltas, meta, state.rnd)
                 deltas, new_cs = uplink_cohort(deltas, new_cs)
                 if tele_hist:
                     slot_sq = obs_hist.slot_sqnorms(deltas)
 
-                def accum(acc, xs):
-                    delta, coeff_i = xs
-                    return add_weighted(acc, delta, coeff_i), None
+                if robust_on:
+                    delta_agg, rb_info = robust_combine(deltas)
+                else:
+                    def accum(acc, xs):
+                        delta, coeff_i = xs
+                        return add_weighted(acc, delta, coeff_i), None
 
-                delta_agg, _ = jax.lax.scan(accum, acc0, (deltas, coeff))
+                    delta_agg, _ = jax.lax.scan(accum, acc0, (deltas, coeff))
             else:
                 def body(acc, xs):
                     data_i, mask_i, eta_i, coeff_i, cs_i = xs
@@ -278,6 +345,15 @@ def build_round_step(loss_fn: Callable,
             # driver owns the bank and re-attaches the scattered update
             state = state._replace(clients=new_clients)
 
+        rejected = None
+        if g_rej:
+            # divergence guard: a blown round's param/opt/bank updates are
+            # discarded in-jit; the round counter still advances (a rejected
+            # round is skipped, not replayed — schedules/keys stay aligned)
+            ok = params_ok(prev_state.params, state.params)
+            state = select_state(ok, state, prev_state)
+            rejected = 1.0 - ok.astype(jnp.float32)
+
         valid_sum = jnp.maximum(meta.valid.sum(), 1.0)
         metrics = {
             "local_loss": (losses * meta.valid).sum() / valid_sum,
@@ -308,6 +384,14 @@ def build_round_step(loss_fn: Callable,
             metrics["arrived_clients"] = meta.valid.sum()
             metrics["dropped_clients"] = drp.sum()
             metrics["mean_staleness"] = (stal * meta.valid).sum() / valid_sum
+        if robust_on:
+            # robustness telemetry — keys exist only while the plane is on
+            # (same metric-tree freeze as the fleet/uplink keys above); the
+            # counts are 0 whenever the corresponding guard is not active
+            metrics["quarantined_clients"] = rb_info["quarantined_clients"]
+            metrics["suspected_adversaries"] = rb_info["suspected_adversaries"]
+            metrics["rounds_rejected"] = (jnp.float32(0.0) if rejected is None
+                                          else rejected)
         if tele_hist:
             # fixed-shape distribution summaries (obs.hist): hist_*-prefixed
             # [bins] counts — the train loop routes them to registry
@@ -325,6 +409,10 @@ def build_round_step(loss_fn: Callable,
                 metrics["hist_uplink_mbytes"] = obs_hist.fixed_histogram(
                     uplink_mbytes_per_slot(codec, state.params, meta.valid),
                     hist_edges["hist_uplink_mbytes"], weights=meta.valid)
+            if "hist_suspicion" in hist_edges:
+                metrics["hist_suspicion"] = obs_hist.fixed_histogram(
+                    rb_info["suspicion"], hist_edges["hist_suspicion"],
+                    weights=meta.valid)
         return state, metrics
 
     # the host side (train loop) pre-creates matching registry Histograms

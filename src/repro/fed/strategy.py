@@ -63,6 +63,8 @@ from .bucketing import scan_clients, vmap_clients
 from .comm import UPLINK_STATE_KEY, build_codec
 from .fleet import (FLEET_STATE_KEY, fleet_active, fleet_client_state,
                     staleness_weights, validate_fleet_config)
+from .robust import (build_robust_aggregate, robust_active,
+                     validate_robust_config)
 from .server import ServerState
 
 StrategyState = dict  # the server-side optimizer state (the ``opt`` dict)
@@ -552,6 +554,15 @@ class BoundStrategy(NamedTuple):
     codec: Any = None                  # bound fed.comm.Codec (None only for
     #                                      hand-built BoundStrategies: the round
     #                                      driver then skips the uplink entirely)
+    robust_aggregate: Callable | None = None  # (deltas, coeff, meta) ->
+    #                                      delta_agg — the robustness plane's
+    #                                      combiner over explicit coefficients
+    #                                      (fl.aggregator; "mean" == the
+    #                                      canonical weighted_sum).  The round
+    #                                      driver calls it only while the plane
+    #                                      is active; None (hand-built
+    #                                      strategies) falls back to
+    #                                      weighted_sum there.
 
 
 def weighted_sum(deltas, coeff: jnp.ndarray):
@@ -614,6 +625,10 @@ def bind_strategy(strategy: "FedStrategy | BoundStrategy | None", fl: FLConfig,
         # below: unknown fleet/fault names or bad parameters fail loudly at
         # bind time, not rounds deep into the virtual-clock simulation
         validate_fleet_config(fl)
+    if robust_active(fl):
+        # robustness-plane knobs (attack / aggregator / guard) likewise fail
+        # at bind time, not mid-adversarial-run
+        validate_robust_config(fl)
     if fl.engine == "cohort":
         # better a loud bind-time error than a first-round failure deep in the
         # prefetch thread: the engine knobs are all validated here
@@ -742,6 +757,13 @@ def bind_strategy(strategy: "FedStrategy | BoundStrategy | None", fl: FLConfig,
     def aggregate(deltas, meta):
         return weighted_sum(deltas, agg_coeffs(meta))
 
+    # the robustness plane's combiner: same coefficients (agg_coeffs stays
+    # THE weight primitive — staleness discounts and all), explicit so the
+    # round driver can renormalize them after a quarantine.  "mean" binds
+    # the canonical weighted_sum, so swapping aggregators never rescales
+    # the server step.
+    robust_aggregate = build_robust_aggregate(fl)
+
     return BoundStrategy(
         name=strategy.name,
         gen=gen,
@@ -758,6 +780,7 @@ def bind_strategy(strategy: "FedStrategy | BoundStrategy | None", fl: FLConfig,
         local_step=local_step,
         client_state=client_state,
         codec=codec,
+        robust_aggregate=robust_aggregate,
     )
 
 

@@ -163,6 +163,14 @@ def train(
                     # plot loss against (present only with the fleet plane on)
                     virtual_time += row["round_virtual_time"]
                     row["virtual_time"] = virtual_time
+                if "rounds_rejected" in row:
+                    # robustness-plane run totals (keys exist only while the
+                    # plane is on): quarantines and rejected rounds are rare
+                    # spikes, so the cumulative counters are what a summary
+                    # snapshot should report, not the last row's 0/1
+                    registry.counter("rounds_rejected").inc(row["rounds_rejected"])
+                    registry.counter("quarantined_clients").inc(
+                        row.get("quarantined_clients", 0.0))
                 if eval_fn is not None and (r % eval_every == 0 or r == rounds - 1):
                     with trace.span("round/eval", round=r):
                         row.update({f"eval_{k}": float(v)

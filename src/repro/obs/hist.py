@@ -25,8 +25,9 @@ Edge builders:
   (update norms, wire bytes).
 
 ``fed.rounds`` emits (gated on ``fl.telemetry``): ``hist_steps``,
-``hist_update_norm``, plus ``hist_staleness`` when the fleet plane is on
-and ``hist_uplink_mbytes`` under a non-identity codec.
+``hist_update_norm``, plus ``hist_staleness`` when the fleet plane is on,
+``hist_uplink_mbytes`` under a non-identity codec, and ``hist_suspicion``
+(update-norm / median-norm ratios) while the robustness plane is active.
 """
 from __future__ import annotations
 
@@ -99,7 +100,8 @@ def tree_sqnorm(tree) -> jnp.ndarray:
                for x in jax.tree.leaves(tree))
 
 
-def round_hist_edges(fl, *, with_staleness: bool, with_uplink: bool) -> dict:
+def round_hist_edges(fl, *, with_staleness: bool, with_uplink: bool,
+                     with_robust: bool = False) -> dict:
     """The static edge table for one configuration's round histograms.
 
     One definition shared by the jitted emitter (``fed.rounds``) and the
@@ -115,4 +117,9 @@ def round_hist_edges(fl, *, with_staleness: bool, with_uplink: bool) -> dict:
         edges["hist_staleness"] = pow2_edges(bins)
     if with_uplink:
         edges["hist_uplink_mbytes"] = log_edges(1e-6, 1e4, bins)
+    if with_robust:
+        # per-client update-norm / cohort-median-norm ratio (fed.robust):
+        # honest mass sits near 1, scaled attacks / diverged clients in the
+        # upper tail — the round's suspicion profile at a glance
+        edges["hist_suspicion"] = log_edges(1e-2, 1e3, bins)
     return edges

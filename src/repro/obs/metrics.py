@@ -252,10 +252,31 @@ class MetricRegistry:
     def instruments(self) -> dict:
         return dict(self._instruments)
 
+    def _drop_sink(self, sink, op: str, exc: Exception) -> None:
+        """Disable a failing sink: one warning, then it never runs again.
+
+        Telemetry must not kill training — a full disk or a removed
+        directory under a jsonl/csv sink raises out of ``emit``/``close``,
+        and letting that propagate would abort the train loop over a
+        logging problem.  The other sinks keep streaming."""
+        from ..utils.logging import warn  # deferred: utils.logging imports us
+
+        warn(f"metric sink failed during {op}; disabling it",
+             sink=type(sink).__name__, error=f"{type(exc).__name__}: {exc}")
+        if sink in self.sinks:
+            self.sinks.remove(sink)
+        try:
+            sink.close()
+        except Exception:
+            pass  # best-effort: the sink is already being dropped
+
     def emit_row(self, record: Mapping) -> None:
         rec = dict(record)
-        for sink in self.sinks:
-            sink.emit(rec)
+        for sink in list(self.sinks):
+            try:
+                sink.emit(rec)
+            except Exception as exc:
+                self._drop_sink(sink, "emit", exc)
 
     def snapshot(self) -> dict:
         out: dict = {"name": self.name, "counters": {}, "gauges": {},
@@ -274,5 +295,8 @@ class MetricRegistry:
             json.dump(self.snapshot(), f, indent=2, default=float)
 
     def close(self) -> None:
-        for sink in self.sinks:
-            sink.close()
+        for sink in list(self.sinks):
+            try:
+                sink.close()
+            except Exception as exc:
+                self._drop_sink(sink, "close", exc)

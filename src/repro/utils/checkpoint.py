@@ -18,6 +18,14 @@ from .pytree import tree_paths
 
 
 def save_checkpoint(path: str, tree, metadata: dict[str, Any] | None = None) -> None:
+    """Atomic save: a crash mid-save never tears an existing checkpoint.
+
+    Both files are fully written to tmp paths in the target directory and
+    then ``os.replace``-d over the real names — the json sidecar last, as
+    the commit marker (readers that see the new sidecar are guaranteed a
+    complete ``.npz`` next to it; a crash at any earlier point leaves the
+    previous pair byte-identical and loadable).
+    """
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = {}
     for key, leaf in tree_paths(tree):
@@ -25,10 +33,20 @@ def save_checkpoint(path: str, tree, metadata: dict[str, Any] | None = None) -> 
         if arr.dtype.kind == "V" or arr.dtype.name == "bfloat16":
             arr = arr.astype(np.float32)  # non-native dtypes stored widened
         flat[key] = arr
-    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    npz_path = path if path.endswith(".npz") else path + ".npz"
     meta_path = (path[:-4] if path.endswith(".npz") else path) + ".json"
-    with open(meta_path, "w") as f:
-        json.dump(metadata or {}, f, indent=2, default=str)
+    tmp_npz = npz_path + ".tmp.npz"     # np.savez appends .npz otherwise
+    tmp_meta = meta_path + ".tmp"
+    try:
+        np.savez(tmp_npz, **flat)
+        with open(tmp_meta, "w") as f:
+            json.dump(metadata or {}, f, indent=2, default=str)
+        os.replace(tmp_npz, npz_path)
+        os.replace(tmp_meta, meta_path)
+    finally:
+        for tmp in (tmp_npz, tmp_meta):
+            if os.path.exists(tmp):
+                os.remove(tmp)
 
 
 def load_checkpoint(path: str, template):

@@ -168,3 +168,82 @@ def test_resume_mid_training_is_bitwise(tmp_path):
     _assert_state_equal(full.opt, resumed.opt, "resume opt")
     _assert_state_equal(full.clients, resumed.clients, "resume state bank")
     assert int(full.rnd) == int(resumed.rnd) == 6
+
+
+# ---------------------------------------------------------------------------
+# Atomic writes: a crash mid-save must never tear an existing checkpoint
+# ---------------------------------------------------------------------------
+
+
+def test_atomic_save_crash_during_npz_write(tmp_path, monkeypatch):
+    """np.savez dies halfway (full disk, SIGKILL): the previous pair must
+    stay byte-identical and loadable, and no tmp litter remains."""
+    import repro.utils.checkpoint as ckpt_mod
+
+    path = os.path.join(tmp_path, "ckpt.npz")
+    old = {"a": jnp.arange(4, dtype=jnp.float32)}
+    save_checkpoint(path, old, {"round": 1})
+    raw = open(path, "rb").read()
+
+    def boom(fname, **kw):
+        with open(fname, "wb") as f:
+            f.write(b"partial garbage")
+        raise RuntimeError("simulated crash")
+
+    monkeypatch.setattr(ckpt_mod.np, "savez", boom)
+    with pytest.raises(RuntimeError, match="simulated crash"):
+        save_checkpoint(path, {"a": jnp.full(4, 7.0)}, {"round": 2})
+    assert open(path, "rb").read() == raw                 # npz untouched
+    restored = load_checkpoint(path, old)
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(old["a"]))
+    assert load_metadata(path)["round"] == 1              # sidecar untouched
+    assert sorted(os.listdir(tmp_path)) == ["ckpt.json", "ckpt.npz"]
+
+
+def test_atomic_save_crash_before_any_replace(tmp_path, monkeypatch):
+    """Both tmp files written but the first os.replace never ran: previous
+    pair intact, tmp files cleaned up."""
+    import repro.utils.checkpoint as ckpt_mod
+
+    path = os.path.join(tmp_path, "ckpt.npz")
+    old = {"a": jnp.zeros(3)}
+    save_checkpoint(path, old, {"round": 5})
+
+    def boom(src, dst):
+        raise RuntimeError("simulated crash")
+
+    monkeypatch.setattr(ckpt_mod.os, "replace", boom)
+    with pytest.raises(RuntimeError, match="simulated crash"):
+        save_checkpoint(path, {"a": jnp.ones(3)}, {"round": 6})
+    restored = load_checkpoint(path, old)
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.zeros(3))
+    assert load_metadata(path)["round"] == 5
+    assert sorted(os.listdir(tmp_path)) == ["ckpt.json", "ckpt.npz"]
+
+
+def test_atomic_save_json_sidecar_is_commit_marker(tmp_path, monkeypatch):
+    """Crash between the two replaces: the npz is new but the sidecar is the
+    OLD round — readers keying off the sidecar see a consistent (complete)
+    npz next to whatever round it names, never a torn file."""
+    import repro.utils.checkpoint as ckpt_mod
+
+    path = os.path.join(tmp_path, "ckpt.npz")
+    save_checkpoint(path, {"a": jnp.zeros(2)}, {"round": 1})
+    real_replace, calls = ckpt_mod.os.replace, []
+
+    def boom_second(src, dst):
+        calls.append(dst)
+        if len(calls) == 2:
+            raise RuntimeError("simulated crash")
+        return real_replace(src, dst)
+
+    monkeypatch.setattr(ckpt_mod.os, "replace", boom_second)
+    with pytest.raises(RuntimeError, match="simulated crash"):
+        save_checkpoint(path, {"a": jnp.ones(2)}, {"round": 2})
+    monkeypatch.setattr(ckpt_mod.os, "replace", real_replace)
+    # npz committed (complete, loadable), sidecar still names round 1
+    restored = load_checkpoint(path, {"a": jnp.ones(2)})
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.ones(2))
+    assert load_metadata(path)["round"] == 1
+    assert sorted(os.listdir(tmp_path)) == ["ckpt.json", "ckpt.npz"]

@@ -374,3 +374,84 @@ def test_bind_strategy_validates_telemetry():
         FLConfig(num_clients=4, cohort_size=2), telemetry="everything")
     with pytest.raises(ValueError, match="unknown telemetry mode"):
         bind_strategy(None, fl, make_quadratic_loss(4), num_clients=4)
+
+
+# ---------------------------------------------------------------------------
+# Sink failure isolation: telemetry IO must never kill training
+# ---------------------------------------------------------------------------
+
+
+class _BoomSink:
+    """Raises from emit after ``ok_rows`` successes (and from close)."""
+
+    def __init__(self, ok_rows=0):
+        self.ok_rows = ok_rows
+        self.emitted = 0
+        self.closed = False
+
+    def emit(self, record):
+        if self.emitted >= self.ok_rows:
+            raise OSError("disk full")
+        self.emitted += 1
+
+    def close(self):
+        self.closed = True
+        raise OSError("disk full")
+
+
+def test_failing_sink_is_disabled_not_fatal(capsys):
+    from repro.utils.logging import set_log_level
+
+    mem = obs_metrics.InMemorySink()
+    boom = _BoomSink(ok_rows=1)
+    reg = obs_metrics.MetricRegistry("t", sinks=[boom, mem])
+    try:
+        set_log_level("warn")
+        reg.emit_row({"round": 0})            # boom succeeds once
+        reg.emit_row({"round": 1})            # boom raises -> dropped
+        reg.emit_row({"round": 2})            # boom must not run again
+        err = capsys.readouterr().err
+    finally:
+        set_log_level(None)
+    assert err.count("metric sink failed") == 1       # exactly one warning
+    assert "OSError" in err and "_BoomSink" in err
+    assert boom.emitted == 1 and boom.closed          # best-effort close ran
+    assert reg.sinks == [mem]                         # healthy sink survives
+    assert [r["round"] for r in mem.records] == [0, 1, 2]
+
+
+def test_failing_sink_close_is_disabled_not_fatal(capsys):
+    from repro.utils.logging import set_log_level
+
+    mem = obs_metrics.InMemorySink()
+    reg = obs_metrics.MetricRegistry("t", sinks=[_BoomSink(ok_rows=0), mem])
+    try:
+        set_log_level("warn")
+        reg.close()                                   # BoomSink.close raises
+        err = capsys.readouterr().err
+    finally:
+        set_log_level(None)
+    assert err.count("metric sink failed") == 1
+    assert reg.sinks == [mem]                         # only the bad one dropped
+
+
+def test_train_loop_survives_failing_sink():
+    """End-to-end: a sink dying mid-run costs its rows, not the run."""
+    from repro.configs.base import FLConfig
+    from repro.data.federated import FederatedPipeline, Population
+    from repro.data.tasks import DuplicatedQuadraticTask
+    from repro.fed.losses import make_quadratic_loss
+    from repro.fed.train_loop import train
+
+    task = DuplicatedQuadraticTask(copies=(1, 2, 3))
+    fl = FLConfig(num_clients=3, cohort_size=2, sampling="uniform", epochs=1,
+                  local_batch=1, algorithm="fedavg", local_lr=0.05, seed=3)
+    pipe = FederatedPipeline(task, Population.build(fl, sizes=task.sizes()), fl)
+    res = train(make_quadratic_loss(3), {"x": jnp.zeros(3)}, pipe, fl, 3,
+                log_every=0)
+    reg = res.registry
+    reg.add_sink(_BoomSink(ok_rows=0))
+    n = len(reg.sinks)
+    reg.emit_row({"round": 99})                       # would have raised
+    assert len(reg.sinks) == n - 1                    # only the bad one gone
+    assert [r["round"] for r in res.metrics.rows[:3]] == [0, 1, 2]

@@ -1,0 +1,263 @@
+"""Robustness-plane equivalence.
+
+* ``attack="none"`` + ``aggregator="mean"`` + ``guard="off"`` is the frozen
+  bitwise contract: the round must reproduce the pre-robustness seed math
+  EXACTLY — ServerState and metrics, with no robust keys leaking into the
+  metric tree — across presets x cohort modes x {padded, bucketed}.
+* Active robust configurations hold the layout contract instead: every
+  cross-client estimator runs on the reassembled slot-order ``[C]`` stack,
+  so padded == bucketed and legacy host path == cohort engine (prefetch ON)
+  bitwise — adversary draws are (seed, client)-stateless and attack noise is
+  (seed, client, round)-stateless, so where a round is produced cannot
+  matter.
+* Round-level guard behavior: quarantine removes a poisoned client without
+  changing the step scale; the reject guard keeps the previous params when a
+  round blows up, while the round counter still advances (skipped, not
+  replayed).
+
+The per-push CI shard runs a reduced preset grid; the nightly workflow sets
+``FEDSHUFFLE_FULL_GRID=1`` to sweep every registered preset.
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.configs.base import FLConfig
+from repro.core.algorithms import PRESETS
+from repro.data.federated import FederatedPipeline, Population
+from repro.data.tasks import DuplicatedQuadraticTask
+from repro.fed.cohort import CohortEngine
+from repro.fed.losses import make_quadratic_loss
+from repro.fed.robust import ROBUST_AGGS
+from repro.fed.rounds import as_device_batch, build_round_step, jit_round_step
+from repro.fed.strategy import bind_strategy, strategy_for
+
+from test_strategy_equivalence import (_seed_build_round_step,
+                                       _seed_init_server)
+
+TASK = DuplicatedQuadraticTask(copies=(1, 2, 3))
+LOSS = make_quadratic_loss(3)
+N_ROUNDS = 3
+P0 = {"x": jnp.array([0.3, -0.1, 0.2], jnp.float32)}
+
+GRID_PRESETS = (sorted(PRESETS) if os.environ.get("FEDSHUFFLE_FULL_GRID")
+                else ["fedshuffle", "fednova", "fedavg_min"])
+
+BASE_KEYS = {"local_loss", "delta_norm", "cohort"}
+ROBUST_KEYS = {"quarantined_clients", "suspected_adversaries",
+               "rounds_rejected"}
+
+# an under-attack configuration exercising attack + estimator + both guards
+UNDER_ATTACK = dict(attack="sign_flip", attack_frac=0.4, attack_scale=5.0,
+                    aggregator="trimmed_mean", trim_frac=0.3, guard="full")
+
+
+def _fl(preset="fedshuffle", mode="vmapped", **kw):
+    kw.setdefault("seed", 11)
+    kw.setdefault("server_lr", 0.8)
+    return FLConfig(num_clients=3, cohort_size=2, sampling="uniform", epochs=2,
+                    local_batch=1, algorithm=preset, local_lr=0.05,
+                    mvr_a=0.2, cohort_mode=mode,
+                    drop_last_steps=1, buckets=2, **kw)
+
+
+def _assert_tree_equal(a, b, what):
+    assert jax.tree.structure(a) == jax.tree.structure(b), what
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y), err_msg=what)
+
+
+def _run_legacy(fl, rounds=N_ROUNDS, collect=False):
+    pipe = FederatedPipeline(TASK, Population.build(fl, sizes=TASK.sizes()), fl)
+    strat = bind_strategy(strategy_for(fl), fl, LOSS, num_clients=fl.num_clients)
+    step = build_round_step(LOSS, strat, fl, num_clients=fl.num_clients)
+    state = strat.init(P0)
+    rows = []
+    for r in range(rounds):
+        state, mets = step(state, as_device_batch(pipe.round_batch(r)))
+        if collect:
+            rows.append({k: float(v) for k, v in mets.items()})
+    return (state, rows) if collect else (state, mets)
+
+
+def _run_engine(fl, rounds=N_ROUNDS, prefetch=2):
+    pop = Population.build(fl, sizes=TASK.sizes())
+    eng = CohortEngine.build(TASK, pop, fl)
+    strat = bind_strategy(strategy_for(fl), fl, LOSS, num_clients=fl.num_clients)
+    step = build_round_step(LOSS, strat, fl, num_clients=fl.num_clients,
+                            plane=eng.plane)
+    state = strat.init(P0)
+    with eng.round_plans(rounds, prefetch=prefetch) as it:
+        for r, plan in it:
+            state, mets = step(state, plan)
+    return state, mets
+
+
+# ---------------------------------------------------------------------------
+# the frozen off-path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["vmapped", "sequential"])
+@pytest.mark.parametrize("exec_mode", ["padded", "bucketed"])
+def test_robust_off_matches_seed_bitwise(mode, exec_mode):
+    """The plane-off default vs the frozen pre-robustness seed: same
+    ServerState, same metric tree (no robust keys leak), every grid preset."""
+    for preset in GRID_PRESETS:
+        fl = _fl(preset, mode, exec_mode=exec_mode)
+        assert (fl.attack, fl.aggregator, fl.guard) == ("none", "mean", "off")
+        fl_seed = dataclasses.replace(fl, exec_mode="padded")
+        pipe = FederatedPipeline(
+            TASK, Population.build(fl_seed, sizes=TASK.sizes()), fl_seed)
+        seed_step = _seed_build_round_step(LOSS, fl_seed,
+                                           num_clients=fl.num_clients)
+        seed_state = _seed_init_server(fl_seed, P0)
+        for r in range(N_ROUNDS):
+            seed_state, seed_mets = seed_step(
+                seed_state, as_device_batch(pipe.round_batch(r)))
+        state, mets = _run_legacy(fl)
+        tag = f"{preset}/{mode}/{exec_mode}"
+        assert set(mets) == BASE_KEYS, tag
+        _assert_tree_equal(seed_state.params, state.params, f"{tag}: params")
+        _assert_tree_equal(seed_state.opt, state.opt, f"{tag}: opt")
+        _assert_tree_equal(seed_mets, mets, f"{tag}: metrics")
+
+
+def test_robust_metric_keys_frozen():
+    """Exactly the three plane keys appear when the plane is on — and only
+    then (the off-path assertion lives in the seed test above)."""
+    _, mets = _run_legacy(_fl("fedshuffle", "vmapped", **UNDER_ATTACK))
+    assert set(mets) == BASE_KEYS | ROBUST_KEYS
+    # a lone non-default aggregator also activates the plane's keys
+    _, mets = _run_legacy(_fl("fedshuffle", "vmapped",
+                              aggregator="coordinate_median"))
+    assert set(mets) == BASE_KEYS | ROBUST_KEYS
+    assert float(mets["quarantined_clients"]) == 0.0     # guard off
+    assert float(mets["rounds_rejected"]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# layout / producer equivalence with the plane active
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("aggregator",
+                         sorted(set(ROBUST_AGGS) - {"mean"}))
+@pytest.mark.parametrize("mode", ["vmapped", "sequential"])
+def test_robust_agg_padded_matches_bucketed_bitwise(aggregator, mode):
+    """Every estimator consumes the reassembled slot-order stack, so the
+    bucketed layout must reproduce the padded rounds bitwise."""
+    kw = dict(attack="sign_flip", attack_frac=0.4, attack_scale=5.0,
+              aggregator=aggregator, trim_frac=0.3, guard="quarantine")
+    sp, mp = _run_legacy(_fl("fedshuffle", mode, exec_mode="padded", **kw))
+    sb, mb = _run_legacy(_fl("fedshuffle", mode, exec_mode="bucketed", **kw))
+    tag = f"robust/{aggregator}/{mode}"
+    _assert_tree_equal(sp.params, sb.params, f"{tag}: params")
+    _assert_tree_equal(sp.opt, sb.opt, f"{tag}: opt")
+    _assert_tree_equal(mp, mb, f"{tag}: metrics")
+
+
+@pytest.mark.parametrize("exec_mode", ["padded", "bucketed"])
+def test_robust_engine_matches_legacy_bitwise(exec_mode):
+    """Adversary membership and attack noise are counter-based, so the
+    cohort engine (prefetch thread ON) must realize the identical
+    under-attack trajectory."""
+    fl = _fl("fedshuffle", "vmapped", exec_mode=exec_mode, engine="cohort",
+             **UNDER_ATTACK)
+    ls, lm = _run_legacy(fl)
+    es, em = _run_engine(fl)
+    tag = f"robust-engine/{exec_mode}"
+    _assert_tree_equal(ls.params, es.params, f"{tag}: params")
+    _assert_tree_equal(ls.opt, es.opt, f"{tag}: opt")
+    _assert_tree_equal(lm, em, f"{tag}: metrics")
+
+
+def test_robust_composes_with_codec_and_buffered_fleet():
+    """attack -> encode -> decode -> quarantine -> robust estimator over
+    staleness-discounted coefficients: the full stack, still layout-equal."""
+    kw = dict(uplink="qsgd", uplink_bits=8,
+              fleet="zipf_latency", server_mode="buffered", buffer_size=2,
+              staleness="poly", staleness_power=0.5, **UNDER_ATTACK)
+    sp, mp = _run_legacy(_fl("fedshuffle", "vmapped", exec_mode="padded", **kw))
+    sb, mb = _run_legacy(_fl("fedshuffle", "vmapped", exec_mode="bucketed", **kw))
+    _assert_tree_equal(sp.params, sb.params, "stack: params")
+    _assert_tree_equal(mp, mb, "stack: metrics")
+    _assert_tree_equal(sp.clients, sb.clients, "stack: bank")
+    for key in ROBUST_KEYS | {"mean_staleness", "uplink_mbytes"}:
+        assert key in mb, key
+
+
+def test_robust_telemetry_histogram_and_counters():
+    """fl.telemetry="metrics" adds the suspicion histogram next to the
+    plane's scalars; the train loop folds it into a registry instrument and
+    accumulates the run-total counters."""
+    from repro.fed.train_loop import train
+
+    fl = _fl("fedshuffle", "vmapped", telemetry="metrics", **UNDER_ATTACK)
+    pipe = FederatedPipeline(TASK, Population.build(fl, sizes=TASK.sizes()), fl)
+    res = train(LOSS, P0, pipe, fl, N_ROUNDS, log_every=0)
+    insts = res.registry.instruments()
+    assert insts["hist_suspicion"].total == N_ROUNDS * fl.cohort_size
+    assert insts["rounds_rejected"].value == sum(
+        r["rounds_rejected"] for r in res.metrics.rows)
+    assert insts["quarantined_clients"].value == sum(
+        r["quarantined_clients"] for r in res.metrics.rows)
+
+
+# ---------------------------------------------------------------------------
+# round-level guard behavior
+# ---------------------------------------------------------------------------
+
+
+def test_quarantine_heals_scaled_attack_round():
+    """A hugely-scaled sign flip trips the norm-spike quarantine: the
+    adversary's slot is removed in-round and the trajectory matches the same
+    run with the adversary's arrival simply carrying no weight."""
+    # seed 7 draws exactly one adversary out of the 3-client population at
+    # this frac — a proper minority for the median-based spike detector
+    kw = dict(attack="sign_flip", attack_frac=0.35, attack_scale=200.0,
+              guard="quarantine", seed=7)
+    _, rows = _run_legacy(_fl("fedshuffle", "vmapped", **kw), collect=True)
+    assert sum(r["quarantined_clients"] for r in rows) > 0
+    assert all(r["suspected_adversaries"] == r["quarantined_clients"]
+               for r in rows)                        # finite attack: all spikes
+
+
+def test_reject_guard_skips_blown_round_and_advances():
+    """With everyone adversarial at a catastrophic scale and no robust
+    estimator, the divergence guard must reject every round: params stay at
+    their initial values while ``rnd`` still advances."""
+    kw = dict(attack="sign_flip", attack_frac=0.99, attack_scale=1e8,
+              aggregator="mean", guard="reject")
+    state, rows = _run_legacy(_fl("fedshuffle", "vmapped", server_lr=1.0, **kw),
+                              collect=True)
+    assert all(r["rounds_rejected"] == 1.0 for r in rows)
+    _assert_tree_equal(state.params, P0, "rejected params revert")
+    assert int(state.rnd) == N_ROUNDS                # skipped, not replayed
+    assert np.all(np.isfinite(np.asarray(state.params["x"])))
+    # sanity: the same run without the guard really does blow up
+    state_ng, _ = _run_legacy(_fl("fedshuffle", "vmapped", server_lr=1.0,
+                                  **{**kw, "guard": "off"}))
+    assert float(jnp.abs(state_ng.params["x"]).max()) > 1e3
+
+
+def test_single_compilation_robust():
+    """Rotating cohorts under attack + quarantine + reject + a sorted-scan
+    estimator must reuse ONE compiled executable."""
+    fl = _fl("fedshuffle", "vmapped", engine="cohort",
+             rr_backend="device_ref", **UNDER_ATTACK)
+    pop = Population.build(fl, sizes=TASK.sizes())
+    eng = CohortEngine.build(TASK, pop, fl)
+    strat = bind_strategy(strategy_for(fl), fl, LOSS, num_clients=fl.num_clients)
+    step = jit_round_step(build_round_step(LOSS, strat, fl,
+                                           num_clients=fl.num_clients,
+                                           plane=eng.plane), donate=False)
+    state = strat.init(P0)
+    with obs.compile_guard(step):
+        for r in range(4):
+            state, _ = step(state, eng.device_plan(r))
