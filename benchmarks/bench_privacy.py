@@ -1,0 +1,167 @@
+"""Privacy-plane benchmark: DP + secagg round throughput and cancellation.
+
+For population sizes 1e3 / 1e5 / 1e6 (the cohort scenario's quadratic task,
+engine + prefetch at depth 2) measures rounds/sec of the same round loop
+under each privacy arm:
+
+* ``off``        — the frozen plane-off default (the reference)
+* ``dp``         — per-client L2 clip + counter-based server Gaussian noise
+* ``dp_secagg``  — dp plus pairwise-mask modular aggregation (the masks are
+  the O(C^2 n) term — the arm that would regress first)
+
+plus one *quality* arm (population-independent, run once): a masked
+trajectory must land within the fixed-point grid of the plane-off
+trajectory (cancellation), while differing from it at all (proof the masked
+path actually ran).
+
+Writes ``BENCH_privacy.json`` at the repo root (committed baseline) and
+``benchmarks/results/bench_privacy.csv``; ``--quick`` writes
+``results/bench_privacy_quick.{csv,json}`` for ``benchmarks.check_regression``.
+``--check`` asserts the acceptance bars: both privacy arms keep >= 50% of
+the plane-off rounds/sec, each arm compiles exactly once, and the
+cancellation contract holds.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.federated import FederatedPipeline, Population
+from repro.data.tasks import DuplicatedQuadraticTask, PopulationQuadraticTask
+from repro.fed.cohort import CohortEngine
+from repro.fed.losses import make_quadratic_loss
+from repro.fed.rounds import (as_device_batch, build_round_step,
+                              jit_round_step)
+from repro.fed.strategy import bind_strategy, strategy_for
+from repro.obs import cache_size
+
+from .bench_cohort import COHORT, DIM, SAMPLES, _fl, _time_engine, _write_scenario
+from .common import csv_row
+
+PRIVACY_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_privacy.json")
+
+# knobs per arm: noise small enough that the timed trajectory stays finite
+DP_KW = dict(dp="on", dp_clip=0.5, dp_noise_mult=0.5)
+ARMS = (("off", {}),
+        ("dp", DP_KW),
+        ("dp_secagg", dict(secagg="pairwise", secagg_bits=16, **DP_KW)))
+
+REPEATS = 3
+
+# the quality arm's fleet (mirrors tests/test_privacy_equivalence.py)
+Q_CLIENTS, Q_ROUNDS, Q_SEED, Q_BITS = 6, 100, 2, 16
+
+
+def bench_privacy_population(pop: int, rounds: int) -> dict:
+    task = PopulationQuadraticTask(dim=DIM, num_clients=pop,
+                                   samples_per_client=SAMPLES)
+    sizes = task.sizes()
+    loss = make_quadratic_loss(DIM)
+    params = {"x": jnp.zeros(DIM)}
+    out: dict = {}
+    for arm, kw in ARMS:
+        fl = _fl(pop, engine="cohort", rr_backend="device_ref", prefetch=2, **kw)
+        eng = CohortEngine.build(task, Population.build(fl, sizes=sizes), fl)
+        strat = bind_strategy(strategy_for(fl), fl, loss, num_clients=pop)
+        step = jit_round_step(build_round_step(loss, strat, fl, num_clients=pop,
+                                               plane=eng.plane), donate=True)
+        # best-of-REPEATS: the mechanism cost is deterministic per round, so
+        # the max rps is the noise-robust estimate (state rebuilt per repeat:
+        # the step donates its ServerState buffers)
+        rps = []
+        for _ in range(REPEATS):
+            st = strat.init(params)
+            st, _ = step(st, eng.device_plan(0))        # compile (cached)
+            jax.block_until_ready(st.params)
+            rps.append(_time_engine(eng, step, st, rounds, 2))
+        out[arm] = max(rps)
+        # rotating cohorts must never leak a shape into the traced round
+        out["compilations"] = max(out.get("compilations", 0), cache_size(step))
+    out["dp_vs_off"] = out["dp"] / out["off"]
+    out["dp_secagg_vs_off"] = out["dp_secagg"] / out["off"]
+    return out
+
+
+def _quality_run(loss_fn, task, **privacy_kw):
+    from repro.configs.base import FLConfig
+
+    fl = FLConfig(num_clients=Q_CLIENTS, cohort_size=Q_CLIENTS,
+                  sampling="full", epochs=1, local_batch=1,
+                  algorithm="fedshuffle", local_lr=0.05, server_opt="sgd",
+                  seed=Q_SEED, **privacy_kw)
+    pipe = FederatedPipeline(task, Population.build(fl, sizes=task.sizes()), fl)
+    strat = bind_strategy(strategy_for(fl), fl, loss_fn,
+                          num_clients=Q_CLIENTS)
+    state = strat.init({"x": jnp.zeros(Q_CLIENTS)})
+    step = jax.jit(build_round_step(loss_fn, strat, fl,
+                                    num_clients=Q_CLIENTS))
+    for r in range(Q_ROUNDS):
+        state, _ = step(state, as_device_batch(pipe.round_batch(r)))
+    return np.asarray(state.params["x"])
+
+
+def bench_secagg_cancellation() -> dict:
+    """Masked vs plane-off trajectory after Q_ROUNDS: the drift must sit
+    inside the fixed-point grid (masks cancel) and be nonzero (masks ran)."""
+    task = DuplicatedQuadraticTask(copies=(1,) * Q_CLIENTS)
+    loss_fn = make_quadratic_loss(Q_CLIENTS)
+    x_off = _quality_run(loss_fn, task)
+    x_sa = _quality_run(loss_fn, task, secagg="pairwise", secagg_bits=Q_BITS)
+    err = float(np.abs(x_sa - x_off).max())
+    # per-round quantization <= cohort * 2^-bits; loose linear-growth bound
+    bound = Q_ROUNDS * Q_CLIENTS * 2.0 ** -Q_BITS
+    return {"masked_vs_off_max_err": err, "err_bound": bound,
+            "within_quantization": bool(0.0 < err <= bound)}
+
+
+def main_privacy(pops=(1_000, 100_000, 1_000_000), rounds: int = 60,
+                 check: bool = False, quick: bool = False) -> list[str]:
+    rows = []
+    results: dict = {"dim": DIM, "cohort": COHORT, "local_batch": 2, "epochs": 2,
+                     "samples_per_client": SAMPLES, "rounds_timed": rounds,
+                     "populations": {}}
+    for pop in pops:
+        res = bench_privacy_population(pop, rounds)
+        results["populations"][str(pop)] = res
+        for arm, _ in ARMS:
+            rows.append(csv_row(f"privacy/{pop}/{arm}", 1.0 / res[arm],
+                                f"{res[arm]:.1f}rps"))
+        print(f"pop={pop}: " + ", ".join(f"{k}={v:.3f}" if isinstance(v, float)
+                                         else f"{k}={v}" for k, v in res.items()))
+        if check:
+            # acceptance bar: the privacy arms cost <= half the round
+            # throughput of the frozen off-path, and never recompile
+            for key in ("dp_vs_off", "dp_secagg_vs_off"):
+                assert res[key] >= 0.5, (pop, key, res)
+            assert res["compilations"] == 1, (pop, res)
+    quality = bench_secagg_cancellation()
+    results["quality"] = quality
+    rows.append(csv_row("privacy/quality/masked_vs_off_max_err",
+                        quality["masked_vs_off_max_err"],
+                        f"bound={quality['err_bound']:.2e}"))
+    print("quality: " + ", ".join(f"{k}={v:.4g}" if isinstance(v, float)
+                                  else f"{k}={v}" for k, v in quality.items()))
+    if check:
+        assert quality["within_quantization"], quality
+    return _write_scenario(results, rows, PRIVACY_PATH, "bench_privacy", quick)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small populations / few rounds (CI smoke)")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--check", action="store_true",
+                    help="assert the >= 0.5x throughput floors, one compile "
+                         "per arm, and the cancellation contract")
+    args = ap.parse_args()
+    pops = (1_000, 10_000) if args.quick else (1_000, 100_000, 1_000_000)
+    rounds = args.rounds or (15 if args.quick else 60)
+    print("name,us_per_call,derived")
+    for row in main_privacy(pops=pops, rounds=rounds, check=args.check,
+                            quick=args.quick):
+        print(row)

@@ -19,6 +19,8 @@ box), so the gate checks the *ratio* metrics each scenario was built around:
                instrumentation also held to the hard >= 0.9 floor)
 * robust     — robust-aggregator / mean throughput retention (median,
                trimmed_mean, krum — each also held to the hard >= 0.5 floor)
+* privacy    — dp and dp+secagg arm / plane-off throughput retention (each
+               also held to the hard >= 0.5 floor)
 
 A quick-run ratio below ``tolerance * baseline`` (default 0.5 — generous,
 sized for runner jitter, not for architectural regressions: an O(N) scatter
@@ -58,6 +60,7 @@ SCENARIOS: dict[str, tuple[str, tuple[str, ...]]] = {
             ("metrics_vs_off", "trace_vs_off", "instrumented_vs_off")),
     "robust": ("BENCH_robust.json",
                ("median_vs_mean", "trimmed_mean_vs_mean", "krum_vs_mean")),
+    "privacy": ("BENCH_privacy.json", ("dp_vs_off", "dp_secagg_vs_off")),
 }
 
 # acceptance floors that hold regardless of the baseline (the committed bar)
@@ -68,7 +71,10 @@ HARD_FLOORS = {"ratio_qsgd": 4.0, "ratio_topk": 4.0, "ratio_randk": 4.0,
                # robust estimators may cost at most half the mean arm's
                # round throughput (sorted scans / bit-search scoring)
                "median_vs_mean": 0.5, "trimmed_mean_vs_mean": 0.5,
-               "krum_vs_mean": 0.5}
+               "krum_vs_mean": 0.5,
+               # dp clip+noise and the O(C^2 n) pairwise masks may cost at
+               # most half the plane-off round throughput
+               "dp_vs_off": 0.5, "dp_secagg_vs_off": 0.5}
 
 
 def check_scenario(name: str, tolerance: float) -> list[str]:

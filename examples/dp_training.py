@@ -1,0 +1,71 @@
+"""DP-FedShuffle end to end: the privacy/utility trade-off on one screen.
+
+Trains the duplicated-quadratic task at three Gaussian noise multipliers
+(plus a non-private baseline) and prints, per run, the RDP accountant's
+cumulative eps(delta) next to the final evaluation loss — the curve every
+DP paper plots, reproduced in a few seconds on CPU:
+
+    PYTHONPATH=src python examples/dp_training.py
+
+Also demonstrated: the clipping telemetry (``dp_clipped_frac`` — how often
+the per-client L2 bound actually bites) and the secure-aggregation layer
+composing with DP (``secagg="pairwise"``: the server only ever sees the
+blinded modular sum, and the trajectory is unchanged up to the fixed-point
+grid).
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.data.federated import FederatedPipeline, Population
+from repro.data.tasks import DuplicatedQuadraticTask
+from repro.fed.losses import make_quadratic_loss
+from repro.fed.train_loop import train
+
+ROUNDS = 300
+TASK = DuplicatedQuadraticTask(copies=(1, 2, 3))
+LOSS = make_quadratic_loss(3)
+
+
+def run(noise_mult, secagg="off"):
+    dp = dict(dp="on", dp_clip=0.05, dp_noise_mult=noise_mult,
+              dp_delta=1e-5) if noise_mult else {}
+    fl = FLConfig(num_clients=3, cohort_size=2, sampling="uniform", epochs=2,
+                  local_batch=1, algorithm="fedshuffle", local_lr=0.05,
+                  server_lr=0.5, seed=3, secagg=secagg, **dp)
+    pipe = FederatedPipeline(TASK, Population.build(fl, sizes=TASK.sizes()), fl)
+    x_star = jnp.asarray(TASK.optimum(), jnp.float32)
+
+    def eval_fn(params):
+        return {"dist": float(jnp.linalg.norm(params["x"] - x_star))}
+
+    res = train(LOSS, {"x": jnp.zeros(3, jnp.float32)}, pipe, fl, ROUNDS,
+                eval_fn=eval_fn, eval_every=ROUNDS, log_every=0,
+                name=f"dp z={noise_mult}")
+    last = res.metrics.rows[-1]
+    clipped = float(np.mean([r.get("dp_clipped_frac", 0.0)
+                             for r in res.metrics.rows]))
+    return (last.get("dp_epsilon", float("inf")), last["eval_dist"], clipped)
+
+
+def main():
+    print(f"{ROUNDS} rounds, 2/3 clients per round, delta=1e-5\n")
+    print(f"{'mechanism':28s} {'eps':>10s} {'|x - x*|':>10s} {'clip freq':>10s}")
+    eps, dist, _ = run(None)
+    print(f"{'non-private baseline':28s} {'inf':>10s} {dist:10.4f} {'-':>10s}")
+    for z in (0.5, 1.0, 2.0):
+        eps, dist, clipped = run(z)
+        print(f"{f'dp  z={z}':28s} {eps:10.2f} {dist:10.4f} {clipped:10.2f}")
+    eps, dist, clipped = run(1.0, secagg="pairwise")
+    print(f"{'dp  z=1.0 + secagg':28s} {eps:10.2f} {dist:10.4f} {clipped:10.2f}")
+    print("\nsmaller eps = stronger privacy; the noise it costs shows up as "
+          "distance-to-optimum — pick z where the curve bends.")
+
+
+if __name__ == "__main__":
+    main()

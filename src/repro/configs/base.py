@@ -274,6 +274,28 @@ Telemetry = Literal["off", "metrics", "trace", "full"]
 #                  state updates (the round counter still advances)
 #   "full"       — both
 Guard = Literal["off", "quarantine", "reject", "full"]
+# Privacy plane (repro.fed.privacy).  The defaults (dp="off", secagg="off")
+# keep the plane fully off — bitwise-frozen (identical jaxpr, zero new metric
+# keys).  DP-FedShuffle mechanism (dp="on"):
+#   each shipped client update is L2-clipped to dp_clip (exact sensitivity
+#   bound), and Gaussian noise with sigma = dp_noise_mult * dp_clip *
+#   max_i |coeff_i| is added in-jit to the weighted aggregate — drawn
+#   counter-based per (seed, round) off the rr_perm hash chain, so legacy /
+#   engine / prefetch / resumed runs replay identical noise.  The host-side
+#   RDP accountant (privacy/accountant.py) converts (dp_noise_mult, the
+#   participation schedule's sampling rate, round count) into cumulative
+#   eps(dp_delta), reported as the "dp_epsilon" metric.
+# Secure-aggregation simulation (secagg="pairwise"):
+#   client payloads are fixed-point-encoded (secagg_bits fractional bits,
+#   uint32 modular domain — composing with uplink quantization, which runs
+#   first) and blinded with seeded pairwise antisymmetric masks
+#   (mask(i,j) = -mask(j,i) mod 2^32, keys off the hash chain), so a single
+#   wire payload is individually uninformative while masks cancel EXACTLY in
+#   the modular sum; fleet-dropped clients' mask shares are reconstructed
+#   and subtracted (dropout recovery).  Requires aggregator="mean" and no
+#   per-client quarantine guard — the server only ever sees the blinded sum.
+DP = Literal["off", "on"]
+Secagg = Literal["off", "pairwise"]
 
 
 @dataclass(frozen=True)
@@ -353,6 +375,16 @@ class FLConfig:
     aggregator: str = "mean"       # server combiner (key into robust.ROBUST_AGGS)
     trim_frac: float = 0.1         # trimmed_mean/krum breakdown parameter (0, 0.5)
     guard: Guard = "off"           # self-healing guards (quarantine/reject/full)
+    # privacy plane (per-client DP clipping + server Gaussian noise + RDP
+    # accountant + secure-aggregation simulation; see the DP/Secagg note
+    # above and repro.fed.privacy) — the defaults keep the plane bitwise-
+    # frozen off
+    dp: DP = "off"                 # DP-FedShuffle mechanism (clip + noise + eps)
+    dp_clip: float = 1.0           # per-update L2 clip bound (DP sensitivity C)
+    dp_noise_mult: float = 1.0     # noise multiplier z: sigma = z * sensitivity
+    dp_delta: float = 1e-5         # target delta for the eps(delta) report
+    secagg: Secagg = "off"         # pairwise-mask secure-aggregation simulation
+    secagg_bits: int = 16          # fixed-point fractional bits (1..30)
     # system heterogeneity (Fig. 4): every client is cut short by this many
     # local steps (planned vs actual); the "gen" hybrid algorithm corrects it
     drop_last_steps: int = 0

@@ -157,8 +157,13 @@ class ClientTransform(NamedTuple):
     ``client_init(params)`` returns one client's state template (the round
     driver banks it ``[N+1, ...]`` on ``ServerState.clients``) and
     ``finalize(end: RoundEnd, carry, cstate) -> cstate'`` commits the round's
-    update.  ``needs`` lists server opt-state keys the transform reads
-    (``bind_strategy`` refuses server opts that do not provide them).
+    update.  ``finalize_delta(end: RoundEnd, delta) -> delta'`` rewrites the
+    *shipped* update after the local steps finish (e.g. the privacy plane's
+    per-client DP clip); ``end.delta`` stays the raw local delta, hooks apply
+    in chain order, and a chain with no ``finalize_delta`` hooks adds zero
+    ops (the bitwise off-contract).  ``needs`` lists server opt-state keys
+    the transform reads (``bind_strategy`` refuses server opts that do not
+    provide them).
     """
 
     name: str
@@ -167,6 +172,7 @@ class ClientTransform(NamedTuple):
     client_init: Callable | None = None
     finalize: Callable | None = None
     needs: tuple = ()
+    finalize_delta: Callable | None = None
 
 
 class ClientChain(NamedTuple):
@@ -268,13 +274,18 @@ def build_local_step(transforms: tuple, loss_fn: Callable) -> Callable:
         denom = jnp.maximum(step_mask.sum(), 1.0)
         delta = tree_sub(y, params)
         new_cstate = cstate
-        if stateful:
+        shippers = tuple(t for t in transforms if t.finalize_delta is not None)
+        end = None
+        if stateful or shippers:
             end = RoundEnd(x=params, y=y, delta=delta, steps=step_mask.sum(),
                            eta=eta, momentum=momentum, opt=opt)
+        if stateful:
             new_cstate = dict(cstate)
             for t, c in zip(transforms, carries):
                 if t.client_init is not None:
                     new_cstate[t.name] = t.finalize(end, c, cstate[t.name])
+        for t in shippers:
+            delta = t.finalize_delta(end, delta)
         return delta, losses.sum() / denom, new_cstate
 
     return one_client

@@ -9,6 +9,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from ..utils.tags import TAG_RR, TAG_WR
+
 _U64 = np.uint64
 
 
@@ -20,12 +22,12 @@ def _rng(*keys: int) -> np.random.Generator:
 
 def epoch_permutation(seed: int, client: int, rnd: int, epoch: int, n: int) -> np.ndarray:
     """The RR permutation Pi for (client, round, epoch) over n local samples."""
-    return _rng(seed, 0xA11CE, client, rnd, epoch).permutation(n)
+    return _rng(seed, TAG_RR, client, rnd, epoch).permutation(n)
 
 
 def with_replacement(seed: int, client: int, rnd: int, epoch: int, n: int) -> np.ndarray:
     """The baseline the paper contrasts with: i.i.d. sampling w/ replacement."""
-    return _rng(seed, 0xB0B, client, rnd, epoch).integers(0, n, size=n)
+    return _rng(seed, TAG_WR, client, rnd, epoch).integers(0, n, size=n)
 
 
 def feistel_permutation(seed: int, client: int, rnd: int, epoch: int, n: int,

@@ -64,13 +64,14 @@ from ...kernels.quantize.ops import quantize_pack, unpack_dequantize
 from ...kernels.quantize.ref import BITS_CHOICES, packed_width
 from ...kernels.rr_perm.ref import key_combine, stream_key, swap_or_not
 from ...utils.pytree import tree_zeros_like
+from ...utils.tags import TAG_COMM
 
 # ServerState.clients key the error-feedback residual bank lives under —
 # reserved: bind_strategy refuses local chains with a stateful transform of
 # the same name.
 UPLINK_STATE_KEY = "uplink"
 
-_TAG_COMM = 0x0C0DEC     # domain-separates uplink streams from RR streams
+_TAG_COMM = TAG_COMM     # domain-separates uplink streams (registry: utils/tags.py)
 
 
 def round_keys(seed: int, client_id, rnd, xp=jnp):

@@ -37,13 +37,16 @@ from ...configs.base import FLConfig
 from ...data.federated import Population
 from ...kernels.rr_perm.ref import fmix32, key_combine, stream_key
 
-_TAG_FLEET = 0xF1EE7     # domain-separates fleet draws from RR/comm streams
+from ...utils.tags import (SUB_FLEET_DROPOUT, SUB_FLEET_LATENCY,
+                           SUB_FLEET_STRAGGLER, SUB_FLEET_TIER, TAG_FLEET)
+
+_TAG_FLEET = TAG_FLEET   # domain-separates fleet draws (registry: utils/tags.py)
 
 # per-use subtags folded in after the fleet tag (one stream per purpose)
-SUB_TIER = 0x71E2        # tier assignment (round-independent)
-SUB_LATENCY = 0x1A7E     # latency distribution draw (round-independent)
-SUB_DROPOUT = 0xD209     # per-round dropout coin
-SUB_STRAGGLER = 0x57A6   # per-round straggler coin
+SUB_TIER = SUB_FLEET_TIER              # tier assignment (round-independent)
+SUB_LATENCY = SUB_FLEET_LATENCY        # latency draw (round-independent)
+SUB_DROPOUT = SUB_FLEET_DROPOUT        # per-round dropout coin
+SUB_STRAGGLER = SUB_FLEET_STRAGGLER    # per-round straggler coin
 
 
 def parse_faults(spec: str) -> tuple:

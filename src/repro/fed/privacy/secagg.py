@@ -1,0 +1,190 @@
+"""Seeded pairwise-mask secure-aggregation simulation (modular arithmetic).
+
+Simulates the Bonawitz et al. (2017) pairwise-masking protocol on the
+slot-order ``[C]`` delta stack, with the cryptography (key agreement, secret
+sharing) replaced by the repo's counter-based hash chain: the pair key for
+clients ``(i, j)`` is ``stream_key(seed, min(i,j), round)`` with the privacy
+tag + secagg-mask subtag folded in, then ``max(i,j)``, so both ends of a
+pair — and the server, for dropout recovery — derive the same mask without
+any state or communication.
+
+Masks only cancel *exactly* in an exact-arithmetic domain, so the layer runs
+in uint32 modular fixed point:
+
+1. each client's weighted update ``coeff_i * delta_i`` is encoded with
+   ``fl.secagg_bits`` fractional bits (round-to-nearest-even, clamp to the
+   int32 range, reinterpret as uint32 — two's-complement wraparound);
+2. client ``i`` ships ``enc_i + sum_j dispatched_j * m(i, j)  (mod 2^32)``
+   where ``m(i, j) = -m(j, i)`` and ``m(i, i) = 0`` — individually the
+   payload is a uniformly-masked blob, so the simulated server learns
+   nothing from any single upload;
+3. the server adds the surviving (valid) payloads mod 2^32; for
+   fleet-dropped clients — who masked nobody but whom survivors masked
+   *against* — it reconstructs their pairwise shares from the same chain and
+   subtracts them (the protocol's dropout-recovery path);
+4. every mask term now appears exactly once with each sign, so the modular
+   sum equals ``sum_valid enc_i`` BITWISE, and decoding yields the
+   fixed-point-quantized weighted aggregate.
+
+Composition with uplink codecs: the codec roundtrip (qsgd/topk/...) runs
+*first* on the real-valued deltas, secagg encodes whatever survives it —
+quantize-then-mask, matching how production stacks layer compression under
+secure aggregation.  The weighting happens client-side (the FedShuffle
+coefficients are public server-derived quantities), so the server never
+needs per-client plaintext.
+
+What the simulation does NOT provide: actual key agreement, share
+verification, or malicious-server security — it reproduces the *arithmetic*
+and the dropout-recovery dataflow so the systems properties (exact
+cancellation, quantization composition, per-payload blinding) are testable.
+
+Headroom contract: ``|coeff_i * delta_i| * 2^secagg_bits`` must fit int32
+per coordinate (values are clamped, so overflow saturates rather than
+corrupting neighbors); the modular *sum* additionally wraps if the true
+aggregate exceeds ``2^(31 - secagg_bits)``.  Memory: masks materialize
+``[C, C, n]`` per leaf — sized for cohort-scale stacks, not per-parameter
+shards of billion-parameter models.
+
+Everything takes an ``xp`` namespace (numpy | jax.numpy) and is
+bitwise-identical across the two — integer hashing plus round/clip only —
+which is what the hypothesis property tests exercise.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...kernels.rr_perm.ref import fmix32, key_combine, stream_key
+from ...utils.tags import SUB_SECAGG_MASK, TAG_PRIVACY
+
+# largest float32-exact clamp bound safely inside int32: 2^31 - 128
+_CLAMP = 2147483520.0
+
+
+def fixed_point_encode(x, bits: int, xp=jnp):
+    """float32 -> uint32 two's-complement fixed point with ``bits``
+    fractional bits (round-half-even, clamped to the int32 range)."""
+    scaled = xp.round(xp.asarray(x).astype(xp.float32) * xp.float32(2.0 ** bits))
+    scaled = xp.clip(scaled, xp.float32(-_CLAMP), xp.float32(_CLAMP))
+    return scaled.astype(xp.int32).astype(xp.uint32)
+
+
+def fixed_point_decode(u, bits: int, xp=jnp):
+    """Inverse of :func:`fixed_point_encode` (modular domain -> float32)."""
+    return (xp.asarray(u).astype(xp.uint32).astype(xp.int32)
+            .astype(xp.float32) * xp.float32(2.0 ** -bits))
+
+
+def pair_keys(seed: int, ids, rnd, xp=jnp):
+    """``[C, C]`` uint32 pair-mask keys, symmetric: key(i, j) == key(j, i).
+
+    Chain: ``stream_key(seed, min(i,j), round)`` -> privacy tag -> secagg
+    subtag -> ``max(i,j)`` — both pair members (and the recovering server)
+    derive it independently.
+    """
+    dt = xp.uint32
+    ids = xp.asarray(ids).astype(dt)
+    lo = xp.minimum(ids[:, None], ids[None, :])
+    hi = xp.maximum(ids[:, None], ids[None, :])
+    base = stream_key(seed, lo, xp.asarray(rnd).astype(dt), xp)
+    key = key_combine(base, dt(TAG_PRIVACY), xp)
+    key = key_combine(key, dt(SUB_SECAGG_MASK), xp)
+    return key_combine(key, hi, xp)
+
+
+def mask_matrix(keys, ids, leaf_idx: int, n: int, xp=jnp):
+    """Signed pairwise masks for one flattened leaf — ``[C, C, n]`` uint32.
+
+    Antisymmetric mod 2^32 (``out[i, j] + out[j, i] == 0``), zero on the
+    diagonal and for duplicate client ids.
+    """
+    dt = xp.uint32
+    lk = key_combine(keys, dt(leaf_idx), xp)                       # [C, C]
+    ctr = xp.arange(n, dtype=dt)
+    m = fmix32(key_combine(lk[:, :, None], ctr[None, None, :], xp), xp)
+    ids = xp.asarray(ids).astype(dt)
+    neg = (~m).astype(dt) + dt(1)                                  # 0 - m mod 2^32
+    signed = xp.where((ids[:, None] < ids[None, :])[:, :, None], m, neg)
+    return xp.where((ids[:, None] == ids[None, :])[:, :, None],
+                    dt(0), signed)
+
+
+def _flat(leaf, xp):
+    c = leaf.shape[0]
+    n = max(1, int(np.prod(leaf.shape[1:], dtype=np.int64)))
+    return xp.asarray(leaf).reshape(c, n), n
+
+
+def secagg_payloads(deltas, coeff, valid, dropped, client_id, rnd, fl, xp=jnp):
+    """Per-leaf ``(enc [C, n], payload [C, n], masks [C, C, n])`` — what each
+    client would put on the wire.  ``payload`` differs from ``enc`` wherever
+    the client has at least one dispatched partner (the blinding the
+    acceptance test asserts)."""
+    dt = xp.uint32
+    bits = int(fl.secagg_bits)
+    valid_f = xp.asarray(valid).astype(xp.float32)
+    drop_f = (xp.zeros_like(valid_f) if dropped is None
+              else xp.asarray(dropped).astype(xp.float32))
+    disp_u = xp.clip(valid_f + drop_f, 0.0, 1.0).astype(dt)
+    coeff_v = valid_f * xp.asarray(coeff).astype(xp.float32)
+    keys = pair_keys(fl.seed, client_id, rnd, xp)
+    out = []
+    for i, leaf in enumerate(jax.tree.leaves(deltas)):
+        x, n = _flat(leaf, xp)
+        enc = fixed_point_encode(coeff_v[:, None] * x.astype(xp.float32),
+                                 bits, xp)
+        masks = mask_matrix(keys, client_id, i, n, xp)
+        pay = enc + xp.sum(masks * disp_u[None, :, None], axis=1, dtype=dt)
+        out.append((enc, pay, masks))
+    return out
+
+
+def secagg_combine(deltas, coeff, valid, dropped, client_id, rnd, fl, xp=jnp):
+    """Masked modular aggregation of a slot-order delta stack.
+
+    Returns the aggregate tree (params-shaped, leaf dtypes preserved):
+    bitwise equal to decoding ``sum_valid fixed_point_encode(coeff_i *
+    delta_i)`` — the masks and the dropout-recovery shares cancel exactly.
+    """
+    dt = xp.uint32
+    bits = int(fl.secagg_bits)
+    valid_f = xp.asarray(valid).astype(xp.float32)
+    drop_f = (xp.zeros_like(valid_f) if dropped is None
+              else xp.asarray(dropped).astype(xp.float32))
+    surv_u = valid_f.astype(dt)
+    drop_u = drop_f.astype(dt)
+    leaves, treedef = jax.tree.flatten(deltas)
+    payloads = secagg_payloads(deltas, coeff, valid, dropped, client_id,
+                               rnd, fl, xp)
+    out = []
+    for leaf, (_enc, pay, masks) in zip(leaves, payloads):
+        tot = xp.sum(pay * surv_u[:, None], axis=0, dtype=dt)
+        # dropout recovery: survivors masked against dropped clients who
+        # never shipped — reconstruct those shares and subtract them
+        rec = xp.sum(masks * (surv_u[:, None, None] * drop_u[None, :, None]),
+                     axis=(0, 1), dtype=dt)
+        agg = tot - rec
+        out.append(fixed_point_decode(agg, bits, xp)
+                   .reshape(leaf.shape[1:]).astype(leaf.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def secagg_reference(deltas, coeff, valid, fl, xp=jnp):
+    """The unmasked fixed-point aggregate — the bitwise cancellation target
+    (no masks, no recovery; what :func:`secagg_combine` must equal)."""
+    dt = xp.uint32
+    bits = int(fl.secagg_bits)
+    valid_f = xp.asarray(valid).astype(xp.float32)
+    coeff_v = valid_f * xp.asarray(coeff).astype(xp.float32)
+    surv_u = valid_f.astype(dt)
+    out = []
+    for leaf in jax.tree.leaves(deltas):
+        x, _ = _flat(leaf, xp)
+        enc = fixed_point_encode(coeff_v[:, None] * x.astype(xp.float32),
+                                 bits, xp)
+        agg = xp.sum(enc * surv_u[:, None], axis=0, dtype=dt)
+        out.append(fixed_point_decode(agg, bits, xp)
+                   .reshape(leaf.shape[1:]).astype(leaf.dtype))
+    leaves, treedef = jax.tree.flatten(deltas)
+    return jax.tree.unflatten(treedef, out)

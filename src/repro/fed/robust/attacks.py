@@ -43,12 +43,13 @@ import numpy as np
 
 from ...configs.base import FLConfig
 from ...kernels.rr_perm.ref import fmix32, key_combine, stream_key
+from ...utils.tags import SUB_ROBUST_ADVERSARY, SUB_ROBUST_NOISE, TAG_ROBUST
 
-_TAG_ROBUST = 0xBADC0DE  # domain-separates robust draws from RR/comm/fleet
+_TAG_ROBUST = TAG_ROBUST  # domain-separates robust draws (registry: utils/tags.py)
 
 # per-use subtags folded in after the robust tag (one stream per purpose)
-SUB_ADVERSARY = 0xAD5E7  # adversary-set membership (round-independent)
-SUB_NOISE = 0x2015E      # per-round attack noise stream
+SUB_ADVERSARY = SUB_ROBUST_ADVERSARY  # adversary-set membership (round-independent)
+SUB_NOISE = SUB_ROBUST_NOISE          # per-round attack noise stream
 
 
 def adversary_mask(seed: int, client_ids, frac: float, xp=jnp):

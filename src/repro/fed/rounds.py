@@ -41,6 +41,17 @@ sequential-padded round stages its delta stack like the compressed one, so
 padded == bucketed stays bitwise; with the plane off (the default) none of
 this traces — the op sequence is byte-for-byte the pre-robustness one.
 
+When the privacy plane is active (``FLConfig.dp`` / ``secagg``;
+``repro.fed.privacy``), the driver (1) L2-clips each client's *shipped*
+update to ``dp_clip`` right after the local steps (before attacks and the
+codec — client-side semantics, bitwise-equal to the ``"dp_clip"``
+ClientTransform hook), (2) under ``secagg="pairwise"`` replaces the float
+weighted sum with the masked modular fixed-point aggregation (the codec
+roundtrip runs first: quantize-then-mask), and (3) under ``dp="on"`` adds
+counter-based per-(seed, round) Gaussian noise to the aggregate before the
+server update.  Off by default: the plane adds no ops and no metric keys —
+bitwise-frozen like comm/fleet/obs/robust.
+
 The step consumes either a materialized ``RoundBatch`` (legacy host
 assembly) or, when built with ``plane=`` (a cohort-engine
 :class:`~repro.fed.cohort.plane.DevicePlane`), an ``IndexPlan`` — indices
@@ -68,6 +79,8 @@ from .bucketing import scan_clients, vmap_clients
 from .comm import (UPLINK_STATE_KEY, dense_bits, round_keys, uplink_apply,
                    uplink_mbytes_per_slot, uplink_wire_bits)
 from .fleet import FLEET_STATE_KEY, fleet_active, slot_staleness
+from .privacy import (add_dp_noise, dp_active, dp_clip_cohort, secagg_active,
+                      secagg_combine)
 from .robust import (build_attack, guard_quarantines, guard_rejects,
                      params_ok, quarantine_masks, renormalize_coeffs,
                      robust_active, scrub_deltas, select_state,
@@ -123,10 +136,17 @@ def build_round_step(loss_fn: Callable,
     apply_attack = build_attack(fl) if robust_on else None
     g_quar = robust_on and guard_quarantines(fl)
     g_rej = robust_on and guard_rejects(fl)
+    # privacy plane (fed.privacy): per-client DP clipping runs on the staged
+    # slot-order stack right after the local steps (before attacks/codec —
+    # client-side semantics), secagg replaces the float weighted sum with
+    # the masked modular aggregation, DP noise lands on the aggregate.  Off
+    # by default: no new ops, no new metric keys — bitwise-frozen.
+    dp_on = dp_active(fl)
+    sa_on = secagg_active(fl)
     hist_edges = obs_hist.round_hist_edges(
         fl, with_staleness=fleet_active(fl),
         with_uplink=codec is not None and codec.name != "identity",
-        with_robust=robust_on,
+        with_robust=robust_on, with_dp=dp_on,
     ) if tele_hist else {}
 
     def round_step(state: ServerState, batch, lr_mult=1.0):
@@ -191,6 +211,12 @@ def build_round_step(loss_fn: Callable,
                 new_cs = {**new_cs, UPLINK_STATE_KEY: ef2}
             return dhat, new_cs
 
+        def secagg_agg(deltas, coeff):
+            """Masked modular fixed-point aggregation (fed.privacy.secagg):
+            pairwise masks cancel exactly, dropped clients' shares recovered."""
+            return secagg_combine(deltas, coeff, meta.valid, meta.dropped,
+                                  meta.client_id, state.rnd, fl)
+
         def robust_combine(deltas):
             """Aggregate the decoded slot-order stack under the robustness
             plane: quarantine -> coefficient renormalization -> the bound
@@ -212,12 +238,18 @@ def build_round_step(loss_fn: Callable,
             elif "hist_suspicion" in hist_edges:
                 info["suspicion"] = suspicion_ratio(deltas, meta)
             combine = strat.robust_aggregate
+            if sa_on:
+                # robust plane limited to attack / reject here — validation
+                # pins aggregator="mean" and forbids quarantine under secagg
+                # (the server only ever sees the blinded sum)
+                return secagg_agg(deltas, coeff), info
             if combine is None:       # hand-built strategy: canonical mean
                 return weighted_sum(deltas, coeff), info
             return combine(deltas, coeff, meta), info
 
         rb_info = None
         slot_sq = None  # [C] squared update norms, only under telemetry
+        dp_clipped = dp_scale = dp_sigma = None  # privacy-plane telemetry
         if fl.cohort_mode == "vmapped":
             if bucketed:
                 # per-bucket [C_b, K_b] scans, reassembled to [C] slot order
@@ -227,6 +259,11 @@ def build_round_step(loss_fn: Callable,
             else:
                 deltas, losses, new_cs = jax.vmap(client)(
                     batch.data, batch.step_mask, plan.eta, cstate0)
+            if dp_on:
+                # client-side DP clipping of the shipped update (the exact
+                # sensitivity bound) — before attacks: adversaries are not
+                # assumed to honor it (that is the robust plane's problem)
+                deltas, dp_clipped, dp_scale = dp_clip_cohort(deltas, fl)
             if apply_attack is not None:
                 # before encode: adversaries control their wire payload
                 deltas = apply_attack(deltas, meta, state.rnd)
@@ -235,6 +272,8 @@ def build_round_step(loss_fn: Callable,
                 slot_sq = obs_hist.slot_sqnorms(deltas)
             if robust_on:
                 delta_agg, rb_info = robust_combine(deltas)
+            elif sa_on:
+                delta_agg = secagg_agg(deltas, strat.agg_coeffs(meta))
             else:
                 delta_agg = strat.aggregate(deltas, meta)
         else:  # sequential: the scan accumulates coeff_i * Delta_i as it goes,
@@ -258,15 +297,17 @@ def build_round_step(loss_fn: Callable,
                 # coeff_i-weighted accumulation replays in slot order
                 deltas, losses, new_cs = scan_clients(client, batch, plan.eta,
                                                       cstate0)
-            elif (apply_up is not None and codec.name != "identity") or robust_on:
-                # compressed uplink / robustness plane: stage the per-client
-                # deltas (scan) so the codec, the attacks and the robust
-                # aggregators run vmapped on the stacked [C] slot-order
-                # arrays, like every other layout.  Applying them inside the
-                # fused scan body instead would let XLA contract their float
-                # ops differently there (FMA fusion), silently breaking the
-                # padded == bucketed bitwise contract (error-feedback
-                # residuals, cross-client estimators).
+            elif ((apply_up is not None and codec.name != "identity")
+                  or robust_on or dp_on or sa_on):
+                # compressed uplink / robustness / privacy planes: stage the
+                # per-client deltas (scan) so the codec, attacks, robust
+                # aggregators, DP clip and secagg masks run vmapped on the
+                # stacked [C] slot-order arrays, like every other layout.
+                # Applying them inside the fused scan body instead would let
+                # XLA contract their float ops differently there (FMA
+                # fusion), silently breaking the padded == bucketed bitwise
+                # contract (error-feedback residuals, cross-client
+                # estimators).
                 def stage(_, xs):
                     return None, client(*xs)
 
@@ -275,6 +316,9 @@ def build_round_step(loss_fn: Callable,
                     (batch.data, batch.step_mask, plan.eta, cstate0))
 
             if deltas is not None:
+                if dp_on:
+                    # same client-side clip as the vmapped path (slot order)
+                    deltas, dp_clipped, dp_scale = dp_clip_cohort(deltas, fl)
                 if apply_attack is not None:
                     deltas = apply_attack(deltas, meta, state.rnd)
                 deltas, new_cs = uplink_cohort(deltas, new_cs)
@@ -283,6 +327,8 @@ def build_round_step(loss_fn: Callable,
 
                 if robust_on:
                     delta_agg, rb_info = robust_combine(deltas)
+                elif sa_on:
+                    delta_agg = secagg_agg(deltas, coeff)
                 else:
                     def accum(acc, xs):
                         delta, coeff_i = xs
@@ -309,6 +355,13 @@ def build_round_step(loss_fn: Callable,
                 else:
                     losses, new_cs = ys
             delta_agg = jax.tree.map(lambda a, p: a.astype(p.dtype), delta_agg, state.params)
+
+        if dp_on:
+            # counter-based per-(seed, round) Gaussian noise on the weighted
+            # aggregate — identical wherever the round is produced (legacy /
+            # engine / prefetch / resume), mode-independent by construction
+            delta_agg, dp_sigma = add_dp_noise(
+                delta_agg, strat.agg_coeffs(meta), meta.valid, fl, state.rnd)
 
         cstate = None
         new_clients = None
@@ -392,6 +445,12 @@ def build_round_step(loss_fn: Callable,
             metrics["suspected_adversaries"] = rb_info["suspected_adversaries"]
             metrics["rounds_rejected"] = (jnp.float32(0.0) if rejected is None
                                           else rejected)
+        if dp_on:
+            # privacy telemetry — keys exist only while DP is on (same
+            # metric-tree freeze as the other planes); clipped_frac is the
+            # exact indicator from the clip itself, not a post-hoc norm test
+            metrics["dp_clipped_frac"] = (dp_clipped * meta.valid).sum() / valid_sum
+            metrics["dp_sigma"] = dp_sigma
         if tele_hist:
             # fixed-shape distribution summaries (obs.hist): hist_*-prefixed
             # [bins] counts — the train loop routes them to registry
@@ -412,6 +471,10 @@ def build_round_step(loss_fn: Callable,
             if "hist_suspicion" in hist_edges:
                 metrics["hist_suspicion"] = obs_hist.fixed_histogram(
                     rb_info["suspicion"], hist_edges["hist_suspicion"],
+                    weights=meta.valid)
+            if "hist_dp_scale" in hist_edges:
+                metrics["hist_dp_scale"] = obs_hist.fixed_histogram(
+                    dp_scale, hist_edges["hist_dp_scale"],
                     weights=meta.valid)
         return state, metrics
 

@@ -63,6 +63,7 @@ from .bucketing import scan_clients, vmap_clients
 from .comm import UPLINK_STATE_KEY, build_codec
 from .fleet import (FLEET_STATE_KEY, fleet_active, fleet_client_state,
                     staleness_weights, validate_fleet_config)
+from .privacy import privacy_active, validate_privacy_config
 from .robust import (build_robust_aggregate, robust_active,
                      validate_robust_config)
 from .server import ServerState
@@ -140,21 +141,23 @@ def register_local_update(name: str, make: "ClientChain | Callable", *,
 
 def _compile_local(entry: "ClientChain | Callable", loss_fn: Callable, fl: FLConfig):
     """LOCAL_UPDATES entry ->
-    (one_client, client_template | None, needs, stateful transform names)."""
+    (one_client, client_template | None, needs, stateful transform names,
+    all transform names)."""
     if isinstance(entry, ClientChain):
         transforms = resolve_chain(entry, loss_fn, fl)
         needs = tuple(dict.fromkeys(k for t in transforms for k in t.needs))
         state_names = tuple(t.name for t in transforms
                             if t.client_init is not None)
         return (build_local_step(transforms, loss_fn),
-                chain_client_template(transforms), needs, state_names)
+                chain_client_template(transforms), needs, state_names,
+                tuple(t.name for t in transforms))
     inner = entry(loss_fn, fl)  # legacy raw rule: stateless, opt-blind
 
     def one_client(params, momentum, opt, data, mask, eta, cstate):
         delta, loss = inner(params, momentum, data, mask, eta)
         return delta, loss, cstate
 
-    return one_client, None, (), ()
+    return one_client, None, (), (), ()
 
 
 # ---------------------------------------------------------------------------
@@ -660,8 +663,13 @@ def bind_strategy(strategy: "FedStrategy | BoundStrategy | None", fl: FLConfig,
     if local_update not in LOCAL_UPDATES:
         raise ValueError(
             f"unknown local update {local_update!r}; have {sorted(LOCAL_UPDATES)}")
-    local_step, client_state, needs, state_names = _compile_local(
+    local_step, client_state, needs, state_names, transform_names = _compile_local(
         LOCAL_UPDATES[local_update], loss_fn, fl)
+    if privacy_active(fl):
+        # privacy-plane knobs (dp / secagg) validated against the *resolved*
+        # local chain: the ambiguous per-step-clip + DP-clip stack is a
+        # bind-time error, not a silently wrong sensitivity bound
+        validate_privacy_config(fl, transform_names=transform_names)
     missing_state = [k for k in sdef.consumes if k not in state_names]
     if missing_state:
         # the mirror of the needs/provides check below: a server update that

@@ -35,6 +35,7 @@ from ..obs.metrics import JSONLSink, MetricRegistry
 from ..utils.checkpoint import save_checkpoint
 from ..utils.logging import MetricLogger, log
 from .cohort import CohortEngine
+from .privacy import accountant_for, dp_active, dp_checkpoint_record
 from .rounds import as_device_batch, build_round_step, jit_round_step
 from .server import ServerState, cosine_schedule, wsd_schedule
 from .strategy import BoundStrategy, FedStrategy, bind_strategy
@@ -113,6 +114,10 @@ def train(
     hists = {k: registry.histogram(k, edges)
              for k, edges in raw_step.telemetry_hist_edges.items()}
     snt = sentinels.sentinel() if tele else None
+    # RDP accountant (fed.privacy): cumulative eps(delta) is a pure function
+    # of (fl, completed rounds) — no accumulator state, so a resumed run
+    # reports bitwise-identical epsilon at every round
+    acct = accountant_for(fl) if dp_active(fl) else None
     t0 = time.time()
 
     def round_iter():
@@ -163,6 +168,10 @@ def train(
                     # plot loss against (present only with the fleet plane on)
                     virtual_time += row["round_virtual_time"]
                     row["virtual_time"] = virtual_time
+                if acct is not None:
+                    # privacy budget spent through THIS round (r+1 completed)
+                    row["dp_epsilon"] = acct.epsilon(r + 1)
+                    registry.gauge("dp_epsilon").set(row["dp_epsilon"])
                 if "rounds_rejected" in row:
                     # robustness-plane run totals (keys exist only while the
                     # plane is on): quarantines and rejected rounds are rare
@@ -183,9 +192,11 @@ def train(
                                for k, v in row.items() if k != "round"})
                 if checkpoint_path and checkpoint_every and (r + 1) % checkpoint_every == 0:
                     with trace.span("round/checkpoint", round=r):
-                        save_checkpoint(
-                            checkpoint_path, state.params,
-                            {"round": r, "elapsed_s": time.time() - t0, "name": name})
+                        meta = {"round": r, "elapsed_s": time.time() - t0,
+                                "name": name}
+                        if acct is not None:
+                            meta["dp_accounting"] = dp_checkpoint_record(fl, r + 1)
+                        save_checkpoint(checkpoint_path, state.params, meta)
         finally:
             rit.close()
             if telemetry_dir is not None:
@@ -193,7 +204,9 @@ def train(
                 registry.close()
     if checkpoint_path:
         with trace.span("round/checkpoint", round=rounds - 1):
-            save_checkpoint(checkpoint_path, state.params,
-                            {"round": rounds - 1, "elapsed_s": time.time() - t0,
-                             "name": name})
+            meta = {"round": rounds - 1, "elapsed_s": time.time() - t0,
+                    "name": name}
+            if acct is not None:
+                meta["dp_accounting"] = dp_checkpoint_record(fl, rounds)
+            save_checkpoint(checkpoint_path, state.params, meta)
     return TrainResult(state=state, metrics=ml, registry=registry)

@@ -27,8 +27,10 @@ from __future__ import annotations
 
 import numpy as np
 
+from ...utils.tags import TAG_RR
+
 _INIT = 0x9E3779B9     # golden-ratio seed of the key chain
-_TAG_RR = 0xA11CE      # matches the reshuffle.py stream-tag convention
+_TAG_RR = TAG_RR       # registry: utils/tags.py (reshuffle.py convention)
 
 
 def fmix32(h, xp):

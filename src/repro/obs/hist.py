@@ -101,7 +101,7 @@ def tree_sqnorm(tree) -> jnp.ndarray:
 
 
 def round_hist_edges(fl, *, with_staleness: bool, with_uplink: bool,
-                     with_robust: bool = False) -> dict:
+                     with_robust: bool = False, with_dp: bool = False) -> dict:
     """The static edge table for one configuration's round histograms.
 
     One definition shared by the jitted emitter (``fed.rounds``) and the
@@ -122,4 +122,9 @@ def round_hist_edges(fl, *, with_staleness: bool, with_uplink: bool,
         # honest mass sits near 1, scaled attacks / diverged clients in the
         # upper tail — the round's suspicion profile at a glance
         edges["hist_suspicion"] = log_edges(1e-2, 1e3, bins)
+    if with_dp:
+        # per-client DP clip scale min(1, C/||delta||) (fed.privacy): mass
+        # at the top edge = updates under the clip bound, the lower tail =
+        # how hard the clip is biting — the round's clipping profile
+        edges["hist_dp_scale"] = log_edges(1e-4, 1.0, bins)
     return edges

@@ -85,16 +85,26 @@ def load_metadata(path: str) -> dict[str, Any]:
 # ---------------------------------------------------------------------------
 
 SERVER_STATE_FORMAT = "fedshuffle/server-state"
-SERVER_STATE_VERSION = 1
+# version 2: the sidecar may carry a "dp_accounting" record (the privacy
+# plane's spent-budget audit block — see fed.privacy.accountant); version-1
+# checkpoints still load, they simply predate DP runs
+SERVER_STATE_VERSION = 2
 
 
-def save_server_state(path: str, state, metadata: dict[str, Any] | None = None) -> None:
+def save_server_state(path: str, state, metadata: dict[str, Any] | None = None,
+                      *, fl=None) -> None:
     """Save a full ``repro.fed.ServerState`` (resumable, bitwise).
 
     The client state bank (``state.clients``, stateful local chains) rides
     along when present; the JSON sidecar records the format/version and
     whether a bank was saved, so a mismatched load fails loudly instead of
     silently resuming without client state.
+
+    Passing ``fl=`` of a DP run (``fl.dp="on"``) additionally persists the
+    ``dp_accounting`` record — noise multiplier, sampling rate, delta, and
+    the epsilon spent through ``state.rnd`` completed rounds — so the spent
+    budget is auditable and :func:`load_server_state` can refuse resumes
+    that silently change the mechanism.
     """
     clients = getattr(state, "clients", None)
     tree = {"params": state.params, "opt": state.opt, "rnd": state.rnd}
@@ -104,18 +114,35 @@ def save_server_state(path: str, state, metadata: dict[str, Any] | None = None) 
     meta["state_format"] = SERVER_STATE_FORMAT
     meta["state_version"] = SERVER_STATE_VERSION
     meta["has_client_state"] = clients is not None
+    if fl is not None:
+        # deferred import: utils must stay importable without the fed plane
+        from ..fed.privacy import dp_active, dp_checkpoint_record
+
+        if dp_active(fl):
+            meta["dp_accounting"] = dp_checkpoint_record(
+                fl, int(np.asarray(jax.device_get(state.rnd))))
     save_checkpoint(path, tree, meta)
 
 
-def load_server_state(path: str, template):
+def load_server_state(path: str, template, *, fl=None):
     """Restore a ServerState saved by :func:`save_server_state`.
 
     ``template`` is a ServerState with the target structure — typically
     ``bound_strategy.init(params)`` of the SAME strategy/config, so the
     client state bank's structure (and its absence) is validated against
     what the checkpoint carries.
+
+    Passing ``fl=`` of a DP run validates the checkpoint's ``dp_accounting``
+    record against the mechanism ``fl`` binds (noise multiplier, clip,
+    delta, sampling rate): resuming a DP run under different knobs would
+    make the reported cumulative epsilon a lie, so it is a hard error.
     """
     meta = load_metadata(path)
+    if fl is not None:
+        from ..fed.privacy import check_dp_resume, dp_active
+
+        if dp_active(fl):
+            check_dp_resume(meta.get("dp_accounting"), fl)
     if meta.get("state_format") != SERVER_STATE_FORMAT:
         raise ValueError(
             f"{path!r} is not a server-state checkpoint (state_format="

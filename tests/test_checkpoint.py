@@ -8,9 +8,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.utils.checkpoint import (load_checkpoint, load_metadata,
-                                    load_server_state, save_checkpoint,
-                                    save_server_state)
+from repro.utils.checkpoint import (SERVER_STATE_VERSION, load_checkpoint,
+                                    load_metadata, load_server_state,
+                                    save_checkpoint, save_server_state)
 
 
 def test_roundtrip(tmp_path):
@@ -88,7 +88,8 @@ def test_server_state_roundtrip_with_bank(tmp_path):
     path = os.path.join(tmp_path, "state.npz")
     save_server_state(path, state, {"round": 2})
     meta = load_metadata(path)
-    assert meta["state_version"] == 1 and meta["has_client_state"] is True
+    assert meta["state_version"] == SERVER_STATE_VERSION
+    assert meta["has_client_state"] is True
     assert meta["round"] == 2
     restored = load_server_state(path, strat.init({"x": jnp.zeros(3)}))
     _assert_state_equal(state.params, restored.params, "params")

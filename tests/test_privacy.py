@@ -1,0 +1,401 @@
+"""Property tests for the privacy plane (fed.privacy).
+
+Three groups, matching the plane's three layers:
+
+* secagg — the pairwise masks are antisymmetric mod 2^32, cancel BITWISE in
+  the modular sum (including under arbitrary dropout patterns via the
+  recovery path), blind every individual wire payload, and are
+  bitwise-identical between numpy and jax.numpy;
+* accountant — epsilon is monotone in rounds and antitone in the noise
+  multiplier, hits the plain-Gaussian closed form at q=1, and the log-space
+  binomial bound agrees with two independent references (exact integer
+  combinatorics, and the Gaussian-quadrature moment integral);
+* dp mechanism — clipping actually bounds the shipped norm, the driver's
+  vectorized cohort clip is bitwise the per-client function, noise replays
+  per (seed, round), and the resume path (save/load_server_state +
+  check_dp_resume) keeps cumulative epsilon bitwise and mechanism drift a
+  hard error.
+"""
+import dataclasses
+import math
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.base import FLConfig
+from repro.fed.privacy import (
+    RDPAccountant,
+    accountant_for,
+    add_dp_noise,
+    check_dp_resume,
+    clip_update,
+    dp_checkpoint_record,
+    dp_clip_cohort,
+    dp_clip_transform,
+    fixed_point_decode,
+    fixed_point_encode,
+    mask_matrix,
+    pair_keys,
+    rdp_subsampled_gaussian,
+    secagg_combine,
+    secagg_payloads,
+    secagg_reference,
+    validate_privacy_config,
+)
+from repro.fed.server import init_server
+from repro.utils.checkpoint import load_server_state, save_server_state
+
+
+def _fl(**kw):
+    base = dict(num_clients=4, cohort_size=2, sampling="uniform", epochs=1,
+                local_batch=1, local_lr=0.1, seed=7)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def _rng(*key):
+    return np.random.default_rng(zlib.crc32(repr(key).encode()))
+
+
+# ---------------------------------------------------------------------------
+# secagg: fixed point, masks, cancellation, blinding
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(bits=st.integers(min_value=1, max_value=20),
+       seed=st.integers(min_value=0, max_value=10_000))
+def test_fixed_point_roundtrip(bits, seed):
+    rng = _rng("fp", seed)
+    x = rng.uniform(-100.0, 100.0, size=37).astype(np.float32)
+    dec = fixed_point_decode(fixed_point_encode(x, bits, np), bits, np)
+    assert np.all(np.abs(dec - x) <= 2.0 ** -bits), (bits, np.abs(dec - x).max())
+
+
+@settings(max_examples=15, deadline=None)
+@given(c=st.integers(min_value=1, max_value=6),
+       n=st.integers(min_value=1, max_value=33),
+       rnd=st.integers(min_value=0, max_value=1000),
+       seed=st.integers(min_value=0, max_value=10_000))
+def test_mask_antisymmetry(c, n, rnd, seed):
+    rng = _rng("mask", seed)
+    ids = rng.choice(1000, size=c, replace=False).astype(np.uint32)
+    keys = pair_keys(3, ids, np.uint32(rnd), np)
+    assert np.array_equal(keys, keys.T), "pair keys must be symmetric"
+    m = mask_matrix(keys, ids, leaf_idx=1, n=n, xp=np)
+    # antisymmetric mod 2^32, zero diagonal
+    s = (m + np.transpose(m, (1, 0, 2))).astype(np.uint32)
+    assert not s.any(), "mask(i,j) + mask(j,i) != 0 mod 2^32"
+    assert not m[np.arange(c), np.arange(c)].any(), "nonzero diagonal mask"
+
+
+@settings(max_examples=20, deadline=None)
+@given(c=st.integers(min_value=1, max_value=6),
+       bits=st.integers(min_value=4, max_value=24),
+       rnd=st.integers(min_value=0, max_value=500),
+       seed=st.integers(min_value=0, max_value=10_000),
+       with_drops=st.booleans())
+def test_secagg_cancellation_bitwise(c, bits, rnd, seed, with_drops):
+    """Masked modular aggregation == unmasked fixed-point sum, BITWISE,
+    for any validity/dropout pattern — numpy and jnp, and numpy == jnp."""
+    rng = _rng("cancel", seed)
+    fl = _fl(num_clients=max(c, 2), cohort_size=c, secagg="pairwise",
+             secagg_bits=bits)
+    deltas = {"w": rng.uniform(-2, 2, size=(c, 3, 2)).astype(np.float32),
+              "b": rng.uniform(-2, 2, size=(c, 5)).astype(np.float32)}
+    coeff = rng.uniform(0.0, 1.5, size=c).astype(np.float32)
+    ids = rng.choice(100, size=c, replace=False).astype(np.uint32)
+    valid = rng.integers(0, 2, size=c).astype(np.float32)
+    dropped = None
+    if with_drops:
+        # dropped disjoint from valid: clients who dispatched masks but
+        # never shipped — exercises the recovery path
+        dropped = ((1.0 - valid) * rng.integers(0, 2, size=c)).astype(np.float32)
+
+    got_np = secagg_combine(deltas, coeff, valid, dropped, ids,
+                            np.uint32(rnd), fl, np)
+    want_np = secagg_reference(deltas, coeff, valid, fl, np)
+    for k in deltas:
+        assert np.array_equal(got_np[k], want_np[k]), (k, "np cancellation")
+
+    got_j = secagg_combine(
+        jax.tree.map(jnp.asarray, deltas), jnp.asarray(coeff),
+        jnp.asarray(valid), None if dropped is None else jnp.asarray(dropped),
+        jnp.asarray(ids), jnp.uint32(rnd), fl, jnp)
+    for k in deltas:
+        assert np.array_equal(np.asarray(got_j[k]), got_np[k]), (k, "np/jnp parity")
+
+
+def test_secagg_payload_blinding():
+    """Each client's wire payload differs from its raw encoded delta wherever
+    it has a dispatched partner (the per-upload privacy the masks buy)."""
+    rng = _rng("blind", 0)
+    c = 4
+    fl = _fl(cohort_size=c, secagg="pairwise", secagg_bits=16)
+    deltas = {"w": rng.uniform(-1, 1, size=(c, 8)).astype(np.float32)}
+    coeff = np.full(c, 0.25, np.float32)
+    valid = np.ones(c, np.float32)
+    ids = np.arange(c, dtype=np.uint32)
+    (enc, pay, _masks), = secagg_payloads(deltas, coeff, valid, None, ids,
+                                          np.uint32(3), fl, np)
+    for i in range(c):
+        assert not np.array_equal(pay[i], enc[i]), f"client {i} unblinded"
+    # degenerate single-client cohort: no partners, payload == enc
+    fl1 = _fl(cohort_size=1, secagg="pairwise", secagg_bits=16)
+    (enc1, pay1, _), = secagg_payloads(
+        {"w": deltas["w"][:1]}, coeff[:1], valid[:1], None, ids[:1],
+        np.uint32(3), fl1, np)
+    assert np.array_equal(pay1, enc1)
+
+
+def test_secagg_masks_change_with_round():
+    fl = _fl(cohort_size=2, secagg="pairwise")
+    ids = np.arange(2, dtype=np.uint32)
+    k0 = pair_keys(fl.seed, ids, np.uint32(0), np)
+    k1 = pair_keys(fl.seed, ids, np.uint32(1), np)
+    assert not np.array_equal(k0, k1)
+
+
+# ---------------------------------------------------------------------------
+# accountant: monotonicity, closed forms, independent references
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(z=st.floats(min_value=0.4, max_value=4.0),
+       q=st.floats(min_value=0.01, max_value=1.0),
+       delta=st.sampled_from([1e-7, 1e-5, 1e-3]))
+def test_accountant_monotone_in_rounds(z, q, delta):
+    acct = RDPAccountant(noise_mult=z, sampling_rate=q, delta=delta)
+    eps = [acct.epsilon(r) for r in (0, 1, 2, 5, 20, 100, 1000)]
+    assert eps[0] == 0.0
+    assert all(b >= a for a, b in zip(eps, eps[1:])), eps
+    assert all(e >= 0.0 and math.isfinite(e) for e in eps[1:]), eps
+
+
+@settings(max_examples=15, deadline=None)
+@given(q=st.floats(min_value=0.01, max_value=1.0),
+       rounds=st.integers(min_value=1, max_value=500))
+def test_accountant_antitone_in_noise(q, rounds):
+    eps = [RDPAccountant(noise_mult=z, sampling_rate=q, delta=1e-5)
+           .epsilon(rounds) for z in (0.5, 1.0, 2.0, 4.0)]
+    assert all(b <= a + 1e-12 for a, b in zip(eps, eps[1:])), eps
+
+
+def test_rdp_full_participation_closed_form():
+    orders = (2, 3, 8, 64)
+    for z in (0.5, 1.0, 3.0):
+        got = rdp_subsampled_gaussian(1.0, z, orders)
+        want = np.asarray(orders, np.float64) / (2.0 * z * z)
+        np.testing.assert_allclose(got, want, rtol=1e-12)
+
+
+def test_rdp_matches_exact_integer_combinatorics():
+    """The lgamma/logsumexp implementation against math.comb exact integers
+    computed straight (no log space) — every default order that fits f64."""
+    q, z = 0.1, 1.3
+    orders = tuple(range(2, 33))
+    got = rdp_subsampled_gaussian(q, z, orders)
+    for i, a in enumerate(orders):
+        s = sum(math.comb(a, k) * (1 - q) ** (a - k) * q ** k
+                * math.exp(k * (k - 1) / (2 * z * z)) for k in range(a + 1))
+        assert math.isclose(got[i], math.log(s) / (a - 1), rel_tol=1e-10), a
+
+
+def test_rdp_matches_gaussian_quadrature():
+    """Independent numeric reference: the binomial bound equals the moment
+    integral E_{x~N(0,z^2)}[((1-q) + q e^{(2x-1)/(2 z^2)})^alpha]."""
+    for q, z, a in ((0.05, 1.0, 4), (0.3, 1.5, 8), (0.5, 0.9, 3)):
+        x = np.linspace(-40 * z, 40 * z, 400_001)
+        pdf = np.exp(-x * x / (2 * z * z)) / (z * math.sqrt(2 * math.pi))
+        trapezoid = getattr(np, "trapezoid", None) or np.trapz
+        moment = trapezoid(pdf * ((1 - q) + q * np.exp((2 * x - 1) / (2 * z * z))) ** a, x)
+        want = math.log(moment) / (a - 1)
+        got = float(rdp_subsampled_gaussian(q, z, (a,))[0])
+        assert math.isclose(got, want, rel_tol=1e-6), (q, z, a, got, want)
+
+
+def test_accountant_rejects_bad_params():
+    with pytest.raises(ValueError):
+        RDPAccountant(noise_mult=0.0, sampling_rate=0.5, delta=1e-5)
+    with pytest.raises(ValueError):
+        RDPAccountant(noise_mult=1.0, sampling_rate=0.0, delta=1e-5)
+    with pytest.raises(ValueError):
+        RDPAccountant(noise_mult=1.0, sampling_rate=0.5, delta=1.0)
+    with pytest.raises(ValueError):
+        rdp_subsampled_gaussian(0.5, 1.0, (1,))
+
+
+# ---------------------------------------------------------------------------
+# dp mechanism: clipping, chain/driver agreement, noise replay
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(clip=st.floats(min_value=0.05, max_value=10.0),
+       seed=st.integers(min_value=0, max_value=10_000))
+def test_clip_bounds_norm(clip, seed):
+    rng = _rng("clip", seed)
+    delta = {"a": jnp.asarray(rng.normal(0, 3, size=(4, 3)), jnp.float32),
+             "b": jnp.asarray(rng.normal(0, 3, size=7), jnp.float32)}
+    out, was_clipped, scale = clip_update(delta, clip)
+    nrm_in = math.sqrt(sum(float(jnp.sum(jnp.square(x)))
+                           for x in jax.tree.leaves(delta)))
+    nrm_out = math.sqrt(sum(float(jnp.sum(jnp.square(x)))
+                            for x in jax.tree.leaves(out)))
+    assert nrm_out <= clip * (1 + 1e-5)
+    if nrm_in <= clip:
+        assert float(was_clipped) == 0.0 and float(scale) == 1.0
+        for k in delta:
+            assert np.array_equal(np.asarray(out[k]), np.asarray(delta[k]))
+    else:
+        assert float(was_clipped) == 1.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(c=st.integers(min_value=1, max_value=5),
+       clip=st.floats(min_value=0.1, max_value=5.0),
+       seed=st.integers(min_value=0, max_value=10_000))
+def test_cohort_clip_matches_per_client(c, clip, seed):
+    """Driver's vectorized [C] clip == clip_update per slot, bitwise —
+    and bitwise the ``dp_clip`` ClientTransform's finalize_delta."""
+    rng = _rng("cohort", seed)
+    fl = _fl(cohort_size=c, dp="on", dp_clip=clip)
+    deltas = {"w": jnp.asarray(rng.normal(0, 2, size=(c, 3, 2)), jnp.float32),
+              "b": jnp.asarray(rng.normal(0, 2, size=(c, 4)), jnp.float32)}
+    stack, clipped, scale = dp_clip_cohort(deltas, fl)
+    tfm = dp_clip_transform(None, fl)
+    for i in range(c):
+        one = {k: v[i] for k, v in deltas.items()}
+        out_i, was_i, scale_i = clip_update(one, clip)
+        assert float(was_i) == float(clipped[i])
+        assert float(scale_i) == float(scale[i])
+        fin = tfm.finalize_delta(None, one)
+        for k in one:
+            assert np.array_equal(np.asarray(stack[k][i]), np.asarray(out_i[k]))
+            assert np.array_equal(np.asarray(fin[k]), np.asarray(out_i[k]))
+
+
+def test_dp_noise_replays_per_round():
+    fl = _fl(dp="on", dp_clip=1.0, dp_noise_mult=1.5)
+    agg = {"w": jnp.zeros((3, 2), jnp.float32), "b": jnp.zeros(5, jnp.float32)}
+    coeff = jnp.asarray([0.5, 0.25, 0.25, 0.0], jnp.float32)
+    valid = jnp.asarray([1.0, 1.0, 1.0, 0.0], jnp.float32)
+    a1, s1 = add_dp_noise(agg, coeff, valid, fl, jnp.int32(4))
+    a2, s2 = add_dp_noise(agg, coeff, valid, fl, jnp.int32(4))
+    a3, _ = add_dp_noise(agg, coeff, valid, fl, jnp.int32(5))
+    # sigma = z * clip * max(valid * |coeff|) = 1.5 * 1.0 * 0.5
+    assert float(s1) == float(s2) == pytest.approx(0.75)
+    for k in agg:
+        assert np.array_equal(np.asarray(a1[k]), np.asarray(a2[k]))
+        assert not np.array_equal(np.asarray(a1[k]), np.asarray(a3[k]))
+    # isotropic, roughly standard after dividing by sigma
+    z = np.concatenate([np.asarray(a1[k]).ravel() for k in agg]) / 0.75
+    assert abs(z.mean()) < 1.5 and 0.2 < z.std() < 3.0
+
+
+# ---------------------------------------------------------------------------
+# resume: epsilon bitwise through save/load, mechanism drift rejected
+# ---------------------------------------------------------------------------
+
+def test_epsilon_bitwise_after_resume(tmp_path):
+    fl = _fl(dp="on", dp_clip=0.5, dp_noise_mult=1.2, dp_delta=1e-6)
+    params = {"x": jnp.asarray([0.1, -0.2, 0.3], jnp.float32)}
+    state = init_server(fl, params)
+    state = state._replace(rnd=jnp.asarray(7, jnp.int32))
+    path = str(tmp_path / "ck")
+    save_server_state(path, state, fl=fl)
+
+    acct = accountant_for(fl)
+    from repro.utils.checkpoint import load_metadata
+    rec = load_metadata(path)["dp_accounting"]
+    assert rec["rounds"] == 7
+    assert rec["epsilon"] == acct.epsilon(7)  # bitwise: same pure function
+
+    restored = load_server_state(path, init_server(fl, params)._replace(
+        rnd=jnp.asarray(0, jnp.int32)), fl=fl)
+    assert int(restored.rnd) == 7
+    # the resumed accountant is a pure function of (fl, round): epsilon at
+    # every future round is bitwise what the unbroken run reports
+    acct2 = accountant_for(fl)
+    for r in (8, 20, 100):
+        assert acct2.epsilon(r) == acct.epsilon(r)
+
+
+def test_resume_rejects_mechanism_drift(tmp_path):
+    fl = _fl(dp="on", dp_clip=0.5, dp_noise_mult=1.2)
+    params = {"x": jnp.asarray([1.0], jnp.float32)}
+    state = init_server(fl, params)
+    path = str(tmp_path / "ck")
+    save_server_state(path, state, fl=fl)
+    template = init_server(fl, params)
+    # changed noise multiplier -> hard error
+    with pytest.raises(ValueError, match="noise_mult"):
+        load_server_state(path, template, fl=dataclasses.replace(fl, dp_noise_mult=2.0))
+    # record missing entirely (saved without fl=) -> hard error
+    path2 = str(tmp_path / "ck2")
+    save_server_state(path2, init_server(fl, params))
+    with pytest.raises(ValueError, match="dp_accounting"):
+        load_server_state(path2, init_server(fl, params), fl=fl)
+    # unchanged mechanism loads fine
+    load_server_state(path, template, fl=fl)
+
+
+def test_check_dp_resume_fields():
+    fl = _fl(dp="on")
+    rec = dp_checkpoint_record(fl, 10)
+    check_dp_resume(rec, fl)  # self-consistent
+    for key, bad in (("noise_mult", 9.0), ("clip", 9.0), ("delta", 0.5),
+                     ("sampling_rate", 0.9)):
+        with pytest.raises(ValueError, match=key):
+            check_dp_resume({**rec, key: bad}, fl)
+    with pytest.raises(ValueError):
+        check_dp_resume(None, fl)
+
+
+# ---------------------------------------------------------------------------
+# bind-time validation
+# ---------------------------------------------------------------------------
+
+def test_validation_rejects_ambiguous_clip_composition():
+    fl = _fl(dp="on")
+    with pytest.raises(ValueError) as ei:
+        validate_privacy_config(fl, transform_names=("clip",))
+    msg = str(ei.value)
+    assert "clip_norm" in msg and "dp_clip" in msg  # names BOTH knobs
+
+
+def test_validation_rejects_bad_knobs():
+    with pytest.raises(ValueError, match="dp_clip"):
+        validate_privacy_config(_fl(dp="on", dp_clip=0.0))
+    with pytest.raises(ValueError, match="dp_noise_mult"):
+        validate_privacy_config(_fl(dp="on", dp_noise_mult=0.0))
+    with pytest.raises(ValueError, match="dp_delta"):
+        validate_privacy_config(_fl(dp="on", dp_delta=1.0))
+    with pytest.raises(ValueError, match="secagg_bits"):
+        validate_privacy_config(_fl(secagg="pairwise", secagg_bits=31))
+    with pytest.raises(ValueError, match="aggregator"):
+        validate_privacy_config(_fl(secagg="pairwise",
+                                    aggregator="coordinate_median"))
+    with pytest.raises(ValueError, match="quarantine"):
+        validate_privacy_config(_fl(secagg="pairwise", guard="quarantine"))
+
+
+def test_validation_passes_valid_configs():
+    validate_privacy_config(_fl(dp="on"), transform_names=("local_sgd",))
+    validate_privacy_config(_fl(secagg="pairwise", secagg_bits=16))
+    validate_privacy_config(_fl(dp="on", secagg="pairwise"))
+
+
+def test_bind_strategy_runs_privacy_validation():
+    """The rejection fires through the real bind path, not only when the
+    validator is called directly."""
+    from repro.fed.losses import make_quadratic_loss
+    from repro.fed.strategy import bind_strategy
+
+    loss = make_quadratic_loss(2)
+    fl = _fl(dp="on", local_update="local_clip")
+    with pytest.raises(ValueError, match="dp_clip"):
+        bind_strategy(None, fl, loss, num_clients=fl.num_clients)

@@ -1,0 +1,330 @@
+"""Privacy-plane equivalence.
+
+* ``dp="off"`` + ``secagg="off"`` is the frozen bitwise contract: the round
+  must reproduce the pre-privacy seed math EXACTLY — ServerState and metric
+  tree (zero privacy keys), and the traced jaxpr itself must be identical
+  (inactive knob values cannot leak into the computation) — across presets x
+  cohort modes x {padded, bucketed}.
+* Active DP holds the layout contract instead: clipping runs on the
+  reassembled slot-order ``[C]`` stack and the server noise is
+  (seed, round)-counter-based, so padded == bucketed, vmapped == sequential,
+  legacy host path == cohort engine (prefetch ON), and a checkpoint-resumed
+  run replays the identical noise — all bitwise.
+* Secagg holds the quantization contract: the masked modular trajectory
+  equals the plane-off trajectory up to the fixed-point grid and adds zero
+  metric keys, while composing with uplink codecs and the buffered fleet.
+
+The per-push CI shard runs a reduced preset grid; the nightly workflow sets
+``FEDSHUFFLE_FULL_GRID=1`` to sweep every registered preset.
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.configs.base import FLConfig
+from repro.core.algorithms import PRESETS
+from repro.data.federated import FederatedPipeline, Population
+from repro.data.tasks import DuplicatedQuadraticTask
+from repro.fed.cohort import CohortEngine
+from repro.fed.losses import make_quadratic_loss
+from repro.fed.rounds import as_device_batch, build_round_step, jit_round_step
+from repro.fed.strategy import bind_strategy, strategy_for
+from repro.utils.checkpoint import load_server_state, save_server_state
+
+from test_strategy_equivalence import (_seed_build_round_step,
+                                       _seed_init_server)
+
+TASK = DuplicatedQuadraticTask(copies=(1, 2, 3))
+LOSS = make_quadratic_loss(3)
+N_ROUNDS = 3
+P0 = {"x": jnp.array([0.3, -0.1, 0.2], jnp.float32)}
+
+GRID_PRESETS = (sorted(PRESETS) if os.environ.get("FEDSHUFFLE_FULL_GRID")
+                else ["fedshuffle", "fednova", "fedavg_min"])
+
+BASE_KEYS = {"local_loss", "delta_norm", "cohort"}
+DP_KEYS = {"dp_clipped_frac", "dp_sigma"}
+
+DP_ON = dict(dp="on", dp_clip=0.5, dp_noise_mult=0.6)
+
+
+def _fl(preset="fedshuffle", mode="vmapped", **kw):
+    kw.setdefault("seed", 11)
+    kw.setdefault("server_lr", 0.8)
+    return FLConfig(num_clients=3, cohort_size=2, sampling="uniform", epochs=2,
+                    local_batch=1, algorithm=preset, local_lr=0.05,
+                    mvr_a=0.2, cohort_mode=mode,
+                    drop_last_steps=1, buckets=2, **kw)
+
+
+def _assert_tree_equal(a, b, what):
+    assert jax.tree.structure(a) == jax.tree.structure(b), what
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y), err_msg=what)
+
+
+def _run_legacy(fl, rounds=N_ROUNDS, collect=False):
+    pipe = FederatedPipeline(TASK, Population.build(fl, sizes=TASK.sizes()), fl)
+    strat = bind_strategy(strategy_for(fl), fl, LOSS, num_clients=fl.num_clients)
+    step = build_round_step(LOSS, strat, fl, num_clients=fl.num_clients)
+    state = strat.init(P0)
+    rows = []
+    for r in range(rounds):
+        state, mets = step(state, as_device_batch(pipe.round_batch(r)))
+        if collect:
+            rows.append({k: float(v) for k, v in mets.items()})
+    return (state, rows) if collect else (state, mets)
+
+
+def _run_engine(fl, rounds=N_ROUNDS, prefetch=2):
+    pop = Population.build(fl, sizes=TASK.sizes())
+    eng = CohortEngine.build(TASK, pop, fl)
+    strat = bind_strategy(strategy_for(fl), fl, LOSS, num_clients=fl.num_clients)
+    step = build_round_step(LOSS, strat, fl, num_clients=fl.num_clients,
+                            plane=eng.plane)
+    state = strat.init(P0)
+    with eng.round_plans(rounds, prefetch=prefetch) as it:
+        for r, plan in it:
+            state, mets = step(state, plan)
+    return state, mets
+
+
+# ---------------------------------------------------------------------------
+# the frozen off-path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["vmapped", "sequential"])
+@pytest.mark.parametrize("exec_mode", ["padded", "bucketed"])
+def test_privacy_off_matches_seed_bitwise(mode, exec_mode):
+    """The plane-off default vs the frozen pre-privacy seed: same
+    ServerState, same metric tree (no dp/secagg keys leak), every preset."""
+    for preset in GRID_PRESETS:
+        fl = _fl(preset, mode, exec_mode=exec_mode)
+        assert (fl.dp, fl.secagg) == ("off", "off")
+        fl_seed = dataclasses.replace(fl, exec_mode="padded")
+        pipe = FederatedPipeline(
+            TASK, Population.build(fl_seed, sizes=TASK.sizes()), fl_seed)
+        seed_step = _seed_build_round_step(LOSS, fl_seed,
+                                           num_clients=fl.num_clients)
+        seed_state = _seed_init_server(fl_seed, P0)
+        for r in range(N_ROUNDS):
+            seed_state, seed_mets = seed_step(
+                seed_state, as_device_batch(pipe.round_batch(r)))
+        state, mets = _run_legacy(fl)
+        tag = f"{preset}/{mode}/{exec_mode}"
+        assert set(mets) == BASE_KEYS, tag
+        _assert_tree_equal(seed_state.params, state.params, f"{tag}: params")
+        _assert_tree_equal(seed_state.opt, state.opt, f"{tag}: opt")
+        _assert_tree_equal(seed_mets, mets, f"{tag}: metrics")
+
+
+def test_privacy_off_jaxpr_frozen():
+    """Stronger than trajectory equality: with the plane off, the traced
+    computation itself must not depend on any privacy knob VALUE — changing
+    inactive knobs reproduces the identical jaxpr; switching the plane on
+    does not."""
+    def jaxpr_of(fl):
+        pipe = FederatedPipeline(TASK, Population.build(fl, sizes=TASK.sizes()), fl)
+        strat = bind_strategy(strategy_for(fl), fl, LOSS,
+                              num_clients=fl.num_clients)
+        step = build_round_step(LOSS, strat, fl, num_clients=fl.num_clients)
+        state = strat.init(P0)
+        batch = as_device_batch(pipe.round_batch(0))
+        return str(jax.make_jaxpr(step)(state, batch))
+
+    base = jaxpr_of(_fl())
+    assert base == jaxpr_of(_fl(dp_clip=123.0, dp_noise_mult=9.0,
+                                dp_delta=0.42, secagg_bits=24))
+    assert base != jaxpr_of(_fl(**DP_ON))
+    assert base != jaxpr_of(_fl(secagg="pairwise"))
+    # and in composition: the off-plane is value-frozen under an active
+    # codec + buffered fleet too
+    stack = dict(uplink="qsgd", uplink_bits=8, fleet="zipf_latency",
+                 server_mode="buffered", buffer_size=2, staleness="poly",
+                 staleness_power=0.5)
+    assert jaxpr_of(_fl(**stack)) == jaxpr_of(_fl(dp_clip=77.0, secagg_bits=9,
+                                                  **stack))
+
+
+def test_privacy_metric_keys_frozen():
+    """Exactly the two DP scalars appear when dp is on; the secagg layer adds
+    ZERO keys (the server only ever learns the blinded sum — there is nothing
+    per-client to report)."""
+    _, mets = _run_legacy(_fl(**DP_ON))
+    assert set(mets) == BASE_KEYS | DP_KEYS
+    _, mets = _run_legacy(_fl(secagg="pairwise"))
+    assert set(mets) == BASE_KEYS
+    _, mets = _run_legacy(_fl(secagg="pairwise", **DP_ON))
+    assert set(mets) == BASE_KEYS | DP_KEYS
+
+
+# ---------------------------------------------------------------------------
+# layout / producer equivalence with the plane active
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["vmapped", "sequential"])
+def test_dp_padded_matches_bucketed_bitwise(mode):
+    """Clipping runs on the reassembled slot-order stack and noise is
+    counter-based, so the bucketed layout reproduces padded bitwise."""
+    sp, mp = _run_legacy(_fl("fedshuffle", mode, exec_mode="padded", **DP_ON))
+    sb, mb = _run_legacy(_fl("fedshuffle", mode, exec_mode="bucketed", **DP_ON))
+    tag = f"dp/{mode}"
+    _assert_tree_equal(sp.params, sb.params, f"{tag}: params")
+    _assert_tree_equal(sp.opt, sb.opt, f"{tag}: opt")
+    _assert_tree_equal(mp, mb, f"{tag}: metrics")
+
+
+def test_dp_vmapped_matches_sequential_bitwise():
+    """DP always stages the cohort (the sequential driver switches to the
+    staged path so clip + noise see the identical [C] stack)."""
+    sv, mv = _run_legacy(_fl("fedshuffle", "vmapped", **DP_ON))
+    ss, ms = _run_legacy(_fl("fedshuffle", "sequential", **DP_ON))
+    _assert_tree_equal(sv.params, ss.params, "dp modes: params")
+    _assert_tree_equal(mv, ms, "dp modes: metrics")
+
+
+@pytest.mark.parametrize("exec_mode", ["padded", "bucketed"])
+def test_dp_engine_matches_legacy_bitwise(exec_mode):
+    """(seed, round)-stateless noise: the cohort engine with its prefetch
+    thread must realize the identical noisy trajectory."""
+    fl = _fl("fedshuffle", "vmapped", exec_mode=exec_mode, engine="cohort",
+             **DP_ON)
+    ls, lm = _run_legacy(fl)
+    es, em = _run_engine(fl)
+    tag = f"dp-engine/{exec_mode}"
+    _assert_tree_equal(ls.params, es.params, f"{tag}: params")
+    _assert_tree_equal(ls.opt, es.opt, f"{tag}: opt")
+    _assert_tree_equal(lm, em, f"{tag}: metrics")
+
+
+@pytest.mark.parametrize("mode", ["vmapped", "sequential"])
+def test_secagg_padded_matches_bucketed_bitwise(mode):
+    sp, mp = _run_legacy(_fl("fedshuffle", mode, exec_mode="padded",
+                             secagg="pairwise"))
+    sb, mb = _run_legacy(_fl("fedshuffle", mode, exec_mode="bucketed",
+                             secagg="pairwise"))
+    tag = f"secagg/{mode}"
+    _assert_tree_equal(sp.params, sb.params, f"{tag}: params")
+    _assert_tree_equal(mp, mb, f"{tag}: metrics")
+
+
+def test_secagg_matches_plain_aggregation_within_quantization():
+    """The masked modular sum decodes to the plane-off aggregate up to the
+    fixed-point grid — masks cancel, only quantization remains."""
+    off, _ = _run_legacy(_fl())
+    for bits, tol in ((16, 2.0 ** -12), (24, 2.0 ** -20)):
+        sa, _ = _run_legacy(_fl(secagg="pairwise", secagg_bits=bits))
+        err = float(jnp.abs(sa.params["x"] - off.params["x"]).max())
+        assert 0 < err <= tol, (bits, err)   # ==0 would mean secagg never ran
+
+
+def test_privacy_composes_with_codec_and_buffered_fleet():
+    """clip -> encode -> decode -> mask -> modular sum -> noise over
+    staleness-discounted coefficients: the full stack, still layout-equal."""
+    kw = dict(uplink="qsgd", uplink_bits=8,
+              fleet="zipf_latency", server_mode="buffered", buffer_size=2,
+              staleness="poly", staleness_power=0.5,
+              secagg="pairwise", **DP_ON)
+    sp, mp = _run_legacy(_fl("fedshuffle", "vmapped", exec_mode="padded", **kw))
+    sb, mb = _run_legacy(_fl("fedshuffle", "vmapped", exec_mode="bucketed", **kw))
+    _assert_tree_equal(sp.params, sb.params, "stack: params")
+    _assert_tree_equal(mp, mb, "stack: metrics")
+    for key in DP_KEYS | {"mean_staleness", "uplink_mbytes"}:
+        assert key in mb, key
+
+
+# ---------------------------------------------------------------------------
+# resume: noise and epsilon replay bitwise through a checkpoint
+# ---------------------------------------------------------------------------
+
+
+def test_dp_resume_replays_noise_bitwise(tmp_path):
+    """4 straight rounds == 2 rounds + save/load_server_state + 2 rounds,
+    with a freshly-rebuilt step on the resumed side — noise is a pure
+    function of (seed, round), never of process history."""
+    fl = _fl(**DP_ON)
+    pipe = FederatedPipeline(TASK, Population.build(fl, sizes=TASK.sizes()), fl)
+    strat = bind_strategy(strategy_for(fl), fl, LOSS, num_clients=fl.num_clients)
+
+    step = build_round_step(LOSS, strat, fl, num_clients=fl.num_clients)
+    straight = strat.init(P0)
+    for r in range(4):
+        straight, _ = step(straight, as_device_batch(pipe.round_batch(r)))
+
+    part = strat.init(P0)
+    for r in range(2):
+        part, _ = step(part, as_device_batch(pipe.round_batch(r)))
+    path = str(tmp_path / "ck")
+    save_server_state(path, part, fl=fl)
+
+    resumed = load_server_state(path, strat.init(P0), fl=fl)
+    step2 = build_round_step(LOSS, strat, fl, num_clients=fl.num_clients)
+    for r in range(2, 4):
+        resumed, _ = step2(resumed, as_device_batch(pipe.round_batch(r)))
+
+    _assert_tree_equal(straight.params, resumed.params, "resume: params")
+    _assert_tree_equal(straight.opt, resumed.opt, "resume: opt")
+    assert int(resumed.rnd) == 4
+
+
+# ---------------------------------------------------------------------------
+# telemetry + accountant surfacing through the train loop
+# ---------------------------------------------------------------------------
+
+
+def test_privacy_telemetry_histogram_and_epsilon():
+    """fl.telemetry="metrics" adds the clip-scale histogram next to the DP
+    scalars; the train loop folds it into a registry instrument and reports
+    the accountant's monotone cumulative epsilon on every row."""
+    from repro.fed.privacy import accountant_for
+    from repro.fed.train_loop import train
+
+    fl = _fl("fedshuffle", "vmapped", telemetry="metrics",
+             secagg="pairwise", **DP_ON)
+    pipe = FederatedPipeline(TASK, Population.build(fl, sizes=TASK.sizes()), fl)
+    res = train(LOSS, P0, pipe, fl, N_ROUNDS, log_every=0)
+    insts = res.registry.instruments()
+    assert insts["hist_dp_scale"].total == N_ROUNDS * fl.cohort_size
+    eps = [r["dp_epsilon"] for r in res.metrics.rows]
+    assert len(eps) == N_ROUNDS
+    assert all(e > 0 for e in eps)
+    assert all(b >= a for a, b in zip(eps, eps[1:]))
+    # bitwise the pure accountant function of (fl, completed rounds)
+    acct = accountant_for(fl)
+    assert eps == [acct.epsilon(r + 1) for r in range(N_ROUNDS)]
+    assert insts["dp_epsilon"].value == eps[-1]
+
+
+def test_no_dp_epsilon_when_plane_off():
+    from repro.fed.train_loop import train
+
+    fl = _fl("fedshuffle", "vmapped", telemetry="metrics")
+    pipe = FederatedPipeline(TASK, Population.build(fl, sizes=TASK.sizes()), fl)
+    res = train(LOSS, P0, pipe, fl, N_ROUNDS, log_every=0)
+    assert all("dp_epsilon" not in r for r in res.metrics.rows)
+    assert "hist_dp_scale" not in res.registry.instruments()
+
+
+def test_single_compilation_privacy():
+    """Rotating cohorts under clip + noise + pairwise masking must reuse ONE
+    compiled executable (the masks/noise are counter-based functions of the
+    traced round index, not of python state)."""
+    fl = _fl("fedshuffle", "vmapped", engine="cohort", rr_backend="device_ref",
+             secagg="pairwise", **DP_ON)
+    pop = Population.build(fl, sizes=TASK.sizes())
+    eng = CohortEngine.build(TASK, pop, fl)
+    strat = bind_strategy(strategy_for(fl), fl, LOSS, num_clients=fl.num_clients)
+    step = jit_round_step(build_round_step(LOSS, strat, fl,
+                                           num_clients=fl.num_clients,
+                                           plane=eng.plane), donate=False)
+    state = strat.init(P0)
+    with obs.compile_guard(step):
+        for r in range(4):
+            state, _ = step(state, eng.device_plan(r))

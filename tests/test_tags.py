@@ -1,0 +1,68 @@
+"""The counter-based RNG tag registry (repro.utils.tags).
+
+Every subsystem that draws from the fmix32/key_combine hash chain declares
+its domain tag (and per-use subtags) in one table; a collision would make
+two subsystems silently share a stream, correlating draws that must be
+independent.  These tests hold the table collision-free and pin the
+historical module-level aliases to the registry, so a refactor cannot
+quietly fork the values.
+"""
+import numpy as np
+
+from repro.utils import tags
+
+
+def test_domain_tags_unique_and_uint32():
+    vals = list(tags.DOMAIN_TAGS.values())
+    assert len(vals) == len(set(vals)), "domain tag collision"
+    for name, v in tags.DOMAIN_TAGS.items():
+        assert isinstance(v, int) and 0 <= v <= 0xFFFFFFFF, name
+
+
+def test_all_tags_globally_unique():
+    """Domain tags AND every subtag, one flat namespace — subtags are folded
+    in after their domain tag (so cross-domain reuse would technically be
+    safe), but global uniqueness keeps stream audits trivial."""
+    seen = {}
+    for name, v in tags.DOMAIN_TAGS.items():
+        seen[v] = f"domain:{name}"
+    for dom, subs in tags.SUBTAGS.items():
+        assert dom in tags.DOMAIN_TAGS, f"subtag table for unknown domain {dom!r}"
+        for name, v in subs.items():
+            assert isinstance(v, int) and 0 <= v <= 0xFFFFFFFF, f"{dom}.{name}"
+            assert v not in seen, (
+                f"tag collision: {dom}.{name} == {seen[v]} (0x{v:X})")
+            seen[v] = f"{dom}.{name}"
+
+
+def test_module_aliases_match_registry():
+    """The historical private constants now alias the registry — a drifted
+    alias would silently change a subsystem's whole stream."""
+    from repro.data import reshuffle  # noqa: F401  (uses TAG_RR/TAG_WR inline)
+    from repro.fed.comm import codecs
+    from repro.fed.fleet import model as fleet_model
+    from repro.fed.robust import attacks
+    from repro.kernels.rr_perm import ref
+
+    assert ref._TAG_RR == tags.TAG_RR
+    assert codecs._TAG_COMM == tags.TAG_COMM
+    assert fleet_model._TAG_FLEET == tags.TAG_FLEET
+    assert fleet_model.SUB_TIER == tags.SUB_FLEET_TIER
+    assert fleet_model.SUB_LATENCY == tags.SUB_FLEET_LATENCY
+    assert fleet_model.SUB_DROPOUT == tags.SUB_FLEET_DROPOUT
+    assert fleet_model.SUB_STRAGGLER == tags.SUB_FLEET_STRAGGLER
+    assert attacks._TAG_ROBUST == tags.TAG_ROBUST
+    assert attacks.SUB_ADVERSARY == tags.SUB_ROBUST_ADVERSARY
+    assert attacks.SUB_NOISE == tags.SUB_ROBUST_NOISE
+
+
+def test_tagged_streams_are_domain_separated():
+    """Two domains' keys diverge for identical (seed, client, round) — the
+    property the registry exists to protect."""
+    from repro.kernels.rr_perm.ref import key_combine, stream_key
+
+    base = stream_key(3, np.uint32(5), np.uint32(7), np)
+    streams = [np.asarray(key_combine(base, np.uint32(t), np))
+               for t in tags.DOMAIN_TAGS.values()]
+    flat = [int(s.ravel()[0]) for s in streams]
+    assert len(flat) == len(set(flat)), "tagged streams collide"
