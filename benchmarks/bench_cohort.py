@@ -28,13 +28,15 @@ state bytes actually moved (2 * C * row) vs the resident bank bytes.  Writes
 ``--check`` asserts the O(cohort) bar — scaffold keeps >= 40% of sgd
 throughput at EVERY population size (an O(N) scatter would collapse at 1e6).
 
-``--compressed`` measures the uplink communication plane: identity vs qsgd
-(4-bit stochastic quantization) vs topk (error feedback, [N+1, dim] residual
-bank) vs randk rounds/sec through the cohort engine + prefetch, plus the
-static bytes-on-wire compression ratio of each codec.  Writes
+``--compressed`` measures the bidirectional communication plane: the uplink
+codecs (qsgd / topk-with-EF / randk / DIANA shifted qsgd), a
+reference-compressed downlink broadcast arm, and the
+compressed-both-directions arm, each as rounds/sec through the cohort
+engine + prefetch plus static per-direction bytes-on-wire ratios.  Writes
 ``BENCH_comm.json`` / ``benchmarks/results/bench_comm.csv``; ``--check``
-asserts >= 4x bytes-on-wire reduction for every compressed codec, a single
-compilation, and a generous throughput floor vs identity.
+asserts >= 4x bytes-on-wire reduction per compressed direction, a single
+compilation, a generous throughput floor vs identity — and, for the
+both-directions arm, >= 4x TOTAL bytes at >= 0.8x identity rounds/sec.
 
 ``--fleet`` measures the heterogeneous fleet plane under zipf-distributed
 device latency (``fl.fleet="zipf_latency"``): sync rounds wait for the
@@ -68,7 +70,7 @@ from repro.data.federated import FederatedPipeline, Population
 from repro.data.tasks import PopulationQuadraticTask
 from repro.fed.cohort import CohortEngine
 from repro.fed.losses import make_quadratic_loss
-from repro.fed.comm import dense_bits, uplink_wire_bits
+from repro.fed.comm import dense_bits, wire_bits_total
 from repro.fed.rounds import as_device_batch, build_round_step, jit_round_step
 from repro.fed.strategy import bind_strategy, strategy_for
 
@@ -250,16 +252,27 @@ def _write_scenario(results: dict, rows: list, baseline_path: str,
     return rows
 
 
-# -- compressed-uplink scenario (communication plane) ------------------------
+# -- compressed-comm scenario (communication plane, both directions) ---------
 #
 # A wider model (dim 64) than the throughput scenarios so the compression
 # ratios are honest: qsgd's per-chunk scale overhead and topk/randk's index /
 # value bytes amortize over a realistically-sized update.  All arms run the
 # same engine + prefetch configuration; the delta is purely the codec work
-# in the jitted round (identity = the dense no-comm reference).
+# in the jitted round (identity/identity = the dense no-comm reference).
+# Arms: the uplink codecs, the DIANA shifted uplink, a compressed downlink
+# broadcast, and the compressed-both-directions arm carrying the >= 4x
+# total-bytes acceptance bar.
 
 DIM_COMM = 64
-COMM_CODECS = ("identity", "qsgd", "topk", "randk")
+COMM_ARMS = (
+    ("identity", {}),
+    ("qsgd", {"uplink": "qsgd"}),
+    ("topk", {"uplink": "topk"}),
+    ("randk", {"uplink": "randk"}),
+    ("diana_qsgd", {"uplink": "diana_qsgd"}),
+    ("down_qsgd", {"downlink": "qsgd"}),
+    ("both_qsgd", {"uplink": "qsgd", "downlink": "qsgd"}),
+)
 
 
 def bench_comm_population(pop: int, rounds: int) -> dict:
@@ -268,27 +281,44 @@ def bench_comm_population(pop: int, rounds: int) -> dict:
     sizes = task.sizes()
     loss = make_quadratic_loss(DIM_COMM)
     params = {"x": jnp.zeros(DIM_COMM)}
+    dense = dense_bits(params)
     out: dict = {}
-    for name in COMM_CODECS:
+    for name, knobs in COMM_ARMS:
         fl = _fl(pop, engine="cohort", rr_backend="device_ref", prefetch=2,
-                 uplink=name, uplink_bits=4, uplink_chunk=DIM_COMM,
-                 uplink_frac=0.1)
+                 uplink_bits=4, uplink_chunk=DIM_COMM, uplink_frac=0.1,
+                 downlink_bits=4, downlink_chunk=DIM_COMM, downlink_frac=0.1,
+                 **knobs)
         eng = CohortEngine.build(task, Population.build(fl, sizes=sizes), fl)
         strat = bind_strategy(strategy_for(fl), fl, loss, num_clients=pop)
-        # donation keeps the topk error-feedback [N+1, dim] residual bank
-        # in-place — without it the scatter is an O(N) memcpy per round
+        # donation keeps the [N+1, dim] banks (EF residuals, DIANA shifts,
+        # downlink references) in-place — without it the scatter is an O(N)
+        # memcpy per round
         step = jit_round_step(build_round_step(loss, strat, fl, num_clients=pop,
                                                plane=eng.plane), donate=True)
         st = strat.init(params)
         st, _ = step(st, eng.device_plan(0))            # compile
         jax.block_until_ready(st.params)
         out[name] = _time_engine(eng, step, st, rounds, 2)
+        up_bits = (wire_bits_total(strat.codec, params)
+                   if fl.uplink != "identity" else dense)
+        down_bits = (wire_bits_total(strat.down_codec, params)
+                     if fl.downlink != "identity" else dense)
         if name != "identity":
-            out[f"ratio_{name}"] = (dense_bits(params)
-                                    / uplink_wire_bits(strat.codec, params))
             out[f"{name}_vs_identity"] = out[name] / out["identity"]
+            # per-direction bytes per round (the whole cohort's wire traffic)
+            out[f"up_mbytes_{name}"] = COHORT * up_bits / 8e6
+            out[f"down_mbytes_{name}"] = COHORT * down_bits / 8e6
+            # total both directions vs the dense bidirectional cost — the
+            # number the compressed-both-directions acceptance bar gates
+            out[f"ratio_total_{name}"] = 2 * dense / (up_bits + down_bits)
+        if fl.uplink != "identity":
+            out[f"ratio_{name}"] = dense / up_bits
+        if fl.downlink != "identity":
+            out[f"ratio_down_{name}"] = dense / down_bits
         if name == "topk":
             out["ef_bank_bytes"] = (pop + 1) * DIM_COMM * 4
+        if name == "down_qsgd":
+            out["ref_bank_bytes"] = (pop + 1) * DIM_COMM * 4
         # every arm must hold the single-compilation guard — a recompile in
         # any codec's encode path (shape/dtype leak) shows up here
         out["compilations"] = max(out.get("compilations", 0),
@@ -302,23 +332,29 @@ def main_comm(pops=(1_000, 100_000, 1_000_000), rounds: int = 60,
     results: dict = {"dim": DIM_COMM, "cohort": COHORT, "local_batch": 2,
                      "epochs": 2, "samples_per_client": SAMPLES,
                      "uplink_bits": 4, "uplink_chunk": DIM_COMM,
-                     "uplink_frac": 0.1, "rounds_timed": rounds,
-                     "populations": {}}
+                     "uplink_frac": 0.1, "downlink_bits": 4,
+                     "downlink_chunk": DIM_COMM, "downlink_frac": 0.1,
+                     "rounds_timed": rounds, "populations": {}}
     for pop in pops:
         res = bench_comm_population(pop, rounds)
         results["populations"][str(pop)] = res
-        for name in COMM_CODECS:
+        for name, _ in COMM_ARMS:
             rows.append(csv_row(f"comm/{pop}/{name}", 1.0 / res[name],
                                 f"{res[name]:.1f}rps"))
         print(f"pop={pop}: " + ", ".join(f"{k}={v:.3f}" if isinstance(v, float)
                                          else f"{k}={v}" for k, v in res.items()))
         if check:
-            # the acceptance bar: every compressed codec cuts bytes-on-wire
-            # >= 4x, compiles once, and keeps a usable fraction of identity
-            # throughput (the codec runs in the jitted round's critical path)
-            for name in COMM_CODECS[1:]:
+            # the acceptance bars: every compressed codec cuts its
+            # direction's bytes-on-wire >= 4x, compiles once, and keeps a
+            # usable fraction of identity throughput; the both-directions
+            # arm must cut TOTAL bytes >= 4x at >= 0.8x identity rps
+            for name in ("qsgd", "topk", "randk", "diana_qsgd"):
                 assert res[f"ratio_{name}"] >= 4.0, (pop, name, res)
                 assert res[f"{name}_vs_identity"] >= 0.2, (pop, name, res)
+            assert res["ratio_down_down_qsgd"] >= 4.0, (pop, res)
+            assert res["down_qsgd_vs_identity"] >= 0.2, (pop, res)
+            assert res["ratio_total_both_qsgd"] >= 4.0, (pop, res)
+            assert res["both_qsgd_vs_identity"] >= 0.8, (pop, res)
             assert res["compilations"] == 1, (pop, res)
     return _write_scenario(results, rows, COMM_PATH, "bench_comm", quick)
 
@@ -536,7 +572,8 @@ if __name__ == "__main__":
     ap.add_argument("--stateful", action="store_true",
                     help="stateful-chain scenario: scaffold state bank vs sgd")
     ap.add_argument("--compressed", action="store_true",
-                    help="uplink codec scenario: identity vs qsgd/topk/randk")
+                    help="comm-plane scenario: uplink codecs + DIANA, "
+                         "compressed downlink, both-directions arm")
     ap.add_argument("--fleet", action="store_true",
                     help="fleet scenario: buffered-async vs sync virtual time")
     args = ap.parse_args()

@@ -11,8 +11,11 @@ box), so the gate checks the *ratio* metrics each scenario was built around:
 * cohort     — engine_prefetch / legacy speedup per population
 * bucketed   — bucketed / padded speedup
 * stateful   — scaffold / sgd throughput retention (O(cohort) state traffic)
-* comm       — bytes-on-wire compression ratios (static — also held to the
-               hard >= 4x acceptance floor) and codec / identity throughput
+* comm       — per-direction bytes-on-wire compression ratios (static — also
+               held to the hard >= 4x acceptance floor, including the
+               both-directions arm's TOTAL-bytes ratio) and codec / identity
+               throughput for every arm (uplink codecs, DIANA, downlink
+               broadcast, compressed-both-directions)
 * fleet      — buffered-async / sync virtual-time round-throughput under
                zipf device latency (also held to the hard >= 1.5x floor)
 * obs        — telemetry-arm / off throughput retention (full
@@ -52,8 +55,11 @@ SCENARIOS: dict[str, tuple[str, tuple[str, ...]]] = {
     "bucketed": ("BENCH_bucketed.json", ("speedup_bucketed_vs_padded",)),
     "stateful": ("BENCH_stateful.json", ("scaffold_vs_sgd",)),
     "comm": ("BENCH_comm.json",
-             ("ratio_qsgd", "ratio_topk", "ratio_randk",
-              "qsgd_vs_identity", "topk_vs_identity", "randk_vs_identity")),
+             ("ratio_qsgd", "ratio_topk", "ratio_randk", "ratio_diana_qsgd",
+              "ratio_down_down_qsgd", "ratio_total_both_qsgd",
+              "qsgd_vs_identity", "topk_vs_identity", "randk_vs_identity",
+              "diana_qsgd_vs_identity", "down_qsgd_vs_identity",
+              "both_qsgd_vs_identity")),
     "fleet": ("BENCH_fleet.json",
               ("buffered_vs_sync_vtime", "buffered_vs_sync_vtime_per_update")),
     "obs": ("BENCH_obs.json",
@@ -65,6 +71,10 @@ SCENARIOS: dict[str, tuple[str, tuple[str, ...]]] = {
 
 # acceptance floors that hold regardless of the baseline (the committed bar)
 HARD_FLOORS = {"ratio_qsgd": 4.0, "ratio_topk": 4.0, "ratio_randk": 4.0,
+               "ratio_diana_qsgd": 4.0, "ratio_down_down_qsgd": 4.0,
+               # the compressed-both-directions arm: TOTAL bytes on the wire
+               # (uplink + downlink broadcast) must stay >= 4x under dense
+               "ratio_total_both_qsgd": 4.0,
                "buffered_vs_sync_vtime": 1.5,
                # full instrumentation may cost at most 10% round throughput
                "instrumented_vs_off": 0.9,

@@ -214,16 +214,27 @@ ExecMode = Literal["padded", "bucketed"]
 #   device_ref  — stateless swap-or-not generated inside the jitted round (jnp)
 #   device      — same math as a Pallas kernel (interpret-mode on CPU)
 RRBackend = Literal["host", "host_feistel", "device_ref", "device"]
-# Uplink codec (repro.fed.comm.CODECS; extensible via register_codec, hence
-# plain str).  Clients encode their update inside the jitted round and the
-# server decodes-then-combines; non-identity codecs surface bytes-on-wire in
-# the round metrics:
+# Communication plane (repro.fed.comm.CODECS; extensible via register_codec,
+# hence plain str).  Codecs register with a direction capability (uplink /
+# downlink / both) and each direction resolves its own knob family.
+# Uplink (client -> server): clients encode their update inside the jitted
+# round and the server decodes-then-combines; non-identity codecs surface
+# bytes-on-wire in the round metrics:
 #   "identity" — dense uplink (the default; bitwise-frozen no-comm contract)
 #   "qsgd"     — stochastic int quantization (uplink_bits levels, one fp32
 #                scale per uplink_chunk values; kernels/quantize pack path)
 #   "topk"     — magnitude top-k + per-client error feedback (uplink_frac)
 #   "randk"    — seeded random-k, unbiased n/k scaling (values-only wire)
 #   "ef_qsgd" / "ef_randk" — error-feedback variants
+#   "diana_qsgd" / "diana_randk" / "diana_topk" — DIANA-RR learned shifts:
+#                each client keeps h_i, ships C(Delta_i - h_i) and both ends
+#                apply h_i <- h_i + shift_alpha * C(Delta_i - h_i)
+# Downlink (server -> client broadcast): the server encodes the model's
+# delta against a client-held reference (banked on ServerState.clients under
+# "downlink"); clients reconstruct params = ref + decode(...) inside the
+# jitted round and the reconstruction becomes their next reference.
+# Downlink-capable codecs are the stateless ones (identity / qsgd / randk) —
+# EF/shift state is client-side and uplink-only (register_codec enforces it).
 UplinkBackend = Literal["ref", "pallas"]
 # Heterogeneous fleet plane (repro.fed.fleet).  Fleet model (FLEETS registry;
 # extensible via register_fleet, hence plain str):
@@ -337,13 +348,22 @@ class FLConfig:
     rr_rounds: int = 24            # swap-or-not cipher rounds (device/feistel RR)
     prefetch: int = 2              # rounds sampled ahead by the async scheduler
     participation: str = "iid"     # key into cohort.scheduler.PARTICIPATION
-    # uplink communication plane (compressed client->server updates; see the
-    # Uplink codec note above and repro.fed.comm)
+    # communication plane (compressed client->server updates and server->
+    # client broadcasts; see the Communication plane note above and
+    # repro.fed.comm).  Each direction routes its own knob family through
+    # the shared per-direction validator at bind time.
     uplink: str = "identity"       # codec name (key into fed.comm.CODECS)
     uplink_bits: int = 4           # qsgd: bits per value (2 | 4 | 8)
     uplink_chunk: int = 256        # qsgd: values per fp32 scale
     uplink_frac: float = 0.1       # topk/randk: fraction of coords shipped
-    uplink_backend: UplinkBackend = "ref"  # quantize pack path (ref | pallas)
+    uplink_backend: UplinkBackend = "ref"  # quantize pack path, both directions
+    shift_alpha: float = 0.5       # diana_*: shift lr, h += alpha * C(d - h)
+    # downlink broadcast (reference-compressed; "identity" keeps the dense
+    # broadcast bitwise-frozen — the pre-downlink op sequence exactly)
+    downlink: str = "identity"     # downlink-capable codec name
+    downlink_bits: int = 4         # qsgd: bits per value (2 | 4 | 8)
+    downlink_chunk: int = 256      # qsgd: values per fp32 scale
+    downlink_frac: float = 0.1     # randk: fraction of coords shipped
     # heterogeneous fleet plane (device tiers, fault injection, async server;
     # see the ServerMode note above and repro.fed.fleet) — the defaults keep
     # the synchronous path bitwise-frozen

@@ -1,59 +1,92 @@
-"""Uplink codecs — the compressed communication plane's algorithm layer.
+"""Direction-aware codecs — the compressed communication plane's algorithm
+layer, covering BOTH directions of the cross-device wire.
 
-FedShuffle targets the cross-device regime where the uplink is the
+FedShuffle targets the cross-device regime where communication is the
 bottleneck: every round each sampled client ships its model update
-``Delta_i = y_i - x`` back to the server.  Sadiev et al. 2022 (Q-RR /
-Q-NASTYA) show random reshuffling composes with quantized / sparsified
-uplinks, which is exactly what this module implements: a :class:`Codec` is
-the per-client ``encode -> wire -> decode`` rule the round driver applies to
-every update *inside the jitted round*, on slot-order ``[C]`` arrays —
-aggregation always combines the **decoded** updates, so the math is
-identical between the padded and bucketed execution layouts.
+``Delta_i = y_i - x`` back to the server (the **uplink**), and the server
+broadcasts the new model to the next cohort (the **downlink**).  Sadiev et
+al. 2022 (Q-RR / Q-NASTYA / DIANA-RR) show random reshuffling composes with
+quantized / sparsified communication in both directions, which is exactly
+what this module implements: a :class:`Codec` is the per-client
+``encode -> wire -> decode`` rule the round driver applies *inside the
+jitted round*, on slot-order ``[C]`` arrays — aggregation always combines
+the **decoded** updates, so the math is identical between the padded and
+bucketed execution layouts.
+
+Directions
+----------
+Every :data:`CODECS` entry registers with a declared direction capability —
+``"uplink"``, ``"downlink"`` or ``"both"`` — and each direction resolves its
+own ``FLConfig`` knob family (``uplink*`` / ``downlink*``) through the
+shared per-direction validator :func:`validate_codec_knobs`:
+
+* **uplink** (``fl.uplink``): each client compresses its update
+  (:func:`uplink_apply`); the server decodes-then-combines.  Optional
+  per-client compressor state (error-feedback residuals, DIANA shifts)
+  rides the ``[N+1, ...]`` bank on ``ServerState.clients`` under the
+  reserved key ``"uplink"``.
+* **downlink** (``fl.downlink``): the server compresses the model's delta
+  against a *client-held reference* (:func:`downlink_apply`) — the
+  reference rides the bank under the reserved key ``"downlink"`` — and the
+  client's reconstruction ``ref + decode(encode(x - ref))`` becomes both
+  its round-start point and its next reference.  Server and client stay in
+  exact agreement about what the client holds even under partial
+  participation (a skipped client's reference goes stale; it never
+  desyncs).  Downlink-capable codecs are the **stateless** ones:
+  client-side compressor state cannot ride the server's broadcast, and
+  :func:`register_codec` rejects the conflict at registration time.
 
 Protocol (mirrors the ClientTransform design in ``repro.core.local``):
 
 * ``encode(leaf, key) -> payload`` / ``decode(payload, key, like) -> leaf``
-  run per *leaf* of one client's update (a tree-level harness,
-  :func:`uplink_apply`, walks the pytree and derives per-leaf subkeys).  The
-  payload pytree IS the wire format — ``wire_bits(like)`` charges exactly
-  its bytes.
-* optional **per-client error-feedback state**: ``client_init(params)``
-  declares one client's residual template; the round driver banks it
-  ``[N+1, ...]`` on ``ServerState.clients`` under the reserved key
-  ``"uplink"`` — gathered O(cohort) per round, slot-order scattered back,
-  checkpointed/resumed bitwise by ``save_server_state`` like any other
-  client state.  ``finalize(src, dhat, state) -> state'`` commits the
-  round's residual (default: ``e' = (Delta + e) - decode(encode(Delta + e))``,
-  the classic EF-SGD recipe).
+  run per *leaf* of one payload (the tree-level harness derives per-leaf
+  subkeys).  The payload pytree IS the wire format — ``wire_bits(like)``
+  charges exactly its bytes (:func:`wire_bits_total` sums a whole tree).
+* optional **per-client uplink state**: ``client_init(params)`` declares one
+  client's state template (EF residual ``e``, DIANA shift ``h``), banked
+  ``[N+1, ...]`` on ``ServerState.clients`` — gathered O(cohort) per round,
+  slot-order scattered back, checkpointed/resumed bitwise by
+  ``save_server_state`` like any other client state.  ``apply`` (tree-level,
+  optional) overrides the whole per-client hook for compositions the EF
+  recipe cannot express (DIANA's shifted compression).
 * ``seeded`` marks codecs whose randomness (stochastic rounding, random
   coordinate choice) must be keyed: the driver derives one uint32 key per
-  (seed, client, round) via :func:`round_keys`, so every stream is
-  stateless, reproducible, and identical across the legacy / engine /
-  prefetch paths and across checkpoint resume.
+  (seed, client, round) via :func:`round_keys` — the downlink folds in an
+  extra subtag (:func:`downlink_round_keys`) so the two directions' streams
+  never correlate — and every stream is stateless, reproducible, and
+  identical across the legacy / engine / prefetch paths and across
+  checkpoint resume.
 
-Built-ins (:data:`CODECS`, selected via ``FLConfig.uplink``):
+Built-ins (:data:`CODECS`; ``FLConfig.uplink`` / ``FLConfig.downlink``):
 
-=========== ============================================================
-identity    exact pass-through (the default; bitwise-frozen contract)
-qsgd        stochastic int quantization, per-chunk fp32 scales
-            (``uplink_bits``/``uplink_chunk``; ``kernels.quantize`` packs)
-topk        magnitude top-k sparsification + error feedback
-            (``uplink_frac``; values + int32 indices on the wire)
-randk       seeded random-k sparsification, unbiased n/k scaling
-            (indices regenerated from the round key — values-only wire)
-ef_qsgd     qsgd + error feedback
-ef_randk    randk + error feedback
-=========== ============================================================
+=========== ========== =====================================================
+name        direction
+=========== ========== =====================================================
+identity    both       exact pass-through (the default; bitwise-frozen)
+qsgd        both       stochastic int quantization, per-chunk fp32 scales
+                       (``*_bits``/``*_chunk``; ``kernels.quantize`` packs)
+topk        uplink     magnitude top-k sparsification + error feedback
+                       (``uplink_frac``; values + int32 indices on the wire)
+randk       both       seeded random-k sparsification, unbiased n/k scaling
+                       (indices regenerated from the key — values-only wire)
+ef_qsgd     uplink     qsgd + error feedback
+ef_randk    uplink     randk + error feedback
+diana_qsgd  uplink     qsgd through DIANA learned shifts (``shift_alpha``)
+diana_randk uplink     randk through DIANA learned shifts
+diana_topk  uplink     top-k + error feedback + DIANA learned shifts
+=========== ========== =====================================================
 
 Robustness-plane ordering: the round driver applies client attacks
-(``fl.attack``, ``repro.fed.robust``) *before* ``encode`` — a Byzantine
-client controls the payload it ships, so the attack corrupts what goes on
-the wire and the codec faithfully compresses the corrupted update.  Robust
-aggregators and quarantine guards then operate on the **decoded** deltas,
-the same arrays honest aggregation would see.
+(``fl.attack``, ``repro.fed.robust``) *before* uplink ``encode`` — a
+Byzantine client controls the payload it ships, so the attack corrupts what
+goes on the wire and the codec faithfully compresses the corrupted update.
+Robust aggregators and quarantine guards then operate on the **decoded**
+deltas, the same arrays honest aggregation would see.
 """
 from __future__ import annotations
 
+import inspect
+import warnings
 from typing import Callable, NamedTuple
 
 import jax
@@ -64,14 +97,21 @@ from ...kernels.quantize.ops import quantize_pack, unpack_dequantize
 from ...kernels.quantize.ref import BITS_CHOICES, packed_width
 from ...kernels.rr_perm.ref import key_combine, stream_key, swap_or_not
 from ...utils.pytree import tree_zeros_like
-from ...utils.tags import TAG_COMM
+from ...utils.tags import SUB_COMM_DOWNLINK, TAG_COMM
 
-# ServerState.clients key the error-feedback residual bank lives under —
+# ServerState.clients keys the comm plane's per-client banks live under —
 # reserved: bind_strategy refuses local chains with a stateful transform of
-# the same name.
+# either name.  "uplink" holds compressor state (EF residual e / DIANA shift
+# h); "downlink" holds the broadcast reference {"ref": params-shaped}.
 UPLINK_STATE_KEY = "uplink"
+DOWNLINK_STATE_KEY = "downlink"
 
-_TAG_COMM = TAG_COMM     # domain-separates uplink streams (registry: utils/tags.py)
+# the FLConfig knob families, one per direction (fl.<direction>,
+# fl.<direction>_bits / _chunk / _frac)
+DIRECTIONS = ("uplink", "downlink")
+
+_TAG_COMM = TAG_COMM     # domain-separates comm streams (registry: utils/tags.py)
+_SUB_DOWNLINK = SUB_COMM_DOWNLINK
 
 
 def round_keys(seed: int, client_id, rnd, xp=jnp):
@@ -89,24 +129,42 @@ def round_keys(seed: int, client_id, rnd, xp=jnp):
     return key_combine(base, dt(_TAG_COMM), xp)
 
 
+def downlink_round_keys(seed: int, client_id, rnd, xp=jnp):
+    """Per-client downlink stream keys for one round ([C] uint32).
+
+    The uplink chain with the downlink subtag folded in: a round where both
+    directions compress draws two independent streams per (seed, client,
+    round), so the server's stochastic rounding never correlates with the
+    client's — while keeping the same statelessness guarantees."""
+    return key_combine(round_keys(seed, client_id, rnd, xp),
+                       xp.uint32(_SUB_DOWNLINK), xp)
+
+
 class Codec(NamedTuple):
-    """One uplink compression rule (all hooks pure pytree functions).
+    """One compression rule (all hooks pure pytree functions).
 
     ``encode``/``decode``/``wire_bits`` are leaf-level (the harness maps
-    them over the update tree with per-leaf subkeys); ``client_init``/
-    ``finalize`` are tree-level (the EF residual mirrors the params tree).
+    them over the payload tree with per-leaf subkeys); ``client_init``/
+    ``finalize``/``apply`` are tree-level (uplink-only — compressor state
+    mirrors the params tree and lives on the client).
     ``decode(payload, key, like)`` must return ``like.shape``/``like.dtype``;
     ``wire_bits(like)`` is static accounting — a python number of bits one
-    client pays to ship this leaf.
+    endpoint pays to ship this leaf.  ``direction`` declares which wire
+    directions the rule can serve (``"uplink"`` / ``"downlink"`` /
+    ``"both"``); any codec keeping client state is uplink-only.
     """
 
     name: str
     encode: Callable                       # (leaf, key) -> payload dict
     decode: Callable                       # (payload, key, like) -> leaf
     wire_bits: Callable                    # (like) -> bits (python number)
-    client_init: Callable | None = None    # (params) -> EF state pytree
+    client_init: Callable | None = None    # (params) -> uplink state pytree
     finalize: Callable | None = None       # (src, dhat, state) -> state'
     seeded: bool = False
+    apply: Callable | None = None          # tree-level override (DIANA):
+    #                                        (roundtrip, delta, state, key)
+    #                                        -> (delta_hat, state')
+    direction: str = "both"                # declared direction capability
 
 
 def with_error_feedback(inner: Codec, *, name: str | None = None) -> Codec:
@@ -114,23 +172,61 @@ def with_error_feedback(inner: Codec, *, name: str | None = None) -> Codec:
     ``Delta + e`` and keeps ``e' = (Delta + e) - decoded`` in its bank row,
     so whatever the compressor drops this round is retransmitted later —
     the standard fix for biased compressors (top-k) and a variance help for
-    unbiased ones.  Wire format and accounting are the inner codec's."""
+    unbiased ones.  Wire format and accounting are the inner codec's.  The
+    residual lives on the client, so the composition is uplink-only."""
     if inner.client_init is not None:
         raise ValueError(f"codec {inner.name!r} already keeps per-client state")
     return inner._replace(
         name=name or f"ef_{inner.name}",
         client_init=lambda params: {"e": tree_zeros_like(params)},
+        direction="uplink",
     )
 
 
-def uplink_apply(codec: Codec) -> Callable:
-    """Compile a codec into the per-client round hook
+def with_diana_shift(inner: Codec, alpha: float, *,
+                     name: str | None = None) -> Codec:
+    """Wrap a codec with DIANA-RR learned shifts (Sadiev et al. 2022): each
+    client keeps a shift ``h_i`` next to any EF residual, ships
+    ``C(Delta_i - h_i)``, the server reconstructs ``h_i + C(Delta_i - h_i)``
+    and BOTH ends apply ``h_i <- h_i + alpha * C(Delta_i - h_i)`` — the
+    compressor only ever sees the drift off the learned shift, which shrinks
+    as training stabilizes.  Composes with error feedback (wrap the EF codec;
+    the compressed source is then ``Delta + e - h``) and the shift bank rides
+    the ``"uplink"`` state key like the residual.  Uplink-only."""
+    if not 0.0 < alpha <= 1.0:
+        raise ValueError(f"fl.shift_alpha must be in (0, 1], got {alpha!r}")
+    has_ef = inner.client_init is not None
+    inner_init = inner.client_init
 
-        one(delta, ef_state, key) -> (delta_hat, ef_state')
+    def client_init(params):
+        d = dict(inner_init(params)) if inner_init is not None else {}
+        d["h"] = tree_zeros_like(params)
+        return d
 
-    vmapped over the cohort (or called per client inside the sequential
-    scan) by the round driver.  ``ef_state`` is ``{}`` for stateless codecs.
-    """
+    def apply(roundtrip, delta, st, key):
+        h = jax.tree.map(lambda t: t.astype(jnp.float32), st["h"])
+        src = jax.tree.map(lambda d: d.astype(jnp.float32), delta)
+        if has_ef:
+            src = jax.tree.map(lambda s, e: s + e.astype(jnp.float32),
+                               src, st["e"])
+        c = roundtrip(jax.tree.map(lambda s, h0: s - h0, src, h), key)
+        dhat = jax.tree.map(lambda h0, cl: h0 + cl, h, c)
+        st2 = {"h": jax.tree.map(
+            lambda b, h0, cl: (h0 + alpha * cl).astype(b.dtype),
+            st["h"], h, c)}
+        if has_ef:
+            st2["e"] = jax.tree.map(
+                lambda b, s, dh: (s - dh).astype(b.dtype), st["e"], src, dhat)
+        return jax.tree.map(lambda dh, d: dh.astype(d.dtype), dhat, delta), st2
+
+    return inner._replace(
+        name=name or f"diana_{inner.name}",
+        client_init=client_init, apply=apply, direction="uplink")
+
+
+def tree_roundtrip(codec: Codec) -> Callable:
+    """The tree-level ``decode(encode(.))`` walk both directions share:
+    per-leaf subkeys keep the leaves of one payload on independent streams."""
 
     def roundtrip(src, key):
         leaves, treedef = jax.tree.flatten(src)
@@ -140,16 +236,32 @@ def uplink_apply(codec: Codec) -> Callable:
             out.append(codec.decode(codec.encode(v, ki), ki, v))
         return jax.tree.unflatten(treedef, out)
 
-    def one(delta, ef, key):
+    return roundtrip
+
+
+def uplink_apply(codec: Codec) -> Callable:
+    """Compile a codec into the per-client uplink hook
+
+        one(delta, state, key) -> (delta_hat, state')
+
+    vmapped over the cohort (or called per client inside the sequential
+    scan) by the round driver.  ``state`` is ``{}`` for stateless codecs.
+    """
+    roundtrip = tree_roundtrip(codec)
+
+    def one(delta, st, key):
+        if codec.apply is not None:
+            # tree-level composition (DIANA shifts) owns the whole hook
+            return codec.apply(roundtrip, delta, st, key)
         if codec.client_init is None:
-            return roundtrip(delta, key), ef
+            return roundtrip(delta, key), st
         # error feedback: compress Delta + e (fp32), bank the new residual
         src = jax.tree.map(
             lambda d, e: d.astype(jnp.float32) + e.astype(jnp.float32),
-            delta, ef["e"])
+            delta, st["e"])
         dhat = roundtrip(src, key)
         if codec.finalize is not None:
-            ef2 = codec.finalize(src, dhat, ef)
+            ef2 = codec.finalize(src, dhat, st)
         else:
             ef2 = {"e": jax.tree.map(lambda s, h: s - h, src, dhat)}
         return jax.tree.map(lambda h, d: h.astype(d.dtype), dhat, delta), ef2
@@ -157,37 +269,142 @@ def uplink_apply(codec: Codec) -> Callable:
     return one
 
 
-def uplink_wire_bits(codec: Codec, params) -> float:
-    """Bits one client pays to ship a whole params-shaped update."""
-    return float(sum(codec.wire_bits(leaf) for leaf in jax.tree.leaves(params)))
+def downlink_apply(codec: Codec) -> Callable:
+    """Compile a codec into the per-client downlink broadcast hook
+
+        one(params, ref, key) -> params_hat
+
+    The server encodes the model's delta against the client-held reference
+    (gathered from the ``"downlink"`` bank); the client reconstructs
+    ``params_hat = ref + decode(encode(params - ref))``, which is both its
+    round-start point and — committed back to the bank by the round driver —
+    its next reference.  Stateless beyond the reference itself, so it is
+    exactly replayable from (seed, client, round).
+
+    ``identity`` bypasses the delta arithmetic entirely (``ref + (x - ref)``
+    would NOT be bitwise ``x`` in float): the exact pass-through holds here
+    like everywhere else, whatever the reference.
+    """
+    if codec.name == "identity":
+        return lambda params, ref, key: params
+    roundtrip = tree_roundtrip(codec)
+
+    def one(params, ref, key):
+        delta = jax.tree.map(
+            lambda p, r: p.astype(jnp.float32) - r.astype(jnp.float32),
+            params, ref)
+        dhat = roundtrip(delta, key)
+        return jax.tree.map(
+            lambda r, d, p: (r.astype(jnp.float32) + d).astype(p.dtype),
+            ref, dhat, params)
+
+    return one
+
+
+# ---------------------------------------------------------------------------
+# Wire accounting (direction-neutral — both endpoints ship payload trees)
+# ---------------------------------------------------------------------------
+
+
+def wire_bits_total(codec: Codec, tree) -> float:
+    """Bits one endpoint pays to ship a whole ``tree``-shaped payload."""
+    return float(sum(codec.wire_bits(leaf) for leaf in jax.tree.leaves(tree)))
 
 
 def dense_bits(params) -> float:
-    """The uncompressed uplink cost of a params-shaped update."""
+    """The uncompressed cost of shipping a params-shaped tree either way."""
     return float(sum(leaf.size * leaf.dtype.itemsize * 8
                      for leaf in jax.tree.leaves(params)))
 
 
-def uplink_mbytes_per_slot(codec: Codec, params, valid) -> jnp.ndarray:
+def mbytes_per_slot(codec: Codec, params, valid) -> jnp.ndarray:
     """Per-slot megabytes on the wire this round ([C] fp32).
 
     Today every arriving client pays the codec's static params-shaped cost
     (invalid padding slots pay 0), so this is ``valid * const`` — but it is
     the slot-order array the telemetry histograms bin, and the one place a
     future variable-rate codec changes to make per-client cost honest."""
-    bits = uplink_wire_bits(codec, params)
+    bits = wire_bits_total(codec, params)
     return jnp.asarray(valid, jnp.float32) * jnp.float32(bits / 8e6)
 
 
+_DEPRECATION_WARNED: set[str] = set()
+
+
+def _warn_once(old: str, new: str) -> None:
+    if old not in _DEPRECATION_WARNED:
+        _DEPRECATION_WARNED.add(old)
+        warnings.warn(
+            f"repro.fed.comm.{old} is deprecated (direction-ambiguous since "
+            f"the plane went bidirectional); use {new}",
+            DeprecationWarning, stacklevel=3)
+
+
+def uplink_wire_bits(codec: Codec, params) -> float:
+    """Deprecated alias of :func:`wire_bits_total` (one-shot warning)."""
+    _warn_once("uplink_wire_bits", "wire_bits_total")
+    return wire_bits_total(codec, params)
+
+
+def uplink_mbytes_per_slot(codec: Codec, params, valid) -> jnp.ndarray:
+    """Deprecated alias of :func:`mbytes_per_slot` (one-shot warning)."""
+    _warn_once("uplink_mbytes_per_slot", "mbytes_per_slot")
+    return mbytes_per_slot(codec, params, valid)
+
+
 # ---------------------------------------------------------------------------
-# Built-in codec factories: make(fl) -> Codec
+# Shared per-direction knob validation
 # ---------------------------------------------------------------------------
 
 
-def make_identity(fl: FLConfig) -> Codec:
+def validate_codec_knobs(fl: FLConfig, direction: str, *needs: str) -> dict:
+    """Bind-time bounds checks for one direction's codec knob family.
+
+    THE shared validator: the qsgd/topk/randk factories call it for whichever
+    direction they are being built for, so ``fl.uplink_*`` and
+    ``fl.downlink_*`` knobs go through identical checks and the two error
+    paths cannot drift.  ``needs`` names the knobs a codec actually reads
+    (``"bits"``, ``"chunk"``, ``"frac"``, ``"backend"``); returns the
+    validated values keyed by those short names.
+    """
+    if direction not in DIRECTIONS:
+        raise ValueError(
+            f"unknown codec direction {direction!r}; have {DIRECTIONS}")
+    out: dict = {}
+    for knob in needs:
+        if knob == "backend":
+            # the quantize pack path is shared by both directions on purpose:
+            # the wire format must match whichever end decodes it
+            backend = fl.uplink_backend
+            if backend not in ("ref", "pallas"):
+                raise ValueError(
+                    f"unknown uplink_backend {backend!r}; have ('ref', 'pallas')")
+            out[knob] = backend
+            continue
+        val = getattr(fl, f"{direction}_{knob}")
+        if knob == "bits" and val not in BITS_CHOICES:
+            raise ValueError(
+                f"fl.{direction}_bits must be one of {BITS_CHOICES}, got {val!r}")
+        if knob == "chunk" and val < 1:
+            raise ValueError(
+                f"fl.{direction}_chunk must be >= 1, got {val!r}")
+        if knob == "frac" and not 0.0 < val <= 1.0:
+            raise ValueError(
+                f"fl.{direction}_frac must be in (0, 1], got {val!r}")
+        out[knob] = val
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Built-in codec factories: make(fl, direction) -> Codec
+# ---------------------------------------------------------------------------
+
+
+def make_identity(fl: FLConfig, direction: str = "uplink") -> Codec:
     """Exact pass-through — the frozen bitwise contract: with
-    ``uplink='identity'`` the round's float op sequence is byte-for-byte the
-    no-comm path's (the payload wraps the same arrays, no casts, no math)."""
+    ``uplink='identity'`` / ``downlink='identity'`` that direction's float op
+    sequence is byte-for-byte the no-comm path's (the payload wraps the same
+    arrays, no casts, no math)."""
     return Codec(
         name="identity",
         encode=lambda v, key: {"v": v},
@@ -200,22 +417,15 @@ def _frac_k(frac: float, n: int) -> int:
     return max(1, min(n, int(round(frac * n))))
 
 
-def make_qsgd(fl: FLConfig) -> Codec:
-    """QSGD-style stochastic quantization to ``uplink_bits`` signed levels
-    with one fp32 scale per ``uplink_chunk`` values; the bit-packed stream
-    comes from ``kernels.quantize`` (``uplink_backend`` selects the in-jit
-    jnp oracle or the Pallas kernel — bitwise-identical)."""
-    bits, chunk = fl.uplink_bits, fl.uplink_chunk
-    backend = fl.uplink_backend
-    if bits not in BITS_CHOICES:
-        raise ValueError(
-            f"fl.uplink_bits must be one of {BITS_CHOICES}, got {bits!r}")
-    if chunk < 1:
-        raise ValueError(f"fl.uplink_chunk must be >= 1, got {chunk!r}")
+def make_qsgd(fl: FLConfig, direction: str = "uplink") -> Codec:
+    """QSGD-style stochastic quantization to ``{direction}_bits`` signed
+    levels with one fp32 scale per ``{direction}_chunk`` values; the
+    bit-packed stream comes from ``kernels.quantize`` (``uplink_backend``
+    selects the in-jit jnp oracle or the Pallas kernel for BOTH directions —
+    bitwise-identical)."""
+    k = validate_codec_knobs(fl, direction, "bits", "chunk", "backend")
+    bits, chunk, backend = k["bits"], k["chunk"], k["backend"]
     pb = packed_width(chunk, bits)           # validates chunk % (8//bits)
-    if backend not in ("ref", "pallas"):
-        raise ValueError(
-            f"unknown uplink_backend {backend!r}; have ('ref', 'pallas')")
 
     def _nc(n: int) -> int:
         return -(-n // chunk)
@@ -242,13 +452,11 @@ def make_qsgd(fl: FLConfig) -> Codec:
     return Codec("qsgd", encode, decode, wire_bits, seeded=True)
 
 
-def make_topk_raw(fl: FLConfig) -> Codec:
+def make_topk_raw(fl: FLConfig, direction: str = "uplink") -> Codec:
     """Magnitude top-k per leaf: the k largest-|.| values plus their int32
     positions.  Biased — register through :func:`with_error_feedback` (the
     built-in ``topk`` entry) unless you know why you want it raw."""
-    frac = fl.uplink_frac
-    if not 0.0 < frac <= 1.0:
-        raise ValueError(f"fl.uplink_frac must be in (0, 1], got {frac!r}")
+    frac = validate_codec_knobs(fl, direction, "frac")["frac"]
 
     def encode(v, key):
         flat = v.astype(jnp.float32).reshape(-1)
@@ -266,16 +474,14 @@ def make_topk_raw(fl: FLConfig) -> Codec:
     return Codec("topk_raw", encode, decode, wire_bits)
 
 
-def make_randk(fl: FLConfig) -> Codec:
+def make_randk(fl: FLConfig, direction: str = "uplink") -> Codec:
     """Random-k sparsification with the unbiased ``n/k`` scaling.  The k
     coordinates are the first k outputs of the swap-or-not permutation of
     ``[0, n)`` under the round key (``kernels.rr_perm``) — a uniformly
     random k-subset the DECODER regenerates from the same key, so only the
     k values travel (no index bytes)."""
-    frac = fl.uplink_frac
+    frac = validate_codec_knobs(fl, direction, "frac")["frac"]
     rounds = fl.rr_rounds
-    if not 0.0 < frac <= 1.0:
-        raise ValueError(f"fl.uplink_frac must be in (0, 1], got {frac!r}")
 
     def _idx(key, n: int):
         k = _frac_k(frac, n)
@@ -298,31 +504,137 @@ def make_randk(fl: FLConfig) -> Codec:
     return Codec("randk", encode, decode, wire_bits, seeded=True)
 
 
-CODECS: dict[str, Callable[[FLConfig], Codec]] = {
-    "identity": make_identity,
-    "qsgd": make_qsgd,
+# ---------------------------------------------------------------------------
+# Registry: name -> CodecEntry(make, declared direction)
+# ---------------------------------------------------------------------------
+
+
+class CodecEntry(NamedTuple):
+    """One :data:`CODECS` record: the factory plus its declared direction.
+
+    Calling the entry builds the codec — ``entry(fl)`` keeps the historical
+    single-argument call working (uplink knobs); direction-aware factories
+    (any accepting a ``direction`` parameter) receive the direction they are
+    being built for, which routes the matching knob family."""
+
+    make: Callable
+    direction: str = "both"
+
+    def __call__(self, fl: FLConfig, direction: str = "uplink") -> Codec:
+        make = self.make
+        if isinstance(make, CodecEntry):      # an entry re-registered as-is
+            return make(fl, direction)
+        try:
+            wants = "direction" in inspect.signature(make).parameters
+        except (TypeError, ValueError):
+            wants = False
+        return make(fl, direction) if wants else make(fl)
+
+
+CODECS: dict[str, CodecEntry] = {
+    "identity": CodecEntry(make_identity, "both"),
+    "qsgd": CodecEntry(make_qsgd, "both"),
     # top-k without error feedback is simply a worse algorithm (the bias
-    # never washes out) — the registered entry is the EF-SGD composition
-    "topk": lambda fl: with_error_feedback(make_topk_raw(fl), name="topk"),
-    "randk": make_randk,
-    "ef_qsgd": lambda fl: with_error_feedback(make_qsgd(fl)),
-    "ef_randk": lambda fl: with_error_feedback(make_randk(fl)),
+    # never washes out) — the registered entry is the EF-SGD composition,
+    # which pins it to the uplink (the residual lives on the client)
+    "topk": CodecEntry(
+        lambda fl, direction="uplink": with_error_feedback(
+            make_topk_raw(fl, direction), name="topk"),
+        "uplink"),
+    "randk": CodecEntry(make_randk, "both"),
+    "ef_qsgd": CodecEntry(
+        lambda fl, direction="uplink": with_error_feedback(
+            make_qsgd(fl, direction)),
+        "uplink"),
+    "ef_randk": CodecEntry(
+        lambda fl, direction="uplink": with_error_feedback(
+            make_randk(fl, direction)),
+        "uplink"),
+    # DIANA-RR learned shifts: the compressor sees Delta - h, both ends move
+    # h by shift_alpha * C(Delta - h) — uplink-only (the shift bank is
+    # client state, exactly like EF residuals)
+    "diana_qsgd": CodecEntry(
+        lambda fl, direction="uplink": with_diana_shift(
+            make_qsgd(fl, direction), fl.shift_alpha),
+        "uplink"),
+    "diana_randk": CodecEntry(
+        lambda fl, direction="uplink": with_diana_shift(
+            make_randk(fl, direction), fl.shift_alpha),
+        "uplink"),
+    "diana_topk": CodecEntry(
+        lambda fl, direction="uplink": with_diana_shift(
+            with_error_feedback(make_topk_raw(fl, direction)),
+            fl.shift_alpha, name="diana_topk"),
+        "uplink"),
 }
 
 
-def register_codec(name: str, make: Callable[[FLConfig], Codec], *,
+def register_codec(name: str, make: Callable, *, direction: str = "both",
                    overwrite: bool = False) -> None:
-    """Register ``make(fl) -> Codec`` under ``name`` (FLConfig.uplink key)."""
+    """Register ``make(fl[, direction]) -> Codec`` under ``name``.
+
+    ``direction`` declares the capability (``"uplink"`` / ``"downlink"`` /
+    ``"both"``) that :func:`build_codec` routes ``fl.uplink`` /
+    ``fl.downlink`` against.  A codec whose composition keeps per-client
+    compressor state (error feedback, DIANA shifts) is uplink-only, and the
+    conflict is rejected HERE, at registration time, with the knobs named —
+    historically it only surfaced as a shape error inside jit."""
+    if direction not in ("uplink", "downlink", "both"):
+        raise ValueError(
+            f"codec direction must be 'uplink', 'downlink' or 'both', "
+            f"got {direction!r}")
     if not overwrite and name in CODECS:
         raise ValueError(
-            f"uplink codec {name!r} already registered (pass overwrite=True to replace)")
-    CODECS[name] = make
+            f"codec {name!r} already registered (pass overwrite=True to replace)")
+    entry = CodecEntry(make, direction)
+    if direction != "uplink":
+        try:
+            probe = entry(FLConfig())
+        except Exception:
+            # the factory needs non-default knobs to build; build_codec runs
+            # the identical check at bind time instead
+            probe = None
+        if probe is not None and (probe.client_init is not None
+                                  or probe.direction == "uplink"):
+            raise ValueError(
+                f"codec {name!r} declares direction={direction!r} but its "
+                f"composition keeps per-client compressor state (client_init "
+                f"is set: an error-feedback residual or DIANA shift).  That "
+                f"state lives on the CLIENT and the downlink encoder is the "
+                f"SERVER, so fl.downlink={name!r} could never honor it — "
+                f"register it with direction='uplink' (routing it through "
+                f"fl.uplink only), or drop the with_error_feedback / "
+                f"with_diana_shift wrapper from this entry.")
+    CODECS[name] = entry
 
 
-def build_codec(fl: FLConfig) -> Codec:
-    """Resolve ``fl.uplink`` to a bound Codec (bind-time validation: unknown
-    names and bad knob values raise here, not at the first round)."""
-    if fl.uplink not in CODECS:
+def build_codec(fl: FLConfig, direction: str = "uplink") -> Codec:
+    """Resolve one direction's configured codec to a bound Codec (bind-time
+    validation: unknown names, direction-incapable codecs and bad knob
+    values raise here, not at the first round)."""
+    if direction not in DIRECTIONS:
         raise ValueError(
-            f"unknown uplink codec {fl.uplink!r}; have {sorted(CODECS)}")
-    return CODECS[fl.uplink](fl)
+            f"unknown codec direction {direction!r}; have {DIRECTIONS}")
+    name = getattr(fl, direction)
+    if name not in CODECS:
+        raise ValueError(
+            f"unknown {direction} codec {name!r}; have {sorted(CODECS)}")
+    entry = CODECS[name]
+    declared = getattr(entry, "direction", "both")
+    if declared not in ("both", direction):
+        capable = sorted(n for n, e in CODECS.items()
+                         if getattr(e, "direction", "both") in ("both", direction))
+        raise ValueError(
+            f"fl.{direction}={name!r}, but codec {name!r} is registered "
+            f"{declared}-only; {direction}-capable codecs: {capable}")
+    codec = entry(fl, direction) if isinstance(entry, CodecEntry) else entry(fl)
+    if direction == "downlink" and (codec.client_init is not None
+                                    or codec.direction == "uplink"):
+        # bind-time twin of the register_codec rejection, for factories whose
+        # registration probe could not build under default knobs
+        raise ValueError(
+            f"fl.downlink={name!r} resolves to a codec keeping per-client "
+            f"compressor state (error feedback / DIANA shift) — client-side "
+            f"state cannot ride the server's broadcast; use a stateless "
+            f"downlink codec (e.g. 'identity', 'qsgd', 'randk').")
+    return codec

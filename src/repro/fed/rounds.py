@@ -27,9 +27,22 @@ through ``decode(encode(.))`` before aggregation — always vmapped over
 stacked slot-order [C] arrays (the compressed sequential-padded round stages
 its delta stack like the bucketed one), so codec float ops cannot be fused
 differently across layouts and padded == bucketed stays bitwise, error-
-feedback residuals (banked on ``ServerState.clients`` under "uplink")
-included.  ``identity`` is an exact pass-through: the default path's op
-sequence is byte-for-byte the pre-uplink one.
+feedback residuals and DIANA shifts (banked on ``ServerState.clients``
+under "uplink") included.  ``identity`` is an exact pass-through: the
+default path's op sequence is byte-for-byte the pre-uplink one.
+
+When the strategy also carries a non-identity *downlink* codec
+(``FLConfig.downlink``), the server's broadcast is compressed too: each
+cohort slot's round-start params become ``ref_i + decode(encode(x - ref_i))``
+against the client-held reference gathered from the bank (reserved key
+"downlink"), computed ONCE, vmapped over the slot-order [C] stack *before*
+the cohort executes — identical in every layout, so no extra staging is
+needed.  The reconstruction is committed back as the slot's next reference
+by the same masked O(cohort) scatter the other banks use (an unsampled
+client's reference goes stale but never desyncs), and each client's shipped
+update is measured from its own reconstruction (Q-NASTYA semantics).
+``downlink="identity"`` (the default) skips all of it — broadcast, client
+step and metric tree are byte-for-byte the pre-downlink ones.
 
 When the byzantine-robustness plane is active (``FLConfig.attack`` /
 ``aggregator`` / ``guard``; ``repro.fed.robust``), the driver (1) lets the
@@ -76,8 +89,9 @@ from ..obs import hist as obs_hist
 from ..obs import metrics_enabled
 from ..utils.pytree import tree_zeros_like
 from .bucketing import scan_clients, vmap_clients
-from .comm import (UPLINK_STATE_KEY, dense_bits, round_keys, uplink_apply,
-                   uplink_mbytes_per_slot, uplink_wire_bits)
+from .comm import (DOWNLINK_STATE_KEY, UPLINK_STATE_KEY, dense_bits,
+                   downlink_apply, downlink_round_keys, mbytes_per_slot,
+                   round_keys, uplink_apply, wire_bits_total)
 from .fleet import FLEET_STATE_KEY, fleet_active, slot_staleness
 from .privacy import (add_dp_noise, dp_active, dp_clip_cohort, secagg_active,
                       secagg_combine)
@@ -121,6 +135,14 @@ def build_round_step(loss_fn: Callable,
     codec = strat.codec
     apply_up = uplink_apply(codec) if codec is not None else None
     has_ef = codec is not None and codec.client_init is not None
+    # downlink broadcast codec: with a non-identity fl.downlink the server
+    # compresses the model delta against each slot's banked reference and the
+    # client starts the round from its reconstruction; identity (or a
+    # hand-built strategy, down_codec=None) broadcasts dense params — the
+    # pre-downlink op sequence exactly
+    down = strat.down_codec
+    dl_on = down is not None and down.name != "identity"
+    apply_down = downlink_apply(down) if dl_on else None
     # in-jit telemetry histograms (fl.telemetry): fixed-shape summaries over
     # the slot-order [C] arrays every path already stages, with static
     # config-derived edges (obs.hist cardinality contract).  "off" (the
@@ -146,7 +168,7 @@ def build_round_step(loss_fn: Callable,
     hist_edges = obs_hist.round_hist_edges(
         fl, with_staleness=fleet_active(fl),
         with_uplink=codec is not None and codec.name != "identity",
-        with_robust=robust_on, with_dp=dp_on,
+        with_robust=robust_on, with_dp=dp_on, with_downlink=dl_on,
     ) if tele_hist else {}
 
     def round_step(state: ServerState, batch, lr_mult=1.0):
@@ -188,8 +210,31 @@ def build_round_step(loss_fn: Callable,
         else:
             cstate0 = {}
 
+        # downlink broadcast: reconstruct each slot's round-start params from
+        # its banked reference ONCE, vmapped over the slot-order [C] stack,
+        # BEFORE the cohort executes — identical float ops in every layout.
+        # The reconstruction rides the cohort state under the "downlink" key:
+        # the untouched pass-through in one_client carries it to new_cs, and
+        # the masked bank commit below makes it the slot's next reference.
+        # cstate0 stays the GATHERED rows — invalid slots must revert to what
+        # they read (every padding slot aims at the scratch row, and their
+        # writes must agree), not to a per-slot reconstruction.
+        cstate_in = cstate0
+        if dl_on:
+            if down.seeded:
+                dkeys = downlink_round_keys(fl.seed, meta.client_id,
+                                            state.rnd, jnp)
+            else:
+                dkeys = jnp.zeros(meta.valid.shape, jnp.uint32)
+            params_hat = jax.vmap(apply_down, in_axes=(None, 0, 0))(
+                state.params, cstate0[DOWNLINK_STATE_KEY]["ref"], dkeys)
+            cstate_in = {**cstate0, DOWNLINK_STATE_KEY: {"ref": params_hat}}
+
         def client(data_i, mask_i, eta_i, cs_i):
-            return one_client(state.params, momentum, state.opt,
+            # with the downlink compressed, the client's round-start point is
+            # its own reconstruction (its update is measured from there too)
+            p_i = cs_i[DOWNLINK_STATE_KEY]["ref"] if dl_on else state.params
+            return one_client(p_i, momentum, state.opt,
                               data_i, mask_i, eta_i, cs_i)
 
         # per-client uplink stream keys (seed, client, round) — only codecs
@@ -255,10 +300,10 @@ def build_round_step(loss_fn: Callable,
                 # per-bucket [C_b, K_b] scans, reassembled to [C] slot order
                 # before any cross-client math — bitwise-identical aggregate
                 deltas, losses, new_cs = vmap_clients(client, batch, plan.eta,
-                                                      cstate0)
+                                                      cstate_in)
             else:
                 deltas, losses, new_cs = jax.vmap(client)(
-                    batch.data, batch.step_mask, plan.eta, cstate0)
+                    batch.data, batch.step_mask, plan.eta, cstate_in)
             if dp_on:
                 # client-side DP clipping of the shipped update (the exact
                 # sensitivity bound) — before attacks: adversaries are not
@@ -296,7 +341,7 @@ def build_round_step(loss_fn: Callable,
                 # per-bucket client scans stage stacked deltas, then the same
                 # coeff_i-weighted accumulation replays in slot order
                 deltas, losses, new_cs = scan_clients(client, batch, plan.eta,
-                                                      cstate0)
+                                                      cstate_in)
             elif ((apply_up is not None and codec.name != "identity")
                   or robust_on or dp_on or sa_on):
                 # compressed uplink / robustness / privacy planes: stage the
@@ -313,7 +358,7 @@ def build_round_step(loss_fn: Callable,
 
                 _, (deltas, losses, new_cs) = jax.lax.scan(
                     stage, None,
-                    (batch.data, batch.step_mask, plan.eta, cstate0))
+                    (batch.data, batch.step_mask, plan.eta, cstate_in))
 
             if deltas is not None:
                 if dp_on:
@@ -348,7 +393,7 @@ def build_round_step(loss_fn: Callable,
 
                 delta_agg, ys = jax.lax.scan(
                     body, acc0,
-                    (batch.data, batch.step_mask, plan.eta, coeff, cstate0)
+                    (batch.data, batch.step_mask, plan.eta, coeff, cstate_in)
                 )
                 if tele_hist:
                     losses, new_cs, slot_sq = ys
@@ -415,15 +460,30 @@ def build_round_step(loss_fn: Callable,
             ),
             "cohort": meta.valid.sum(),
         }
-        if codec is not None and codec.name != "identity":
+        up_on = codec is not None and codec.name != "identity"
+        if up_on:
             # bytes-on-wire accounting (static per client — every update is
             # model-shaped); identity adds no keys so the default metric tree
             # stays frozen
-            bits_pc = uplink_wire_bits(codec, state.params)
+            bits_pc = wire_bits_total(codec, state.params)
             metrics["uplink_mbytes"] = meta.valid.sum() * jnp.float32(
                 bits_pc / 8e6)
             metrics["uplink_compression"] = jnp.float32(
                 dense_bits(state.params) / bits_pc)
+        if dl_on:
+            # the broadcast's side of the ledger, same static accounting
+            dbits_pc = wire_bits_total(down, state.params)
+            metrics["downlink_mbytes"] = meta.valid.sum() * jnp.float32(
+                dbits_pc / 8e6)
+            metrics["downlink_compression"] = jnp.float32(
+                dense_bits(state.params) / dbits_pc)
+        if up_on or dl_on:
+            # both directions of the wire in one number; an identity (or
+            # absent) direction is charged its honest dense cost
+            ub = bits_pc if up_on else dense_bits(state.params)
+            db = dbits_pc if dl_on else dense_bits(state.params)
+            metrics["total_comm_mbytes"] = meta.valid.sum() * jnp.float32(
+                (ub + db) / 8e6)
         if fleet_active(fl):
             # fleet telemetry — keys exist only when the fleet plane is on,
             # so every pre-existing configuration's metric tree stays frozen.
@@ -466,8 +526,12 @@ def build_round_step(loss_fn: Callable,
                     weights=meta.valid)
             if "hist_uplink_mbytes" in hist_edges:
                 metrics["hist_uplink_mbytes"] = obs_hist.fixed_histogram(
-                    uplink_mbytes_per_slot(codec, state.params, meta.valid),
+                    mbytes_per_slot(codec, state.params, meta.valid),
                     hist_edges["hist_uplink_mbytes"], weights=meta.valid)
+            if "hist_downlink_mbytes" in hist_edges:
+                metrics["hist_downlink_mbytes"] = obs_hist.fixed_histogram(
+                    mbytes_per_slot(down, state.params, meta.valid),
+                    hist_edges["hist_downlink_mbytes"], weights=meta.valid)
             if "hist_suspicion" in hist_edges:
                 metrics["hist_suspicion"] = obs_hist.fixed_histogram(
                     rb_info["suspicion"], hist_edges["hist_suspicion"],

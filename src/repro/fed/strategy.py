@@ -60,7 +60,7 @@ from ..data.federated import BucketedBatch
 from ..obs import validate_telemetry_config
 from ..utils.pytree import tree_copy, tree_zeros_like
 from .bucketing import scan_clients, vmap_clients
-from .comm import UPLINK_STATE_KEY, build_codec
+from .comm import DOWNLINK_STATE_KEY, UPLINK_STATE_KEY, build_codec
 from .fleet import (FLEET_STATE_KEY, fleet_active, fleet_client_state,
                     staleness_weights, validate_fleet_config)
 from .privacy import privacy_active, validate_privacy_config
@@ -566,6 +566,11 @@ class BoundStrategy(NamedTuple):
     #                                      is active; None (hand-built
     #                                      strategies) falls back to
     #                                      weighted_sum there.
+    down_codec: Any = None             # bound fed.comm.Codec for the downlink
+    #                                      broadcast (None for hand-built
+    #                                      BoundStrategies: the round driver
+    #                                      then broadcasts dense params, the
+    #                                      pre-downlink behavior exactly)
 
 
 def weighted_sum(deltas, coeff: jnp.ndarray):
@@ -696,22 +701,42 @@ def bind_strategy(strategy: "FedStrategy | BoundStrategy | None", fl: FLConfig,
             + ", ".join(sorted(n for n, o in SERVER_OPTS.items()
                                if all(k in o.provides for k in missing)))
             + ") or a local update that does not need them.")
-    # uplink codec: resolved and validated here like the local rules (unknown
-    # fl.uplink / bad knob values fail at bind time, not at the first round)
-    codec = build_codec(fl)
+    # comm plane: both directions resolved and validated here like the local
+    # rules (unknown fl.uplink / fl.downlink, direction-incapable codecs and
+    # bad knob values fail at bind time, not at the first round)
+    codec = build_codec(fl, "uplink")
+    down_codec = build_codec(fl, "downlink")
     if UPLINK_STATE_KEY in state_names:
         raise ValueError(
             f"local update {local_update!r} has a stateful client transform "
             f"named {UPLINK_STATE_KEY!r} — that bank key is reserved for the "
             f"uplink codec's error-feedback residual; rename the transform.")
+    if DOWNLINK_STATE_KEY in state_names:
+        raise ValueError(
+            f"local update {local_update!r} has a stateful client transform "
+            f"named {DOWNLINK_STATE_KEY!r} — that bank key is reserved for "
+            f"the downlink broadcast's client-held reference; rename the "
+            f"transform.")
     if codec.client_init is not None:
         chain_state = client_state
 
         def client_state(params):
-            # the codec's EF residual shares the [N+1, ...] bank with the
-            # chain's stateful transforms under the reserved "uplink" key
+            # the codec's EF residual / DIANA shift shares the [N+1, ...]
+            # bank with the chain's stateful transforms under the reserved
+            # "uplink" key
             d = dict(chain_state(params)) if chain_state is not None else {}
             d[UPLINK_STATE_KEY] = codec.client_init(params)
+            return d
+
+    if down_codec.name != "identity":
+        pre_down_state = client_state
+
+        def client_state(params):
+            # the broadcast reference every client holds — seeded with the
+            # init params (server and client agree by construction, and a
+            # client skipped by sampling just keeps a stale-but-synced ref)
+            d = dict(pre_down_state(params)) if pre_down_state is not None else {}
+            d[DOWNLINK_STATE_KEY] = {"ref": params}
             return d
 
     buffered = fl.server_mode == "buffered"
@@ -789,6 +814,7 @@ def bind_strategy(strategy: "FedStrategy | BoundStrategy | None", fl: FLConfig,
         client_state=client_state,
         codec=codec,
         robust_aggregate=robust_aggregate,
+        down_codec=down_codec,
     )
 
 

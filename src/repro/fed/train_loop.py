@@ -172,6 +172,12 @@ def train(
                     # privacy budget spent through THIS round (r+1 completed)
                     row["dp_epsilon"] = acct.epsilon(r + 1)
                     registry.gauge("dp_epsilon").set(row["dp_epsilon"])
+                if "total_comm_mbytes" in row:
+                    # cumulative bytes-on-wire, both directions (key exists
+                    # only when a direction compresses) — the run-total the
+                    # comm-efficiency plots divide loss curves by
+                    registry.counter("total_comm_mbytes").inc(
+                        row["total_comm_mbytes"])
                 if "rounds_rejected" in row:
                     # robustness-plane run totals (keys exist only while the
                     # plane is on): quarantines and rejected rounds are rare

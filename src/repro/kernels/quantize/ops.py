@@ -1,4 +1,7 @@
-"""Backend dispatch for the uplink quantization pack/unpack hot path.
+"""Backend dispatch for the comm-plane quantization pack/unpack hot path
+(both wire directions: the qsgd uplink codec and the reference-compressed
+downlink broadcast share this path, so the wire format always matches
+whichever end decodes it — ``fl.uplink_backend`` selects for both).
 
 ``quantize_pack`` / ``unpack_dequantize`` hide the choice between the
 pure-jnp oracle (``ref`` — always available, fuses into the surrounding jit)

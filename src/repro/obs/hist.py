@@ -101,7 +101,8 @@ def tree_sqnorm(tree) -> jnp.ndarray:
 
 
 def round_hist_edges(fl, *, with_staleness: bool, with_uplink: bool,
-                     with_robust: bool = False, with_dp: bool = False) -> dict:
+                     with_robust: bool = False, with_dp: bool = False,
+                     with_downlink: bool = False) -> dict:
     """The static edge table for one configuration's round histograms.
 
     One definition shared by the jitted emitter (``fed.rounds``) and the
@@ -117,6 +118,9 @@ def round_hist_edges(fl, *, with_staleness: bool, with_uplink: bool,
         edges["hist_staleness"] = pow2_edges(bins)
     if with_uplink:
         edges["hist_uplink_mbytes"] = log_edges(1e-6, 1e4, bins)
+    if with_downlink:
+        # the broadcast direction's per-slot wire cost (fed.comm downlink)
+        edges["hist_downlink_mbytes"] = log_edges(1e-6, 1e4, bins)
     if with_robust:
         # per-client update-norm / cohort-median-norm ratio (fed.robust):
         # honest mass sits near 1, scaled attacks / diverged clients in the

@@ -95,10 +95,13 @@ def save_server_state(path: str, state, metadata: dict[str, Any] | None = None,
                       *, fl=None) -> None:
     """Save a full ``repro.fed.ServerState`` (resumable, bitwise).
 
-    The client state bank (``state.clients``, stateful local chains) rides
-    along when present; the JSON sidecar records the format/version and
+    The client state bank (``state.clients``) rides along when present —
+    stateful local chains, the uplink codec's error-feedback residuals and
+    DIANA shifts (key "uplink"), and the downlink broadcast references
+    (key "downlink") alike; the JSON sidecar records the format/version and
     whether a bank was saved, so a mismatched load fails loudly instead of
-    silently resuming without client state.
+    silently resuming without client state.  Banks load bitwise, so a
+    resumed compressed run replays exactly (references never desync).
 
     Passing ``fl=`` of a DP run (``fl.dp="on"``) additionally persists the
     ``dp_accounting`` record — noise multiplier, sampling rate, delta, and

@@ -74,6 +74,12 @@ DOMAIN_TAGS: dict[str, int] = {
 # trivial).
 # ---------------------------------------------------------------------------
 
+# comm (fed/comm/codecs.py): the downlink broadcast draws off the SAME
+# TAG_COMM chain as the uplink codec keys but with this subtag folded in, so
+# a round where both directions compress never correlates the server's
+# stochastic rounding with the client's.
+SUB_COMM_DOWNLINK = 0xD0DEC
+
 # fleet (fed/fleet/model.py)
 SUB_FLEET_TIER = 0x71E2
 SUB_FLEET_LATENCY = 0x1A7E
@@ -89,6 +95,9 @@ SUB_DP_NOISE = 0xDB015E     # server-side Gaussian noise, per (seed, round)
 SUB_SECAGG_MASK = 0x3A5CED  # pairwise antisymmetric masks, per (seed, pair, round)
 
 SUBTAGS: dict[str, dict[str, int]] = {
+    "comm": {
+        "downlink": SUB_COMM_DOWNLINK,
+    },
     "fleet": {
         "tier": SUB_FLEET_TIER,
         "latency": SUB_FLEET_LATENCY,
@@ -108,6 +117,7 @@ SUBTAGS: dict[str, dict[str, int]] = {
 __all__ = [
     "DOMAIN_TAGS", "SUBTAGS",
     "TAG_RR", "TAG_WR", "TAG_COMM", "TAG_FLEET", "TAG_ROBUST", "TAG_PRIVACY",
+    "SUB_COMM_DOWNLINK",
     "SUB_FLEET_TIER", "SUB_FLEET_LATENCY", "SUB_FLEET_DROPOUT",
     "SUB_FLEET_STRAGGLER", "SUB_ROBUST_ADVERSARY", "SUB_ROBUST_NOISE",
     "SUB_DP_NOISE", "SUB_SECAGG_MASK",

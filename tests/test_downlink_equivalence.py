@@ -1,0 +1,434 @@
+"""Downlink-broadcast plane equivalence + DIANA shifted-uplink contracts.
+
+* ``downlink='identity'`` (the default) is the frozen bitwise contract: the
+  round driver with the identity downlink must reproduce the pre-downlink
+  driver (a bound strategy with ``down_codec=None`` — exactly the path every
+  run took before the broadcast could compress) — identical jaxpr, identical
+  ServerState and metric tree — across presets x cohort modes x
+  {padded, bucketed} layouts x uplink codecs x the buffered fleet.
+* An active downlink holds the layout/engine/prefetch/resume contract
+  instead: the reconstruction runs vmapped on the slot-order [C] stack
+  before the cohort in every layout, its randomness is
+  (seed, client, round)-stateless (the downlink subtag off the rr_perm
+  chain), and the reference bank rides ServerState — so padded == bucketed,
+  legacy == engine-with-prefetch, and a mid-training checkpoint resume all
+  replay bitwise.  Same story for the DIANA shift bank on the uplink.
+
+The per-push CI shard runs a reduced preset grid; the nightly workflow sets
+``FEDSHUFFLE_FULL_GRID=1`` to sweep every registered preset.
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import obs
+from repro.configs.base import FLConfig
+from repro.core.algorithms import PRESETS
+from repro.data.federated import FederatedPipeline, Population
+from repro.data.tasks import DuplicatedQuadraticTask
+from repro.fed.cohort import CohortEngine
+from repro.fed.comm import (CODECS, build_codec, downlink_apply,
+                            downlink_round_keys, round_keys, uplink_apply)
+from repro.fed.losses import make_quadratic_loss
+from repro.fed.rounds import as_device_batch, build_round_step, jit_round_step
+from repro.fed.strategy import bind_strategy, strategy_for
+from repro.utils.checkpoint import load_server_state, save_server_state
+
+TASK = DuplicatedQuadraticTask(copies=(1, 2, 3))
+LOSS = make_quadratic_loss(3)
+N_ROUNDS = 3
+P0 = {"x": jnp.array([0.3, -0.1, 0.2], jnp.float32)}
+
+GRID_PRESETS = (sorted(PRESETS) if os.environ.get("FEDSHUFFLE_FULL_GRID")
+                else ["fedshuffle", "fednova", "fedavg_min"])
+
+BUFFERED = dict(fleet="zipf_latency", server_mode="buffered", buffer_size=2,
+                staleness="poly", staleness_power=0.5,
+                faults="dropout", drop_prob=0.2)
+
+
+def _fl(preset="fedshuffle", mode="vmapped", **kw):
+    kw.setdefault("uplink_chunk", 8)
+    kw.setdefault("uplink_bits", 4)
+    kw.setdefault("uplink_frac", 0.5)
+    kw.setdefault("downlink_chunk", 8)
+    kw.setdefault("downlink_bits", 4)
+    kw.setdefault("downlink_frac", 0.5)
+    kw.setdefault("num_clients", 3)
+    kw.setdefault("cohort_size", 2)
+    return FLConfig(sampling="uniform", epochs=2,
+                    local_batch=1, algorithm=preset, local_lr=0.05,
+                    server_lr=0.8, mvr_a=0.2, cohort_mode=mode,
+                    drop_last_steps=1, seed=11, buckets=2, **kw)
+
+
+def _assert_tree_equal(a, b, what):
+    assert jax.tree.structure(a) == jax.tree.structure(b), what
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y), err_msg=what)
+
+
+def _strat(fl, pre_downlink=False):
+    strat = bind_strategy(strategy_for(fl), fl, LOSS, num_clients=fl.num_clients)
+    if pre_downlink:
+        # the pre-downlink round driver exactly: a hand-adjusted strategy
+        # whose down_codec is absent (how every BoundStrategy looked before
+        # the broadcast could compress)
+        strat = strat._replace(down_codec=None)
+    return strat
+
+
+def _run_legacy(fl, rounds=N_ROUNDS, pre_downlink=False):
+    pipe = FederatedPipeline(TASK, Population.build(fl, sizes=TASK.sizes()), fl)
+    strat = _strat(fl, pre_downlink)
+    step = build_round_step(LOSS, strat, fl, num_clients=fl.num_clients)
+    state = strat.init(P0)
+    for r in range(rounds):
+        state, mets = step(state, as_device_batch(pipe.round_batch(r)))
+    return state, mets
+
+
+def _run_engine(fl, rounds=N_ROUNDS, prefetch=2):
+    pop = Population.build(fl, sizes=TASK.sizes())
+    eng = CohortEngine.build(TASK, pop, fl)
+    strat = _strat(fl)
+    step = build_round_step(LOSS, strat, fl, num_clients=fl.num_clients,
+                            plane=eng.plane)
+    state = strat.init(P0)
+    with eng.round_plans(rounds, prefetch=prefetch) as it:
+        for r, plan in it:
+            state, mets = step(state, plan)
+    return state, mets
+
+
+# -- downlink='identity': the frozen bitwise contract ------------------------
+
+
+@pytest.mark.parametrize("uplink", ["identity", "qsgd", "topk"])
+@pytest.mark.parametrize("mode", ["vmapped", "sequential"])
+def test_downlink_identity_matches_pre_downlink_bitwise(uplink, mode):
+    """identity downlink vs the pre-downlink driver (down_codec=None): same
+    ServerState, same metric tree — zero keys leak — for every preset in the
+    grid, both execution layouts."""
+    for preset in GRID_PRESETS:
+        for exec_mode in ("padded", "bucketed"):
+            fl = _fl(preset, mode, uplink=uplink, exec_mode=exec_mode)
+            assert fl.downlink == "identity"
+            s_ref, m_ref = _run_legacy(fl, pre_downlink=True)
+            s_new, m_new = _run_legacy(fl)
+            tag = f"{preset}/{uplink}/{mode}/{exec_mode}"
+            assert set(m_new) == set(m_ref), tag
+            _assert_tree_equal(s_ref.params, s_new.params, f"{tag}: params")
+            _assert_tree_equal(s_ref.opt, s_new.opt, f"{tag}: opt")
+            _assert_tree_equal(m_ref, m_new, f"{tag}: metrics")
+            if s_ref.clients is None:
+                assert s_new.clients is None, tag
+            else:
+                _assert_tree_equal(s_ref.clients, s_new.clients, f"{tag}: bank")
+
+
+@pytest.mark.parametrize("mode", ["vmapped", "sequential"])
+def test_downlink_identity_jaxpr_identical(mode):
+    """The stronger freeze: with the identity downlink the traced program
+    is the pre-downlink driver's — not one op differs."""
+    fl = _fl("fedshuffle", mode, uplink="qsgd")
+    pipe = FederatedPipeline(TASK, Population.build(fl, sizes=TASK.sizes()), fl)
+    batch = as_device_batch(pipe.round_batch(0))
+    strat_new, strat_ref = _strat(fl), _strat(fl, pre_downlink=True)
+    step_new = build_round_step(LOSS, strat_new, fl, num_clients=fl.num_clients)
+    step_ref = build_round_step(LOSS, strat_ref, fl, num_clients=fl.num_clients)
+    state = strat_new.init(P0)
+    jx_new = jax.make_jaxpr(step_new)(state, batch)
+    jx_ref = jax.make_jaxpr(step_ref)(state, batch)
+    assert str(jx_new) == str(jx_ref), f"{mode}: jaxpr drift"
+
+
+def test_downlink_identity_buffered_fleet_frozen():
+    """The buffered-async server (fleet bank in play) under the identity
+    downlink must match the pre-downlink driver bitwise, banks included."""
+    fl = _fl("fedshuffle", "vmapped", engine="cohort", **BUFFERED)
+    s_ref, m_ref = _run_legacy(fl, rounds=4, pre_downlink=True)
+    s_new, m_new = _run_legacy(fl, rounds=4)
+    assert set(m_new) == set(m_ref)
+    _assert_tree_equal(s_ref.params, s_new.params, "buffered: params")
+    _assert_tree_equal(s_ref.clients, s_new.clients, "buffered: fleet bank")
+    _assert_tree_equal(m_ref, m_new, "buffered: metrics")
+
+
+# -- active downlink: layout / engine / prefetch invariance -------------------
+
+
+@pytest.mark.parametrize("downlink,uplink", [
+    ("qsgd", "identity"), ("randk", "identity"),
+    ("qsgd", "qsgd"), ("randk", "diana_qsgd"),
+])
+@pytest.mark.parametrize("mode", ["vmapped", "sequential"])
+def test_active_downlink_padded_matches_bucketed_bitwise(downlink, uplink, mode):
+    """The broadcast reconstruction runs on the slot-order [C] stack before
+    the cohort in every layout — padded and bucketed rounds must agree
+    bitwise, reference (and shift/EF) banks included."""
+    sp, mp = _run_legacy(_fl("fedshuffle", mode, uplink=uplink,
+                             downlink=downlink, exec_mode="padded"))
+    sb, mb = _run_legacy(_fl("fedshuffle", mode, uplink=uplink,
+                             downlink=downlink, exec_mode="bucketed"))
+    tag = f"{downlink}/{uplink}/{mode}"
+    assert "downlink" in sp.clients, tag
+    _assert_tree_equal(sp.params, sb.params, f"{tag}: params")
+    _assert_tree_equal(sp.opt, sb.opt, f"{tag}: opt")
+    _assert_tree_equal(sp.clients, sb.clients, f"{tag}: banks")
+    _assert_tree_equal(mp, mb, f"{tag}: metrics")
+
+
+@pytest.mark.parametrize("downlink,uplink", [
+    ("qsgd", "identity"), ("qsgd", "diana_topk"), ("randk", "qsgd"),
+])
+@pytest.mark.parametrize("mode", ["vmapped", "sequential"])
+def test_active_downlink_engine_matches_legacy_bitwise(downlink, uplink, mode):
+    """Legacy host path vs cohort engine (prefetch ON): the downlink keys are
+    (seed, client, round)-stateless and the reference bank rides ServerState
+    — where the round is produced cannot matter."""
+    fl = _fl("fedshuffle", mode, uplink=uplink, downlink=downlink,
+             engine="cohort")
+    ls, lm = _run_legacy(fl)
+    es, em = _run_engine(fl)
+    tag = f"{downlink}/{uplink}/{mode}"
+    _assert_tree_equal(ls.params, es.params, f"{tag}: params")
+    _assert_tree_equal(ls.opt, es.opt, f"{tag}: opt")
+    _assert_tree_equal(ls.clients, es.clients, f"{tag}: banks")
+    _assert_tree_equal(lm, em, f"{tag}: metrics")
+
+
+@pytest.mark.parametrize("uplink", ["diana_qsgd", "diana_topk"])
+def test_diana_bank_contents_and_layout_invariance(uplink):
+    """DIANA keeps the shift h (plus the EF residual e for diana_topk) under
+    the 'uplink' bank key; the shift trajectory must be layout-invariant and
+    must actually move (the shift learns)."""
+    sp, _ = _run_legacy(_fl("fedshuffle", "vmapped", uplink=uplink,
+                            exec_mode="padded"))
+    sb, _ = _run_legacy(_fl("fedshuffle", "vmapped", uplink=uplink,
+                            exec_mode="bucketed"))
+    want = {"h"} if uplink == "diana_qsgd" else {"e", "h"}
+    assert set(sp.clients["uplink"]) == want, uplink
+    _assert_tree_equal(sp.clients, sb.clients, f"{uplink}: banks")
+    h = np.asarray(sp.clients["uplink"]["h"]["x"])
+    assert np.abs(h[:-1]).max() > 0.0, f"{uplink}: shift never moved"
+    np.testing.assert_array_equal(h[-1], 0.0)        # scratch row untouched
+
+
+def test_downlink_reference_tracks_reconstruction():
+    """After a round, a sampled client's bank reference equals the
+    reconstruction the server can compute for it from the SAME pre-round
+    reference and key — the server/client agreement the scheme rests on —
+    and unsampled clients' references stay bitwise stale."""
+    fl = _fl("fedshuffle", "vmapped", downlink="qsgd")
+    pipe = FederatedPipeline(TASK, Population.build(fl, sizes=TASK.sizes()), fl)
+    strat = _strat(fl)
+    step = build_round_step(LOSS, strat, fl, num_clients=fl.num_clients)
+    state0 = strat.init(P0)
+    batch = as_device_batch(pipe.round_batch(0))
+    state1, _ = step(state0, batch)
+    down = build_codec(fl, "downlink")
+    apply_down = downlink_apply(down)
+    cid = np.asarray(batch.meta.client_id).astype(np.int64)
+    valid = np.asarray(batch.meta.valid) > 0
+    sampled = set(cid[valid].tolist())
+    keys = downlink_round_keys(fl.seed, jnp.asarray(cid, jnp.int32),
+                               state0.rnd, jnp)
+    for slot, c in enumerate(cid.tolist()):
+        if not valid[slot]:
+            continue
+        want = apply_down(
+            state0.params,
+            jax.tree.map(lambda b: b[c], state0.clients["downlink"]["ref"]),
+            keys[slot])
+        np.testing.assert_array_equal(
+            np.asarray(state1.clients["downlink"]["ref"]["x"][c]),
+            np.asarray(want["x"]), err_msg=f"client {c}: ref != reconstruction")
+    for c in range(fl.num_clients):
+        if c not in sampled:
+            np.testing.assert_array_equal(
+                np.asarray(state1.clients["downlink"]["ref"]["x"][c]),
+                np.asarray(state0.clients["downlink"]["ref"]["x"][c]),
+                err_msg=f"client {c}: stale ref changed")
+
+
+def test_single_compilation_both_directions():
+    """Rotating cohorts and advancing rounds with BOTH directions compressed
+    (+ DIANA state) must reuse ONE compiled executable."""
+    fl = _fl("fedshuffle", "vmapped", uplink="diana_qsgd", downlink="qsgd",
+             engine="cohort", rr_backend="device_ref")
+    pop = Population.build(fl, sizes=TASK.sizes())
+    eng = CohortEngine.build(TASK, pop, fl)
+    strat = _strat(fl)
+    step = jit_round_step(build_round_step(LOSS, strat, fl,
+                                           num_clients=fl.num_clients,
+                                           plane=eng.plane), donate=False)
+    state = strat.init(P0)
+    with obs.compile_guard(step):
+        for r in range(4):
+            state, _ = step(state, eng.device_plan(r))
+
+
+def test_bidirectional_metrics_surface():
+    fl = _fl("fedshuffle", "vmapped", uplink="qsgd", downlink="qsgd")
+    _, mets = _run_legacy(fl)
+    for key in ("uplink_mbytes", "uplink_compression", "downlink_mbytes",
+                "downlink_compression", "total_comm_mbytes"):
+        assert key in mets, key
+    assert float(mets["downlink_compression"]) > 1.0
+    # total is exactly the two directions' sum (both compressed here), and
+    # beats the dense bidirectional cost.  The >= 4x total-bytes bar lives in
+    # the bench (realistic dims — a 3-dim toy is one qsgd chunk + its scale).
+    total = float(mets["total_comm_mbytes"])
+    np.testing.assert_allclose(
+        total, float(mets["uplink_mbytes"]) + float(mets["downlink_mbytes"]),
+        rtol=1e-6)
+    dense_total = 2 * float(mets["uplink_mbytes"]) * float(mets["uplink_compression"])
+    assert dense_total / total > 1.0
+
+
+# -- reference + shift banks: bitwise checkpoint resume -----------------------
+
+
+def _assert_state_equal(a, b, what):
+    for x, y in zip(jax.tree.leaves(a._asdict()), jax.tree.leaves(b._asdict())):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y), err_msg=what)
+
+
+@pytest.mark.parametrize("engine", ["legacy", "cohort"])
+def test_reference_and_shift_bank_resume_bitwise(tmp_path, engine):
+    """save_server_state at round 2, resume via train(state=, start_round=2):
+    the downlink reference AND the DIANA shift banks must ride the
+    checkpoint, and the resumed trajectory must equal the unbroken one
+    bitwise (downlink keys are round-absolute, so resume replays them)."""
+    from repro.fed.train_loop import train
+
+    fl = _fl("fedshuffle", "vmapped", uplink="diana_qsgd", downlink="qsgd",
+             engine=engine if engine == "cohort" else "legacy")
+
+    def pipe():
+        return FederatedPipeline(TASK, Population.build(fl, sizes=TASK.sizes()), fl)
+
+    full = train(LOSS, P0, pipe(), fl, 4, log_every=0)
+    assert set(full.state.clients) == {"uplink", "downlink"}
+
+    half = train(LOSS, P0, pipe(), fl, 2, log_every=0)
+    path = os.path.join(tmp_path, f"dl_{engine}.npz")
+    save_server_state(path, half.state)
+    strat = _strat(fl)
+    restored = load_server_state(path, strat.init(P0))
+    _assert_state_equal(half.state, restored, f"{engine}: restored state")
+    resumed = train(LOSS, P0, pipe(), fl, 4, log_every=0,
+                    state=restored, start_round=2)
+    _assert_state_equal(full.state, resumed.state, f"{engine}: resumed run")
+
+
+# -- hypothesis properties: downlink round-trip + DIANA shift update ----------
+
+
+def _params(seed=0):
+    r = np.random.default_rng(seed)
+    return {"a": jnp.asarray(r.normal(size=37).astype(np.float32)),
+            "b": jnp.asarray(r.normal(size=(4, 5)).astype(np.float32))}
+
+
+def _dkey(seed=0, client=1, rnd=2):
+    return downlink_round_keys(seed, jnp.asarray([client], jnp.int32),
+                               jnp.int32(rnd), jnp)[0]
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), bits=st.sampled_from([2, 4, 8]))
+def test_downlink_qsgd_reconstruction_error_bound(seed, bits):
+    """params_hat = ref + decode(encode(params - ref)) obeys the per-chunk
+    qsgd error bound on the DELTA — the reconstruction error shrinks with
+    the reference's distance to the params, not their magnitude."""
+    fl = FLConfig(downlink="qsgd", downlink_bits=bits, downlink_chunk=16)
+    apply_down = downlink_apply(build_codec(fl, "downlink"))
+    params, ref = _params(seed), _params(seed + 1)
+    hat = apply_down(params, ref, _dkey(seed))
+    L = 2 ** (bits - 1) - 1
+    for p, r0, h in zip(jax.tree.leaves(params), jax.tree.leaves(ref),
+                        jax.tree.leaves(hat)):
+        d = (np.asarray(p, np.float32) - np.asarray(r0, np.float32)).reshape(-1)
+        err = np.abs(np.asarray(h).reshape(-1) - np.asarray(p).reshape(-1))
+        for c0 in range(0, d.size, 16):
+            seg = np.abs(d[c0:c0 + 16])
+            bound = seg.max() / L * (1 + 1e-5) + 1e-5
+            assert (err[c0:c0 + 16] <= bound).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_downlink_identity_reconstructs_exactly_and_streams_diverge(seed):
+    """identity reconstructs params exactly from ANY reference, and the
+    downlink key stream never equals the uplink stream for the same
+    (seed, client, round) — the subtag separation."""
+    fl = FLConfig()
+    apply_down = downlink_apply(build_codec(fl, "downlink"))
+    params, ref = _params(seed), _params(seed + 1)
+    hat = apply_down(params, ref, _dkey(seed))
+    for p, h in zip(jax.tree.leaves(params), jax.tree.leaves(hat)):
+        np.testing.assert_array_equal(np.asarray(p), np.asarray(h))
+    cid = jnp.asarray([seed % 97], jnp.int32)
+    up = round_keys(seed, cid, jnp.int32(3), jnp)[0]
+    dn = downlink_round_keys(seed, cid, jnp.int32(3), jnp)[0]
+    assert int(up) != int(dn)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       alpha=st.sampled_from([0.1, 0.5, 1.0]))
+def test_diana_shift_update_recurrence(seed, alpha):
+    """One DIANA application satisfies the paper's recurrence exactly:
+    c = C(delta - h), dhat = h + c, h' = h + alpha * c — so
+    (dhat - h) == (h' - h) / alpha bitwise-compatibly, and with EF the
+    conservation dhat + e' == delta + e - h + h == src holds."""
+    fl = FLConfig(uplink="diana_qsgd", uplink_bits=8, uplink_chunk=16,
+                  shift_alpha=alpha)
+    codec = CODECS["diana_qsgd"](fl)
+    delta = _params(seed)
+    st0 = codec.client_init(delta)
+    # a non-trivial shift: run one application from zeros first
+    key1 = _dkey(seed, client=5, rnd=1)
+    _, st1 = uplink_apply(codec)(delta, st0, key1)
+    key2 = _dkey(seed, client=5, rnd=2)
+    dhat, st2 = uplink_apply(codec)(delta, st1, key2)
+    for h0, h1, dh in zip(jax.tree.leaves(st1["h"]), jax.tree.leaves(st2["h"]),
+                          jax.tree.leaves(dhat)):
+        c = np.asarray(dh, np.float32) - np.asarray(h0, np.float32)  # = C(d-h)
+        np.testing.assert_allclose(np.asarray(h1),
+                                   np.asarray(h0) + alpha * c,
+                                   rtol=1e-6, atol=1e-7)
+    # the zero-shift first application reduces to the plain codec
+    plain = CODECS["qsgd"](dataclasses.replace(fl, uplink="qsgd"))
+    dhat0, _ = uplink_apply(codec)(delta, st0, key1)
+    dhatp, _ = uplink_apply(plain)(delta, {}, key1)
+    for a, b in zip(jax.tree.leaves(dhat0), jax.tree.leaves(dhatp)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_diana_topk_ef_conservation(seed):
+    """diana_topk composes EF inside the shift: dhat + e' == delta + e (the
+    shifted compression drops mass, the residual keeps the books exact)."""
+    fl = FLConfig(uplink="diana_topk", uplink_frac=0.25, shift_alpha=0.5)
+    codec = CODECS["diana_topk"](fl)
+    delta = _params(seed)
+    st0 = codec.client_init(delta)
+    st0 = {**st0, "e": jax.tree.map(lambda t: 0.1 * jnp.ones_like(t),
+                                    delta)}
+    dhat, st1 = uplink_apply(codec)(delta, st0, _dkey(seed))
+    for d, e, h, e2 in zip(jax.tree.leaves(delta), jax.tree.leaves(st0["e"]),
+                           jax.tree.leaves(dhat), jax.tree.leaves(st1["e"])):
+        np.testing.assert_allclose(
+            np.asarray(h) + np.asarray(e2),
+            np.asarray(d, np.float32) + np.asarray(e, np.float32),
+            rtol=1e-6, atol=1e-7)

@@ -138,7 +138,8 @@ def test_telemetry_off_frozen_under_compression(uplink, mode):
     s_full, m_full = _run_legacy(dataclasses.replace(fl, telemetry="full"))
     tag = f"{uplink}/{mode}"
     scalars, hists = _split(m_full)
-    assert set(m_off) == BASE_KEYS | {"uplink_mbytes", "uplink_compression"}, tag
+    assert set(m_off) == BASE_KEYS | {"uplink_mbytes", "uplink_compression",
+                                      "total_comm_mbytes"}, tag
     assert "hist_uplink_mbytes" in hists, tag
     _assert_tree_equal(s_off.params, s_full.params, f"{tag}: params")
     _assert_tree_equal(s_off.opt, s_full.opt, f"{tag}: opt")
